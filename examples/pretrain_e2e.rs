@@ -1,0 +1,97 @@
+//! End-to-end pretraining driver (DESIGN.md's required E2E validation):
+//! trains the largest CPU-feasible config for a few hundred steps with
+//! the full SALAAD pipeline, logs the loss curve and structural
+//! evolution, evaluates PPL across three HPA budgets, and runs the
+//! downstream probe suite. The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//!   cargo run --release --offline --example pretrain_e2e -- \
+//!       [scale] [steps]
+//!
+//! Defaults: scale `mini` (3.05M params — the paper's workflow at 1/100
+//! scale; pass `small` for the 11.2M variant), 300 steps.
+
+use anyhow::Result;
+
+use salaad::config::{SalaadConfig, TrainConfig};
+use salaad::coordinator::{Method, Trainer};
+use salaad::data::BatchLoader;
+use salaad::eval::{eval_ppl, eval_suite};
+use salaad::runtime::Runtime;
+use salaad::slr::hpa;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale = args.first().map(|s| s.as_str()).unwrap_or("mini");
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let rt = Runtime::from_env()?;
+    let cfg = rt.model_config(scale)?;
+    eprintln!("=== end-to-end SALAAD pretraining: {scale} \
+               ({:.2}M params), {steps} steps ===",
+              cfg.n_params() as f64 / 1e6);
+
+    let tcfg = TrainConfig { steps, eval_every: (steps / 4).max(1),
+                             log_every: 20, ..Default::default() };
+    let scfg = SalaadConfig { k_steps: 5, delta_alpha: 0.15,
+                              delta_beta: 0.03, ..Default::default() };
+    let mut tr = Trainer::new(&rt, cfg.clone(), Method::Salaad, tcfg,
+                              scfg)?;
+    tr.verbose = true;
+    let t0 = std::time::Instant::now();
+    tr.run()?;
+    let train_secs = t0.elapsed().as_secs_f64();
+
+    // Loss curve (sampled).
+    println!("\n== loss curve (step, loss) ==");
+    let n = tr.history.losses.len();
+    for i in (0..n).step_by((n / 15).max(1)) {
+        println!("  {:>5}  {:.4}", tr.history.steps[i],
+                 tr.history.losses[i]);
+    }
+    println!("== eval PPL during training ==");
+    for (s, p) in &tr.history.evals {
+        println!("  {s:>5}  {p:.2}");
+    }
+    println!("== structural evolution (δ̄ per ADMM phase, sampled) ==");
+    let phases = &tr.history.phases;
+    for i in (0..phases.len()).step_by((phases.len() / 10).max(1)) {
+        println!("  step {:>5}  δ̄ {:.4}", phases[i].step,
+                 phases[i].avg_recon);
+    }
+
+    // Elastic deployment sweep.
+    let evals = BatchLoader::eval_set(cfg.vocab, cfg.batch, cfg.seq_len,
+                                      0, 6);
+    let ppl_x = eval_ppl(&rt, &cfg, &tr.params, &evals)?;
+    let ppl_ls = eval_ppl(&rt, &cfg, &tr.surrogate_params(), &evals)?;
+    println!("\n== deployment variants ==");
+    println!("  X     : PPL {ppl_x:.2}  params {}",
+             tr.dense_param_count());
+    println!("  L+S   : PPL {ppl_ls:.2}  params {}",
+             tr.surrogate_param_count());
+    let pool = hpa::plan(&tr.blocks, 0.7, 0)?;
+    let removable = pool.c_l + pool.c_s;
+    for frac in [0.25, 0.5, 0.7] {
+        let plan = hpa::plan(&tr.blocks, 0.7,
+                             (removable as f64 * frac) as usize)?;
+        let (trunc, _) = hpa::apply(&tr.blocks, &plan);
+        let ppl = eval_ppl(&rt, &cfg, &tr.params_with_blocks(&trunc),
+                           &evals)?;
+        println!("  HPA {:.0}%: PPL {ppl:.2}  params {}", frac * 100.0,
+                 tr.surrogate_count_for(&trunc));
+    }
+
+    // Downstream probes on the surrogate.
+    println!("\n== zero-shot probe suite (surrogate L+S) ==");
+    for s in eval_suite(&rt, &cfg, &tr.surrogate_params(), 15, 0)? {
+        println!("  {:>10}: {:.1}%", s.task, s.accuracy * 100.0);
+    }
+
+    println!("\n== timing ==");
+    println!("{}", tr.timer.report());
+    println!("total training wall-clock: {train_secs:.1}s \
+              ({:.3}s/step)", train_secs / steps as f64);
+    println!("\npretrain_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: train a tiny SALAAD model, inspect the learned SLR
+//! structure, compress it to a budget with HPA, and compare perplexity.
+//!
+//! Run (after `make artifacts && cargo build --release`):
+//!   cargo run --release --offline --example quickstart
+
+use anyhow::Result;
+
+use salaad::config::{SalaadConfig, TrainConfig};
+use salaad::coordinator::{Method, Trainer};
+use salaad::data::BatchLoader;
+use salaad::eval::eval_ppl;
+use salaad::runtime::Runtime;
+use salaad::slr::hpa;
+
+fn main() -> Result<()> {
+    let rt = Runtime::from_env()?;
+    let cfg = rt.model_config("nano")?;
+    println!("model `nano`: {:.2}M params, {} selected blocks",
+             cfg.n_params() as f64 / 1e6, cfg.selected_blocks.len());
+
+    // 1. Train with SALAAD: Adam + coupled loss + ADMM + I-controller.
+    let tcfg = TrainConfig { steps: 150, eval_every: 50,
+                             ..Default::default() };
+    let scfg = SalaadConfig { k_steps: 5, delta_alpha: 0.15,
+                              delta_beta: 0.03, ..Default::default() };
+    let mut tr = Trainer::new(&rt, cfg.clone(), Method::Salaad, tcfg,
+                              scfg)?;
+    tr.verbose = true;
+    tr.run()?;
+
+    // 2. Inspect the learned structure.
+    println!("\nlearned SLR structure:");
+    for b in tr.blocks.iter().take(5) {
+        println!("  {:<16} rank {:>3} (ratio {:.2})  density {:.3}",
+                 b.name, b.rank(), b.rank_ratio(0.999), b.density());
+    }
+    println!("  ... ({} blocks total)", tr.blocks.len());
+
+    // 3. Evaluate dense X vs structured surrogate L+S.
+    let evals = BatchLoader::eval_set(cfg.vocab, cfg.batch, cfg.seq_len,
+                                      0, 4);
+    let ppl_x = eval_ppl(&rt, &cfg, &tr.params, &evals)?;
+    let ppl_ls = eval_ppl(&rt, &cfg, &tr.surrogate_params(), &evals)?;
+    println!("\nPPL(X)   = {ppl_x:.2}  ({} params)",
+             tr.dense_param_count());
+    println!("PPL(L+S) = {ppl_ls:.2}  ({} params)",
+             tr.surrogate_param_count());
+
+    // 4. HPA: compress the same checkpoint to a smaller budget — no
+    //    retraining.
+    let pool = hpa::plan(&tr.blocks, 0.7, 0)?;
+    let budget = (pool.c_l + pool.c_s) / 3;
+    let plan = hpa::plan(&tr.blocks, 0.7, budget)?;
+    let (trunc, report) = hpa::apply(&tr.blocks, &plan);
+    let ppl_hpa = eval_ppl(&rt, &cfg, &tr.params_with_blocks(&trunc),
+                           &evals)?;
+    println!("PPL(L̃+S̃) = {ppl_hpa:.2}  ({} params, φ_L={:.2} \
+              φ_S={:.2})", tr.surrogate_count_for(&trunc),
+             report.plan.phi_l, report.plan.phi_s);
+    println!("\nquickstart OK");
+    Ok(())
+}

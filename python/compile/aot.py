@@ -1,0 +1,210 @@
+"""AOT exporter: lower every entrypoint to HLO *text* + write manifest.
+
+HLO text (NOT `lowered.compile()` / proto `.serialize()`) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <entry>_<cfg>.hlo.txt        model entrypoints per config
+  kernel_<name>.hlo.txt        standalone Layer-1 kernels (runtime tests)
+  manifest.json                shapes + entrypoint inventory for Rust
+  fixtures.json                cross-language numeric parity fixtures
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, PAPER_CONFIGS, EXPORT_CONFIGS, ModelConfig
+from .initrng import SplitMix64, tensor_seed
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg: ModelConfig):
+    return [_spec(s) for _, s in cfg.param_spec()]
+
+
+def _slr_param_specs(cfg: ModelConfig):
+    return [_spec(s) for _, s in model.slr_param_spec(cfg)]
+
+
+def export_config(cfg: ModelConfig, out_dir: str, heavy: bool) -> dict:
+    """Lower all entrypoints for one config; returns manifest fragment."""
+    b, t = cfg.batch, cfg.seq_len
+    tok_bt = _spec((b, t), jnp.int32)
+    tok_1t = _spec((1, t), jnp.int32)
+    entries = {}
+
+    def emit(name, fn, args, tokens_shape):
+        fname = f"{name}_{cfg.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {"file": fname, "tokens_shape": list(tokens_shape)}
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB")
+
+    ps = _param_specs(cfg)
+    emit("fwd_bwd", lambda *a: model.fwd_bwd(cfg, list(a[:-1]), a[-1]),
+         (*ps, tok_bt), (b, t))
+    emit("eval_loss", lambda *a: model.eval_loss(cfg, list(a[:-1]), a[-1]),
+         (*ps, tok_bt), (b, t))
+    emit("logits", lambda *a: model.logits_entry(cfg, list(a[:-1]), a[-1]),
+         (*ps, tok_1t), (1, t))
+    slr_ps = _slr_param_specs(cfg)
+    emit("forward_slr",
+         lambda *a: model.forward_slr(cfg, list(a[:-1]), a[-1]),
+         (*slr_ps, tok_1t), (1, t))
+    if heavy:
+        # Pallas-dense parity path; interpret-mode loops make this HLO
+        # large, so only the smaller configs export it by default.
+        emit("forward_pallas",
+             lambda *a: model.forward_pallas_entry(cfg, list(a[:-1]), a[-1]),
+             (*ps, tok_1t), (1, t))
+
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff, "seq_len": cfg.seq_len, "batch": cfg.batch,
+        "norm_eps": cfg.norm_eps, "rope_theta": cfg.rope_theta,
+        "params": [[n, list(s)] for n, s in cfg.param_spec()],
+        "slr_params": [[n, list(s)] for n, s in model.slr_param_spec(cfg)],
+        "selected_blocks": cfg.selected_blocks(),
+        "selected_blocks_with_head": cfg.selected_blocks(include_head=True),
+        "rank_pad": {n: cfg.rank_pad(*s) for n, s in cfg.param_spec()
+                     if len(s) == 2},
+        "entrypoints": entries,
+    }
+
+
+def export_kernels(out_dir: str) -> dict:
+    """Standalone Layer-1 kernel artifacts for Rust runtime tests/benches."""
+    from . import kernels
+    out = {}
+
+    def emit(name, fn, specs, meta):
+        fname = f"kernel_{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out[name] = {"file": fname, **meta}
+        print(f"  {fname}: {len(text) / 1e3:.1f} KB")
+
+    emit("soft_threshold",
+         lambda z, tau: (kernels.soft_threshold(z, tau),),
+         [_spec((128, 128)), _spec((1, 1))],
+         {"shape": [128, 128]})
+    emit("matmul",
+         lambda x, w: (kernels.matmul(x, w),),
+         [_spec((128, 256)), _spec((256, 192))],
+         {"m": 128, "k": 256, "n": 192})
+    emit("slr_matmul",
+         lambda x, u, s, v, sp: (kernels.slr_matmul(x, u, s, v, sp),),
+         [_spec((128, 192)), _spec((160, 32)), _spec((32,)),
+          _spec((192, 32)), _spec((160, 192))],
+         {"t": 128, "m": 192, "n": 160, "r": 32})
+    emit("rmsnorm",
+         lambda x, s: (kernels.rmsnorm(x, s),),
+         [_spec((128, 192)), _spec((192,))],
+         {"t": 128, "d": 192})
+    emit("attention",
+         lambda q, k, v: (kernels.attention(q, k, v),),
+         [_spec((4, 128, 32))] * 3,
+         {"h": 4, "t": 128, "hd": 32})
+    return out
+
+
+def make_fixtures(cfg: ModelConfig, seed: int = 1234) -> dict:
+    """Numeric parity fixtures: Rust re-derives params/tokens with its own
+    SplitMix64 mirror and asserts the same loss via the HLO runtime."""
+    params = model.init_params(cfg, seed)
+    rng = SplitMix64(tensor_seed("fixture.tokens", seed))
+    b, t = cfg.batch, cfg.seq_len
+    toks = np.array([[rng.next_u64() % cfg.vocab for _ in range(t)]
+                     for _ in range(b)], dtype=np.int32)
+    toks_j = jnp.asarray(toks)
+    loss = float(model.loss_fn(cfg, params, toks_j))
+    s, c = model.eval_loss(cfg, params, toks_j)
+    out = model.fwd_bwd(cfg, params, toks_j)
+    grads = out[1:]
+    spec = cfg.param_spec()
+    gnorms = {name: float(jnp.linalg.norm(g))
+              for (name, _), g in zip(spec, grads)}
+    logits = model.logits_entry(cfg, params, toks_j[:1])[0]
+    return {
+        "config": cfg.name, "seed": seed,
+        "tokens_first_row": toks[0][:16].tolist(),
+        "loss": loss,
+        "eval_sum": float(s), "eval_count": float(c),
+        "grad_norm_embed": gnorms["embed"],
+        "grad_norm_head": gnorms["lm_head"],
+        "logits_mean": float(jnp.mean(logits)),
+        "logits_abs_sum": float(jnp.sum(jnp.abs(logits))),
+        "param_checksums": {
+            "embed": float(jnp.sum(params[0])),
+            "lm_head": float(jnp.sum(params[-1])),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=EXPORT_CONFIGS)
+    ap.add_argument("--skip-fixtures", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"configs": {}, "kernels": {}, "paper_configs": {}}
+    for name in args.configs:
+        cfg = CONFIGS[name]
+        print(f"exporting {name} "
+              f"({sum(int(np.prod(s)) for _, s in cfg.param_spec()) / 1e6:.2f}M params)")
+        heavy = name in ("nano", "micro")
+        manifest["configs"][name] = export_config(cfg, args.out_dir, heavy)
+    print("exporting kernels")
+    manifest["kernels"] = export_kernels(args.out_dir)
+    for name, cfg in PAPER_CONFIGS.items():
+        manifest["paper_configs"][name] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "params": [[n, list(s)] for n, s in cfg.param_spec()],
+        }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if not args.skip_fixtures:
+        print("generating fixtures (nano)")
+        fixtures = {"nano": make_fixtures(CONFIGS["nano"])}
+        with open(os.path.join(args.out_dir, "fixtures.json"), "w") as f:
+            json.dump(fixtures, f, indent=1)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

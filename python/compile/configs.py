@@ -1,0 +1,118 @@
+"""Model configurations shared between the Python compile path and the Rust
+coordinator (via artifacts/manifest.json).
+
+Each config is a scaled-down analog of one of the paper's LLaMA sizes
+(60M / 130M / 350M / 1B) that is feasible to train on the CPU PJRT
+backend. The *architecture family* is identical to the paper's setup:
+pre-norm RMSNorm, SwiGLU MLP, rotary position embeddings, untied
+embedding / LM head. See DESIGN.md §3 for the substitution rationale.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int = 128
+    batch: int = 8
+    # Fraction of min(n, m) used to pad the static rank of factored SLR
+    # weights in the `forward_slr` artifact. The I-controller targets a
+    # 0.15 effective-rank ratio; 0.35 leaves generous headroom.
+    rank_pad_frac: float = 0.35
+    # RoPE base frequency.
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def rank_pad(self, n: int, m: int) -> int:
+        r = int(min(n, m) * self.rank_pad_frac)
+        return max(4, (r + 3) // 4 * 4)  # multiple of 4, at least 4
+
+    def param_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Canonical (name, shape) ordering. The Rust coordinator packs
+        Literals in exactly this order; keep in sync with manifest.json."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab
+        spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (v, d))]
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            spec += [
+                (p + "attn_norm", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "mlp_norm", (d,)),
+                (p + "w_gate", (dff, d)),
+                (p + "w_up", (dff, d)),
+                (p + "w_down", (d, dff)),
+            ]
+        spec += [("final_norm", (d,)), ("lm_head", (v, d))]
+        return spec
+
+    def selected_blocks(self, include_embed: bool = True,
+                        include_head: bool = False) -> List[str]:
+        """Blocks eligible for SLR induction (all 2-D linear mappings;
+        the LM head is excluded by default per Appendix H)."""
+        names = []
+        if include_embed:
+            names.append("embed")
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            names += [p + k for k in
+                      ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")]
+        if include_head:
+            names.append("lm_head")
+        return names
+
+    def n_params(self) -> int:
+        return sum(int(np_prod(s)) for _, s in self.param_spec())
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# Scaled-down analogs of the paper's 60M / 130M / 350M / 1B models.
+CONFIGS = {
+    "nano": ModelConfig("nano", vocab=256, d_model=64, n_layers=2,
+                        n_heads=2, d_ff=176, seq_len=128, batch=8),
+    "micro": ModelConfig("micro", vocab=512, d_model=128, n_layers=4,
+                         n_heads=4, d_ff=352, seq_len=128, batch=8),
+    "mini": ModelConfig("mini", vocab=1024, d_model=192, n_layers=6,
+                        n_heads=6, d_ff=512, seq_len=128, batch=8),
+    "small": ModelConfig("small", vocab=2048, d_model=320, n_layers=8,
+                         n_heads=8, d_ff=864, seq_len=128, batch=8),
+}
+
+# Full-size paper configs: present for completeness / parameter counting;
+# not exported to HLO by default (CPU-infeasible to train here).
+PAPER_CONFIGS = {
+    "llama60m": ModelConfig("llama60m", vocab=32000, d_model=512,
+                            n_layers=8, n_heads=8, d_ff=1376, seq_len=1024),
+    "llama130m": ModelConfig("llama130m", vocab=32000, d_model=768,
+                             n_layers=12, n_heads=12, d_ff=2048,
+                             seq_len=1024),
+    "llama350m": ModelConfig("llama350m", vocab=32000, d_model=1024,
+                             n_layers=24, n_heads=16, d_ff=2736,
+                             seq_len=1024),
+    "llama1b": ModelConfig("llama1b", vocab=32000, d_model=2048,
+                           n_layers=24, n_heads=32, d_ff=5461,
+                           seq_len=1024),
+}
+
+# Configs exported to artifacts by default.
+EXPORT_CONFIGS = ["nano", "micro", "mini", "small"]

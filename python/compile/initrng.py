@@ -1,0 +1,72 @@
+"""Deterministic parameter initialization, bit-for-bit mirrored in Rust
+(`rust/src/util/rng.rs`).
+
+The Rust coordinator owns parameter state; Python only needs identical
+initialization for cross-language parity fixtures (python/tests and
+rust/tests assert the same loss on the same seed). Algorithm:
+
+- SplitMix64 streams, one per tensor, seeded with fnv1a64(name) ^ seed so
+  streams are order-independent.
+- Standard normals via Box-Muller (cos branch only, sine discarded),
+  computed in f64 then cast to f32.
+
+Keep every arithmetic step in sync with the Rust implementation.
+"""
+
+import math
+
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in s.encode("utf-8"):
+        h ^= b
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of precision."""
+        return (self.next_u64() >> 11) * (1.0 / 9007199254740992.0)
+
+    def next_normal(self) -> float:
+        """Box-Muller, cosine branch only."""
+        u1 = self.next_f64()
+        u2 = self.next_f64()
+        if u1 <= 0.0:
+            u1 = 1.0 / 9007199254740992.0
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+def tensor_seed(name: str, seed: int) -> int:
+    return (fnv1a64(name) ^ (seed & MASK64)) & MASK64
+
+
+def init_tensor(name: str, shape, seed: int, std: float = 0.02):
+    """Returns a flat python list of f32 values for the named tensor.
+
+    1-D tensors are norm scales (all ones); 2-D tensors are N(0, std^2).
+    """
+    import numpy as np
+    n = 1
+    for d in shape:
+        n *= d
+    if len(shape) == 1:
+        return np.ones(n, dtype=np.float32)
+    rng = SplitMix64(tensor_seed(name, seed))
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        out[i] = np.float32(rng.next_normal() * std)
+    return out

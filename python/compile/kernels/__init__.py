@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the SALAAD stack.
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest sweeps
+shapes/dtypes with hypothesis and asserts allclose. All kernels lower
+with interpret=True (CPU PJRT cannot execute Mosaic custom calls).
+"""
+
+from .matmul import matmul
+from .rmsnorm import rmsnorm
+from .soft_threshold import soft_threshold
+from .slr_matmul import slr_matmul
+from .attention import attention
+from . import ref
+
+__all__ = ["matmul", "rmsnorm", "soft_threshold", "slr_matmul",
+           "attention", "ref"]

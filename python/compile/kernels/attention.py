@@ -1,0 +1,55 @@
+"""Causal multi-head attention Pallas kernel (Layer 1).
+
+Grid = (heads, query tiles); each grid step computes one query tile's
+attention against the full key/value sequence with an in-VMEM masked
+softmax. The paper's workloads use short contexts (our artifacts fix
+T = 128) so the full K/V block fits comfortably in a TPU core's VMEM
+(T*hd*4 bytes * 2 << 16 MiB); for long contexts the k-loop would be
+tiled with an online softmax (see DESIGN.md §8 perf notes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(scale, causal, block_q, x_q_ref, k_ref, v_ref, o_ref):
+    q = x_q_ref[0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)             # (T, hd)
+    v = v_ref[0].astype(jnp.float32)             # (T, hd)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 0)
+        ki = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(qi >= ki, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "interpret"))
+def attention(q, k, v, causal: bool = True, block_q: int = 64,
+              interpret: bool = True):
+    """q, k, v (H, T, hd) -> (H, T, hd)."""
+    h, t, hd = q.shape
+    assert k.shape == (h, t, hd) and v.shape == (h, t, hd)
+    bq = min(block_q, t)
+    while t % bq:
+        bq -= 1
+    scale = 1.0 / float(hd) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale, causal, bq),
+        grid=(h, t // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((1, t, hd), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda hh, i: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""Tiled Pallas matmul kernel (Layer 1).
+
+TPU-oriented tiling: the grid walks MXU-shaped output tiles (block_m x
+block_n) and accumulates over block_k slabs of the contraction dimension;
+BlockSpec index maps express the HBM->VMEM schedule that a CUDA kernel
+would express with threadblocks (DESIGN.md §4). Lowered with
+interpret=True so the emitted HLO runs on any PJRT backend; on a real TPU
+the same kernel would lower to a Mosaic custom call.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest block <= pref that divides dim (falls back to dim)."""
+    if dim <= pref:
+        return dim
+    for b in range(pref, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def matmul(x, w, block_m: int = 128, block_n: int = 128, block_k: int = 128,
+           interpret: bool = True):
+    """x (M, K) @ w (K, N) -> (M, N) with f32 accumulation per tile."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = _pick_block(m, block_m), _pick_block(n, block_n), \
+        _pick_block(k, block_k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def vmem_bytes(block_m=128, block_n=128, block_k=128, dtype_bytes=4):
+    """Estimated VMEM working set for one grid step (perf model, §Perf)."""
+    return dtype_bytes * (block_m * block_k + block_k * block_n
+                          + block_m * block_n)

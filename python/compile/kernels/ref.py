@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest asserts
+`assert_allclose(kernel(...), ref(...))` across hypothesis-generated
+shape/dtype sweeps. Keep them boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def matmul_ref(x, w):
+    """x (M, K) @ w (K, N) with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    """Row-wise RMS normalization with learned scale."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def soft_threshold_ref(z, tau):
+    """Element-wise shrinkage prox of tau * ||.||_1."""
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+
+
+def slr_matmul_ref(x, u, s, v, sp):
+    """y = x @ W^T where W = u @ diag(s) @ v^T + sp.
+
+    x: (T, m), u: (n, r), s: (r,), v: (m, r), sp: (n, m) -> (T, n).
+    """
+    t = jnp.dot(x, v, preferred_element_type=jnp.float32)     # (T, r)
+    low = jnp.dot(t * s, u.T, preferred_element_type=jnp.float32)
+    res = jnp.dot(x, sp.T, preferred_element_type=jnp.float32)
+    return (low + res).astype(x.dtype)
+
+
+def attention_ref(q, k, v, causal=True):
+    """Multi-head scaled dot-product attention.
+
+    q, k, v: (H, T, hd) -> (H, T, hd).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, dtype=jnp.float32))
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

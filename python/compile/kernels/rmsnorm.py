@@ -1,0 +1,40 @@
+"""Fused RMSNorm Pallas kernel (Layer 1).
+
+One grid step normalizes a tile of rows entirely in VMEM: square,
+row-mean, rsqrt, scale — fused so the activation never round-trips to
+HBM between the reduction and the scaling.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(eps, x_ref, scale_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_t", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, block_t: int = 64,
+            interpret: bool = True):
+    """x (T, d), scale (d,) -> (T, d)."""
+    t, d = x.shape
+    bt = min(block_t, t)
+    while t % bt:
+        bt -= 1
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

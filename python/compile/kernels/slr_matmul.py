@@ -1,0 +1,60 @@
+"""Factored sparse + low-rank matmul Pallas kernel (Layer 1).
+
+The deployment hot path of the paper: a compressed linear layer
+W = U diag(s) V^T + S applied as y = x W^T *without materializing W*:
+
+    y = ((x V) * s) U^T  +  x S^T
+
+Two thin (rank-r) matmuls plus one residual matmul. On a real TPU the
+thin matmuls keep the MXU busy with r-wide slabs while the residual term
+streams S through VMEM; here the same schedule is expressed with a grid
+over output row tiles (DESIGN.md §4).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _slr_kernel(x_ref, u_ref, s_ref, v_ref, sp_ref, o_ref):
+    x = x_ref[...]
+    t = jnp.dot(x, v_ref[...], preferred_element_type=jnp.float32)
+    low = jnp.dot(t * s_ref[...], u_ref[...].T,
+                  preferred_element_type=jnp.float32)
+    res = jnp.dot(x, sp_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = (low + res).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def slr_matmul(x, u, s, v, sp, block_t: int = 64, interpret: bool = True):
+    """x (T, m), u (n, r), s (r,), v (m, r), sp (n, m) -> (T, n)."""
+    t, m = x.shape
+    n, r = u.shape
+    assert v.shape == (m, r) and s.shape == (r,) and sp.shape == (n, m)
+    bt = min(block_t, t)
+    while t % bt:
+        bt -= 1
+    return pl.pallas_call(
+        _slr_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, m), lambda i: (i, 0)),
+            pl.BlockSpec((n, r), lambda i: (0, 0)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=interpret,
+    )(x, u, s, v, sp)
+
+
+def flops(t: int, n: int, m: int, r: int, density: float) -> int:
+    """Effective FLOPs of the factored product (perf model, §Perf):
+    2*t*m*r + t*r + 2*t*r*n for the low-rank path plus 2*t*density*n*m for
+    the (ideally sparse) residual."""
+    return 2 * t * m * r + t * r + 2 * t * r * n \
+        + int(2 * t * density * n * m)

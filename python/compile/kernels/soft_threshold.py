@@ -1,0 +1,41 @@
+"""Element-wise soft-thresholding (shrinkage) Pallas kernel (Layer 1).
+
+This is the prox of tau*||.||_1 used by the ADMM S-update (Eq. 4) and by
+SVT on the singular-value vector. tau arrives as a (1, 1) runtime operand
+so a single compiled artifact serves every I-controller threshold value.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_threshold_kernel(z_ref, tau_ref, o_ref):
+    z = z_ref[...]
+    tau = tau_ref[0, 0]
+    o_ref[...] = jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def soft_threshold(z, tau, block: int = 128, interpret: bool = True):
+    """z (N, M), tau (1, 1) -> shrink(z, tau) of shape (N, M)."""
+    n, m = z.shape
+    bn = min(block, n)
+    while n % bn:
+        bn -= 1
+    bm = min(block, m)
+    while m % bm:
+        bm -= 1
+    return pl.pallas_call(
+        _soft_threshold_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), z.dtype),
+        interpret=interpret,
+    )(z, tau)

@@ -1,0 +1,242 @@
+"""Layer 2: LLaMA-style transformer in JAX (build-time only).
+
+Architecture matches the paper's experimental setup (§5.1): pre-norm
+RMSNorm, SwiGLU MLP, rotary position embeddings, untied embedding and LM
+head. Three compute paths over the same parameters:
+
+- `forward(..., impl="jnp")`     — XLA-fused path used by the exported
+  training entrypoints (fwd_bwd / eval_loss); this is the path that runs
+  hundreds of times per experiment, so it leans on XLA fusion.
+- `forward(..., impl="pallas")`  — same model with every linear, norm and
+  attention op routed through the Layer-1 Pallas kernels; exported as
+  `forward_pallas` for cross-path parity checks from Rust.
+- `forward_slr(...)`             — the deployment path: every selected
+  block is a *factored* SLR weight (U, s, V, S) applied via the
+  `slr_matmul` kernel without materializing the dense matrix. This is
+  the compute path the paper's inference claim rests on.
+
+Parameters travel as a flat list in `ModelConfig.param_spec()` order; the
+Rust coordinator packs Literals in exactly that order.
+"""
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing
+
+def params_to_dict(cfg: ModelConfig, flat: List):
+    spec = cfg.param_spec()
+    assert len(flat) == len(spec), f"{len(flat)} vs {len(spec)}"
+    return {name: p for (name, _), p in zip(spec, flat)}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic init mirrored by rust/src/util/rng.rs (see initrng)."""
+    from .initrng import init_tensor
+    out = []
+    for name, shape in cfg.param_spec():
+        flat = init_tensor(name, shape, seed)
+        out.append(jnp.asarray(flat, dtype=jnp.float32).reshape(shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+
+def _rope(x, theta: float):
+    """Rotary embedding over (B, H, T, hd) with rotate-half convention."""
+    b, h, t, hd = x.shape
+    half = hd // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos * freq[None, :]                       # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _linear_jnp(x, w):
+    """x (..., in) @ w (out, in)^T."""
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+def _linear_pallas(x, w):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = kernels.matmul(x2, w.T)
+    return y.reshape(*shape[:-1], w.shape[0])
+
+
+def _rmsnorm_jnp(x, scale, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def _rmsnorm_pallas(x, scale, eps):
+    shape = x.shape
+    y = kernels.rmsnorm(x.reshape(-1, shape[-1]), scale, eps=eps)
+    return y.reshape(shape)
+
+
+def _attention_jnp(q, k, v):
+    """q,k,v (B, H, T, hd), causal."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.array(hd, dtype=jnp.float32))
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def _attention_pallas(q, k, v):
+    b, h, t, hd = q.shape
+    out = jax.vmap(lambda qq, kk, vv: kernels.attention(qq, kk, vv))(
+        q, k, v)
+    return out.reshape(b, h, t, hd)
+
+
+# ---------------------------------------------------------------------------
+# Dense forward (both impls)
+
+def forward(cfg: ModelConfig, flat_params: List, tokens, impl: str = "jnp"):
+    """tokens (B, T) int32 -> logits (B, T, vocab) f32."""
+    p = params_to_dict(cfg, flat_params)
+    lin = _linear_jnp if impl == "jnp" else _linear_pallas
+    norm = _rmsnorm_jnp if impl == "jnp" else _rmsnorm_pallas
+    attn = _attention_jnp if impl == "jnp" else _attention_pallas
+
+    b, t = tokens.shape
+    h, hd = cfg.n_heads, cfg.d_head
+    x = p["embed"][tokens]                           # (B, T, d)
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        xn = norm(x, p[pre + "attn_norm"], cfg.norm_eps)
+        q = lin(xn, p[pre + "wq"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        k = lin(xn, p[pre + "wk"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        v = lin(xn, p[pre + "wv"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        q, k = _rope(q, cfg.rope_theta), _rope(k, cfg.rope_theta)
+        o = attn(q, k, v).transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + lin(o, p[pre + "wo"])
+        xn = norm(x, p[pre + "mlp_norm"], cfg.norm_eps)
+        gate = jax.nn.silu(lin(xn, p[pre + "w_gate"]))
+        up = lin(xn, p[pre + "w_up"])
+        x = x + lin(gate * up, p[pre + "w_down"])
+    x = norm(x, p["final_norm"], cfg.norm_eps)
+    return lin(x, p["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# Losses and exported entrypoints
+
+def _nll(logits, tokens):
+    """Next-token NLL. Returns (sum_nll, token_count)."""
+    pred = logits[:, :-1, :]
+    tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.sum(picked), jnp.array(tgt.size, dtype=jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, flat_params: List, tokens):
+    logits = forward(cfg, flat_params, tokens, impl="jnp")
+    s, c = _nll(logits, tokens)
+    return s / c
+
+
+def fwd_bwd(cfg: ModelConfig, flat_params: List, tokens):
+    """Training entrypoint: (params..., tokens) -> (loss, grads...)."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens))(flat_params)
+    return (loss, *grads)
+
+
+def eval_loss(cfg: ModelConfig, flat_params: List, tokens):
+    """Eval entrypoint: -> (sum_nll, token_count) for exact PPL pooling."""
+    logits = forward(cfg, flat_params, tokens, impl="jnp")
+    s, c = _nll(logits, tokens)
+    return (s, c)
+
+
+def logits_entry(cfg: ModelConfig, flat_params: List, tokens):
+    """Serving / downstream-scoring entrypoint: full logits."""
+    return (forward(cfg, flat_params, tokens, impl="jnp"),)
+
+
+def forward_pallas_entry(cfg: ModelConfig, flat_params: List, tokens):
+    """Dense forward routed through the Layer-1 Pallas kernels."""
+    return (forward(cfg, flat_params, tokens, impl="pallas"),)
+
+
+# ---------------------------------------------------------------------------
+# SLR deployment path
+
+def slr_param_spec(cfg: ModelConfig):
+    """(name, shape) order for the factored `forward_slr` entrypoint.
+
+    Selected blocks (embed + per-layer projections; LM head stays dense
+    per Appendix H) are replaced by (u, s, v, sp); norms and the head
+    remain dense. Ranks are statically padded to cfg.rank_pad(n, m).
+    """
+    selected = set(cfg.selected_blocks(include_embed=True,
+                                       include_head=False))
+    spec = []
+    for name, shape in cfg.param_spec():
+        if name in selected:
+            n, m = shape
+            r = cfg.rank_pad(n, m)
+            spec += [(name + ".u", (n, r)), (name + ".s", (r,)),
+                     (name + ".v", (m, r)), (name + ".sp", (n, m))]
+        else:
+            spec.append((name, shape))
+    return spec
+
+
+def forward_slr(cfg: ModelConfig, flat_params: List, tokens):
+    """Factored forward: every selected block applied via slr_matmul."""
+    spec = slr_param_spec(cfg)
+    assert len(flat_params) == len(spec)
+    p = {name: x for (name, _), x in zip(spec, flat_params)}
+    b, t = tokens.shape
+    h, hd = cfg.n_heads, cfg.d_head
+
+    def slr_lin(x, name):
+        shape = x.shape
+        x2 = x.reshape(-1, shape[-1])
+        y = kernels.slr_matmul(x2, p[name + ".u"], p[name + ".s"],
+                               p[name + ".v"], p[name + ".sp"])
+        return y.reshape(*shape[:-1], y.shape[-1])
+
+    def norm(x, scale):
+        return _rmsnorm_pallas(x, scale, cfg.norm_eps)
+
+    # Embedding lookup of a factored matrix: gather rows of U and S.
+    emb = (p["embed.u"][tokens] * p["embed.s"]) @ p["embed.v"].T \
+        + p["embed.sp"][tokens]
+    x = emb
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        xn = norm(x, p[pre + "attn_norm"])
+        q = slr_lin(xn, pre + "wq").reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        k = slr_lin(xn, pre + "wk").reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        v = slr_lin(xn, pre + "wv").reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+        q, k = _rope(q, cfg.rope_theta), _rope(k, cfg.rope_theta)
+        o = _attention_pallas(q, k, v).transpose(0, 2, 1, 3).reshape(
+            b, t, cfg.d_model)
+        x = x + slr_lin(o, pre + "wo")
+        xn = norm(x, p[pre + "mlp_norm"])
+        gate = jax.nn.silu(slr_lin(xn, pre + "w_gate"))
+        up = slr_lin(xn, pre + "w_up")
+        x = x + slr_lin(gate * up, pre + "w_down")
+    x = norm(x, p["final_norm"])
+    return (_linear_pallas(x, p["lm_head"]),)

@@ -1,0 +1,192 @@
+"""Layer-1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+DTYPES = [jnp.float32]
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# -------------------------------------------------------------- matmul
+
+@settings(**SETTINGS)
+@given(m=st.sampled_from([8, 32, 64, 128, 200]),
+       k=st.sampled_from([16, 64, 128, 256]),
+       n=st.sampled_from([8, 48, 128, 176]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand((m, k), jnp.float32, seed)
+    w = _rand((k, n), jnp.float32, seed + 1)
+    assert_allclose(np.asarray(kernels.matmul(x, w)),
+                    np.asarray(ref.matmul_ref(x, w)), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 128, 64),
+                                      (128, 128, 128)])
+def test_matmul_block_shapes(bm, bn, bk):
+    x = _rand((128, 256), jnp.float32, 0)
+    w = _rand((256, 128), jnp.float32, 1)
+    out = kernels.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    assert_allclose(np.asarray(out), np.asarray(ref.matmul_ref(x, w)),
+                    rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_rejects_mismatch():
+    x = _rand((8, 16), jnp.float32, 0)
+    w = _rand((8, 16), jnp.float32, 1)
+    with pytest.raises(AssertionError):
+        kernels.matmul(x, w)
+
+
+# -------------------------------------------------------------- rmsnorm
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 8, 64, 128, 96]),
+       d=st.sampled_from([16, 64, 192, 320]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_matches_ref(t, d, seed):
+    x = _rand((t, d), jnp.float32, seed)
+    scale = _rand((d,), jnp.float32, seed + 1)
+    assert_allclose(np.asarray(kernels.rmsnorm(x, scale)),
+                    np.asarray(ref.rmsnorm_ref(x, scale)),
+                    rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_unit_scale_normalizes():
+    x = _rand((4, 64), jnp.float32, 7) * 10.0
+    y = np.asarray(kernels.rmsnorm(x, jnp.ones(64)))
+    rms = np.sqrt(np.mean(y ** 2, axis=-1))
+    assert_allclose(rms, np.ones(4), rtol=1e-4)
+
+
+# ------------------------------------------------------ soft threshold
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([8, 64, 128, 96]),
+       m=st.sampled_from([8, 64, 128, 144]),
+       tau=st.floats(0.0, 2.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_soft_threshold_matches_ref(n, m, tau, seed):
+    z = _rand((n, m), jnp.float32, seed)
+    tau_arr = jnp.full((1, 1), tau, dtype=jnp.float32)
+    assert_allclose(np.asarray(kernels.soft_threshold(z, tau_arr)),
+                    np.asarray(ref.soft_threshold_ref(z, tau)),
+                    rtol=1e-6, atol=1e-6)
+
+
+def test_soft_threshold_shrinks_support():
+    z = _rand((64, 64), jnp.float32, 3)
+    tau = jnp.full((1, 1), 0.5, dtype=jnp.float32)
+    out = np.asarray(kernels.soft_threshold(z, tau))
+    assert (np.abs(out) <= np.maximum(np.abs(np.asarray(z)) - 0.5, 0)
+            + 1e-6).all()
+    # prox is non-expansive relative to input
+    assert np.abs(out).sum() <= np.abs(np.asarray(z)).sum()
+
+
+def test_soft_threshold_zero_tau_is_identity():
+    z = _rand((32, 32), jnp.float32, 4)
+    tau = jnp.zeros((1, 1), dtype=jnp.float32)
+    assert_allclose(np.asarray(kernels.soft_threshold(z, tau)),
+                    np.asarray(z), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------- slr matmul
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([4, 64, 128]),
+       m=st.sampled_from([32, 192]),
+       n=st.sampled_from([32, 160]),
+       r=st.sampled_from([4, 16, 32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_slr_matmul_matches_ref(t, m, n, r, seed):
+    x = _rand((t, m), jnp.float32, seed)
+    u = _rand((n, r), jnp.float32, seed + 1)
+    s = jnp.abs(_rand((r,), jnp.float32, seed + 2))
+    v = _rand((m, r), jnp.float32, seed + 3)
+    sp = _rand((n, m), jnp.float32, seed + 4) * 0.1
+    assert_allclose(np.asarray(kernels.slr_matmul(x, u, s, v, sp)),
+                    np.asarray(ref.slr_matmul_ref(x, u, s, v, sp)),
+                    rtol=2e-5, atol=2e-5)
+
+
+def test_slr_matmul_equals_dense_reconstruction():
+    """Factored product == x @ (U diag(s) V^T + S)^T on the dense path."""
+    t, m, n, r = 16, 48, 40, 8
+    x = _rand((t, m), jnp.float32, 0)
+    u = _rand((n, r), jnp.float32, 1)
+    s = jnp.abs(_rand((r,), jnp.float32, 2))
+    v = _rand((m, r), jnp.float32, 3)
+    sp = _rand((n, m), jnp.float32, 4) * 0.05
+    w = (u * s) @ v.T + sp
+    assert_allclose(np.asarray(kernels.slr_matmul(x, u, s, v, sp)),
+                    np.asarray(x @ w.T), rtol=1e-4, atol=1e-4)
+
+
+def test_slr_matmul_zero_rank_padding_is_noop():
+    """Zero-padded singular values must not change the product."""
+    t, m, n, r = 8, 32, 24, 4
+    x = _rand((t, m), jnp.float32, 0)
+    u = _rand((n, r), jnp.float32, 1)
+    s = jnp.abs(_rand((r,), jnp.float32, 2))
+    v = _rand((m, r), jnp.float32, 3)
+    sp = jnp.zeros((n, m), dtype=jnp.float32)
+    u2 = jnp.pad(u, ((0, 0), (0, 4)))
+    s2 = jnp.pad(s, (0, 4))
+    v2 = jnp.pad(v, ((0, 0), (0, 4)))
+    assert_allclose(np.asarray(kernels.slr_matmul(x, u2, s2, v2, sp)),
+                    np.asarray(kernels.slr_matmul(x, u, s, v, sp)),
+                    rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------- attention
+
+@settings(**SETTINGS)
+@given(h=st.sampled_from([1, 2, 4]),
+       t=st.sampled_from([16, 64, 128]),
+       hd=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_attention_matches_ref(h, t, hd, seed):
+    q = _rand((h, t, hd), jnp.float32, seed)
+    k = _rand((h, t, hd), jnp.float32, seed + 1)
+    v = _rand((h, t, hd), jnp.float32, seed + 2)
+    assert_allclose(np.asarray(kernels.attention(q, k, v)),
+                    np.asarray(ref.attention_ref(q, k, v)),
+                    rtol=2e-5, atol=2e-5)
+
+
+def test_attention_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    h, t, hd = 2, 32, 16
+    q = _rand((h, t, hd), jnp.float32, 0)
+    k = _rand((h, t, hd), jnp.float32, 1)
+    v = _rand((h, t, hd), jnp.float32, 2)
+    base = np.asarray(kernels.attention(q, k, v))
+    k2 = k.at[:, t // 2:, :].set(99.0)
+    v2 = v.at[:, t // 2:, :].set(-99.0)
+    pert = np.asarray(kernels.attention(q, k2, v2))
+    assert_allclose(base[:, :t // 2], pert[:, :t // 2], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_first_position_is_v0():
+    h, t, hd = 1, 8, 8
+    q = _rand((h, t, hd), jnp.float32, 0)
+    k = _rand((h, t, hd), jnp.float32, 1)
+    v = _rand((h, t, hd), jnp.float32, 2)
+    out = np.asarray(kernels.attention(q, k, v))
+    assert_allclose(out[0, 0], np.asarray(v)[0, 0], rtol=1e-5, atol=1e-5)

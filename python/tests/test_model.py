@@ -1,0 +1,121 @@
+"""Layer-2 model checks: pallas/jnp path parity, loss sanity, SLR
+deployment-path equivalence with dense reconstruction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.configs import CONFIGS
+from compile.initrng import SplitMix64
+
+CFG = CONFIGS["nano"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=42)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = SplitMix64(7)
+    return jnp.asarray(
+        [[rng.next_u64() % CFG.vocab for _ in range(CFG.seq_len)]
+         for _ in range(2)], dtype=jnp.int32)
+
+
+def test_forward_shapes(params, tokens):
+    logits = model.forward(CFG, params, tokens)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_pallas_path_matches_jnp(params, tokens):
+    a = model.forward(CFG, params, tokens, impl="jnp")
+    b = model.forward(CFG, params, tokens, impl="pallas")
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-4)
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    """Fresh init should predict ~uniformly: loss ≈ ln(vocab)."""
+    loss = float(model.loss_fn(CFG, params, tokens))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+def test_fwd_bwd_grad_shapes(params, tokens):
+    out = model.fwd_bwd(CFG, params, tokens)
+    loss, grads = out[0], out[1:]
+    spec = CFG.param_spec()
+    assert len(grads) == len(spec)
+    for (name, shape), g in zip(spec, grads):
+        assert g.shape == tuple(shape), name
+        assert bool(jnp.isfinite(g).all()), name
+
+
+def test_grad_descent_direction(params, tokens):
+    """One SGD step along the returned gradient must reduce the loss."""
+    out = model.fwd_bwd(CFG, params, tokens)
+    loss0, grads = out[0], out[1:]
+    stepped = [p - 0.5 * g for p, g in zip(params, grads)]
+    loss1 = float(model.loss_fn(CFG, stepped, tokens))
+    assert loss1 < float(loss0)
+
+
+def test_eval_loss_consistency(params, tokens):
+    s, c = model.eval_loss(CFG, params, tokens)
+    loss = float(model.loss_fn(CFG, params, tokens))
+    assert_allclose(float(s) / float(c), loss, rtol=1e-6)
+    assert float(c) == tokens.shape[0] * (tokens.shape[1] - 1)
+
+
+def _factor(w, r, seed):
+    """Exact rank-r factorization of a random matrix for test purposes:
+    SVD-truncate w into (u, s, v) + dense residual sp."""
+    u, s, vt = np.linalg.svd(np.asarray(w), full_matrices=False)
+    u_r = u[:, :r] * 1.0
+    s_r = s[:r]
+    v_r = vt[:r].T
+    low = (u_r * s_r) @ v_r.T
+    sp = np.asarray(w) - low
+    return (jnp.asarray(u_r), jnp.asarray(s_r), jnp.asarray(v_r),
+            jnp.asarray(sp))
+
+
+def test_forward_slr_equals_dense(params, tokens):
+    """Exactly-factored weights through the SLR deployment path must
+    reproduce the dense forward."""
+    spec = CFG.param_spec()
+    selected = set(CFG.selected_blocks())
+    slr_flat = []
+    for (name, shape), p in zip(spec, params):
+        if name in selected:
+            n, m = shape
+            r = CFG.rank_pad(n, m)
+            u, s, v, sp = _factor(p, r, 0)
+            slr_flat += [u, s, v, sp]
+        else:
+            slr_flat.append(p)
+    toks1 = tokens[:1]
+    dense = model.forward(CFG, params, toks1, impl="jnp")
+    slr = model.forward_slr(CFG, slr_flat, toks1)[0]
+    assert_allclose(np.asarray(slr), np.asarray(dense), rtol=2e-3, atol=2e-3)
+
+
+def test_slr_param_spec_shapes():
+    spec = dict(model.slr_param_spec(CFG))
+    assert "embed.u" in spec and "lm_head" in spec
+    n, r = spec["embed.u"]
+    assert n == CFG.vocab and r == CFG.rank_pad(CFG.vocab, CFG.d_model)
+    assert spec["embed.sp"] == (CFG.vocab, CFG.d_model)
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 2, 8, 16)),
+                    dtype=jnp.float32)
+    y = model._rope(x, 10000.0)
+    assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                    np.linalg.norm(np.asarray(y), axis=-1),
+                    rtol=1e-5, atol=1e-5)

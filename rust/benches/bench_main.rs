@@ -1,0 +1,246 @@
+//! Benchmark harness (`cargo bench`, custom harness — criterion is not
+//! in the offline vendor set; DESIGN.md §3).
+//!
+//! Covers the hot paths of each layer plus one end-to-end bench per
+//! paper-table driver:
+//!   L3 numeric core : jacobi/randomized SVD (the ε in Appendix C's
+//!                     ε·J/K cost model), prox ops, ADMM block update,
+//!                     HPA, RPCA, GEMMs, data loader
+//!   runtime bridge  : literal marshalling, fwd_bwd/eval/logits step
+//!                     latency per scale (table1/fig2/fig3 drivers)
+//!   serving         : greedy-decode token latency (the serving path)
+//!
+//! Set SALAAD_BENCH_FILTER=<substr> to run a subset.
+
+use std::time::Instant;
+
+use salaad::config::{SalaadConfig, TrainConfig};
+use salaad::coordinator::{run_admm_phase, Method, Trainer};
+use salaad::data::BatchLoader;
+use salaad::linalg::{jacobi_svd, matmul, matmul_nt, rand_svd};
+use salaad::runtime::literal::tensor_to_literal;
+use salaad::runtime::Runtime;
+use salaad::slr::prox::{soft_threshold_assign, svt};
+use salaad::slr::{hpa, rpca::rpca, SlrBlock};
+use salaad::tensor::Tensor;
+use salaad::util::Rng;
+
+struct Bench {
+    filter: Option<String>,
+    results: Vec<(String, f64, f64, u32)>,
+}
+
+impl Bench {
+    fn new() -> Self {
+        Bench {
+            filter: std::env::var("SALAAD_BENCH_FILTER").ok(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly: warmup, then timed iterations adapting the
+    /// count so each bench takes ~0.4-1s. Records median + mean.
+    fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64();
+        let iters = ((0.5 / once.max(1e-9)) as u32).clamp(3, 200);
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        println!("{name:<44} median {:>10.3} ms   mean {:>10.3} ms   \
+                  ({iters} iters)", median * 1e3, mean * 1e3);
+        self.results.push((name.to_string(), median, mean, iters));
+    }
+
+    fn report(&self) {
+        let mut out = String::from("| bench | median ms | mean ms | iters |\n\
+                                    |---|---|---|---|\n");
+        for (n, med, mean, it) in &self.results {
+            out.push_str(&format!("| {n} | {:.3} | {:.3} | {it} |\n",
+                                  med * 1e3, mean * 1e3));
+        }
+        let _ = std::fs::create_dir_all("reports");
+        let _ = std::fs::write("reports/bench.md", out);
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0);
+
+    // ---------------- L3 numeric core ----------------
+    for (n, m) in [(128usize, 128usize), (256, 128), (512, 128)] {
+        let a = Tensor::randn(&[n, m], &mut rng, 1.0);
+        b.bench(&format!("linalg/jacobi_svd_{n}x{m}"), || {
+            std::hint::black_box(jacobi_svd(&a));
+        });
+        let mut r2 = Rng::new(1);
+        b.bench(&format!("linalg/rand_svd_r32_{n}x{m}"), || {
+            std::hint::black_box(rand_svd(&a, 32, 8, 2, &mut r2));
+        });
+    }
+    {
+        let a = Tensor::randn(&[256, 256], &mut rng, 1.0);
+        let c = Tensor::randn(&[256, 256], &mut rng, 1.0);
+        b.bench("linalg/matmul_256", || {
+            std::hint::black_box(matmul(&a, &c));
+        });
+        b.bench("linalg/matmul_nt_256", || {
+            std::hint::black_box(matmul_nt(&a, &c));
+        });
+    }
+    {
+        let z = Tensor::randn(&[512, 512], &mut rng, 1.0);
+        b.bench("prox/soft_threshold_512", || {
+            let mut zz = z.clone();
+            soft_threshold_assign(&mut zz, 0.3);
+            std::hint::black_box(zz);
+        });
+        let mut r2 = Rng::new(2);
+        b.bench("prox/svt_tau0.5_r32_512", || {
+            std::hint::black_box(svt(&z, 0.5, 32, &mut r2));
+        });
+    }
+    {
+        // ADMM phase over a micro-like block set (the fig2 inner loop).
+        let sizes = [(512usize, 128usize), (128, 128), (128, 128),
+                     (128, 128), (128, 128), (352, 128), (352, 128),
+                     (128, 352)];
+        let blocks: Vec<SlrBlock> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, (n, m))| {
+                let mut blk = SlrBlock::new(&format!("b{i}"), *n, *m,
+                                            0.01, 0.5, 0.5);
+                blk.alpha = 0.005;
+                blk.beta = 0.0005;
+                blk
+            })
+            .collect();
+        let xs: Vec<Tensor> = sizes
+            .iter()
+            .map(|(n, m)| Tensor::randn(&[*n, *m], &mut rng, 0.1))
+            .collect();
+        let caps: Vec<usize> = sizes.iter().map(|(n, m)| n.min(m) / 2)
+            .collect();
+        for workers in [1usize, 4] {
+            let mut bl = blocks.clone();
+            b.bench(&format!("admm/phase_8blocks_w{workers}"), || {
+                let mut blc = bl.clone();
+                std::hint::black_box(run_admm_phase(
+                    &mut blc, &xs, &caps, workers, 1, 0.999, 0));
+                bl = blc;
+            });
+        }
+        // HPA on developed blocks (the fig3/fig4 inner loop).
+        let mut developed = blocks.clone();
+        for (blk, x) in developed.iter_mut().zip(&xs) {
+            let mut r3 = Rng::new(3);
+            salaad::slr::admm::admm_update(blk, x, 1, 64, 0.999, &mut r3);
+        }
+        b.bench("hpa/plan_apply_30pct", || {
+            let pool = hpa::plan(&developed, 0.7, 0).unwrap();
+            let plan = hpa::plan(&developed, 0.7,
+                                 (pool.c_l + pool.c_s) / 3).unwrap();
+            std::hint::black_box(hpa::apply(&developed, &plan));
+        });
+    }
+    {
+        let w = Tensor::randn(&[128, 128], &mut rng, 0.1);
+        let mut r2 = Rng::new(4);
+        b.bench("rpca/inexact_alm_128", || {
+            std::hint::black_box(rpca(&w, 1.0, 30, 1e-5, &mut r2));
+        });
+    }
+    {
+        let mut loader = BatchLoader::new(512, 8, 128, "bench", 0);
+        b.bench("data/batch_8x128", || {
+            std::hint::black_box(loader.next_batch());
+        });
+    }
+
+    // ---------------- runtime bridge + end-to-end ----------------
+    let artifacts = std::env::var("SALAAD_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        let rt = Runtime::new(&artifacts).expect("runtime");
+        for scale in ["nano", "micro", "mini"] {
+            let cfg = rt.model_config(scale).unwrap();
+            let params = cfg.init_params(0);
+            let mut loader = BatchLoader::new(cfg.vocab, cfg.batch,
+                                              cfg.seq_len, "bench", 0);
+            let batch = loader.next_batch();
+            // Literal marshalling.
+            b.bench(&format!("runtime/pack_inputs_{scale}"), || {
+                std::hint::black_box(
+                    rt.pack_inputs(&cfg, &params, &batch, cfg.batch)
+                        .unwrap());
+            });
+            // fwd_bwd step (table1/fig2 driver hot path).
+            let exe = rt.load_entry(&cfg, "fwd_bwd").unwrap();
+            let inputs = rt.pack_inputs(&cfg, &params, &batch, cfg.batch)
+                .unwrap();
+            b.bench(&format!("e2e/fwd_bwd_step_{scale}"), || {
+                std::hint::black_box(exe.run(&inputs).unwrap());
+            });
+            // eval_loss (fig3/fig4/table ppl driver).
+            let eexe = rt.load_entry(&cfg, "eval_loss").unwrap();
+            b.bench(&format!("e2e/eval_loss_{scale}"), || {
+                std::hint::black_box(eexe.run(&inputs).unwrap());
+            });
+            // serving logits latency (1×T).
+            let lexe = rt.load_entry(&cfg, "logits").unwrap();
+            let one: Vec<i32> = batch[..cfg.seq_len].to_vec();
+            let linputs = rt.pack_inputs(&cfg, &params, &one, 1).unwrap();
+            b.bench(&format!("serve/logits_1x{}_{scale}", cfg.seq_len),
+                    || {
+                std::hint::black_box(lexe.run(&linputs).unwrap());
+            });
+        }
+        // Standalone pallas kernels through PJRT.
+        let k = rt.load_kernel("slr_matmul").unwrap();
+        let x = Tensor::randn(&[128, 192], &mut rng, 1.0);
+        let u = Tensor::randn(&[160, 32], &mut rng, 1.0);
+        let s = Tensor::randn(&[32], &mut rng, 1.0);
+        let v = Tensor::randn(&[192, 32], &mut rng, 1.0);
+        let sp = Tensor::randn(&[160, 192], &mut rng, 0.05);
+        let lits: Vec<xla::Literal> = [&x, &u, &s, &v, &sp]
+            .iter()
+            .map(|t| tensor_to_literal(t).unwrap())
+            .collect();
+        b.bench("kernel/slr_matmul_pjrt", || {
+            std::hint::black_box(k.run(&lits).unwrap());
+        });
+
+        // One short SALAAD training step sequence (fully end-to-end).
+        let cfg = rt.model_config("nano").unwrap();
+        let tcfg = TrainConfig { steps: 1, eval_every: 0,
+                                 ..Default::default() };
+        let scfg = SalaadConfig { k_steps: 1, ..Default::default() };
+        let mut tr = Trainer::new(&rt, cfg, Method::Salaad, tcfg, scfg)
+            .unwrap();
+        tr.grad_step().unwrap(); // warm caches
+        b.bench("e2e/salaad_grad_plus_admm_nano", || {
+            tr.grad_step().unwrap();
+            tr.admm_phase().unwrap();
+        });
+    } else {
+        eprintln!("artifacts missing — runtime benches skipped");
+    }
+
+    b.report();
+    println!("\nwrote reports/bench.md");
+}

@@ -1,0 +1,58 @@
+//! Baseline runners for the Table 1 comparison.
+//!
+//! Each baseline reuses the single [`Trainer`] with a different
+//! [`Method`] (full-rank, LoRA/ReLoRA update projection, GaLore gradient
+//! projection, SLTrain-fixed / LOST-like fixed-structure ADMM) so every
+//! method sees identical data, init and schedule — the controlled
+//! comparison the paper's Table 1 makes.
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, SalaadConfig, TrainConfig};
+use crate::coordinator::{Method, Trainer};
+use crate::data::BatchLoader;
+use crate::eval::eval_ppl;
+use crate::runtime::Runtime;
+
+/// One Table 1 row (or row group, for SALAAD's three variants).
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    pub method: String,
+    /// PPL of the dense trained weights X.
+    pub ppl_x: f64,
+    /// PPL of the structured surrogate L+S (ADMM methods only).
+    pub ppl_surrogate: Option<f64>,
+    /// Dense parameter count (PRM for dense methods).
+    pub dense_params: usize,
+    /// Surrogate parameter count (PRM for structured methods).
+    pub surrogate_params: Option<usize>,
+    pub final_loss: f64,
+}
+
+/// Train one method to completion and evaluate both model variants.
+pub fn run_baseline<'a>(rt: &'a Runtime, cfg: &ModelConfig, method: Method,
+                        tcfg: &TrainConfig, scfg: &SalaadConfig)
+                        -> Result<(BaselineResult, Trainer<'a>)> {
+    let mut trainer = Trainer::new(rt, cfg.clone(), method, tcfg.clone(),
+                                   scfg.clone())?;
+    trainer.run()?;
+    let eval_set = BatchLoader::eval_set(cfg.vocab, cfg.batch, cfg.seq_len,
+                                         tcfg.seed, tcfg.eval_batches);
+    let ppl_x = eval_ppl(rt, cfg, &trainer.params, &eval_set)?;
+    let (ppl_surrogate, surrogate_params) = if method.uses_admm() {
+        let sur = trainer.surrogate_params();
+        (Some(eval_ppl(rt, cfg, &sur, &eval_set)?),
+         Some(trainer.surrogate_param_count()))
+    } else {
+        (None, None)
+    };
+    let result = BaselineResult {
+        method: method.name().to_string(),
+        ppl_x,
+        ppl_surrogate,
+        dense_params: cfg.n_params(),
+        surrogate_params,
+        final_loss: trainer.history.trailing_loss(10).unwrap_or(f64::NAN),
+    };
+    Ok((result, trainer))
+}

@@ -1,0 +1,128 @@
+//! Lightweight CLI (the offline vendor set has no clap): subcommand +
+//! `--flag value` parsing with typed accessors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token is the subcommand, `--key value`
+    /// pairs become flags, bare `--key` at end-of-args or before another
+    /// flag becomes a switch.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(key.to_string(),
+                                         it.next().unwrap().clone());
+                    }
+                    _ => out.switches.push(key.to_string()),
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flag(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn positional_at(&self, i: usize) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing positional argument {i}"))
+    }
+
+    pub fn require_known_flags(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known: {known:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let a = Args::parse(&argv("train nano --steps 100 --verbose \
+                                   --lr 0.003")).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional_at(0).unwrap(), "nano");
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 100);
+        assert!((a.f64_flag("lr", 0.0).unwrap() - 0.003).abs() < 1e-12);
+        assert!(a.has("verbose"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("exp table1")).unwrap();
+        assert_eq!(a.usize_flag("steps", 42).unwrap(), 42);
+        assert_eq!(a.flag_or("scale", "micro"), "micro");
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("x --steps abc")).unwrap();
+        assert!(a.usize_flag("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = Args::parse(&argv("x --bogus 1")).unwrap();
+        assert!(a.require_known_flags(&["steps"]).is_err());
+        assert!(a.require_known_flags(&["bogus"]).is_ok());
+    }
+}

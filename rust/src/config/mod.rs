@@ -1,0 +1,12 @@
+//! Configuration: model geometry (mirrored from artifacts/manifest.json),
+//! training hyperparameters, SALAAD-specific knobs and deployment
+//! settings. All JSON round-trippable via `util::json`.
+
+pub mod model;
+pub mod train;
+pub mod salaad;
+pub mod cost;
+
+pub use model::ModelConfig;
+pub use train::TrainConfig;
+pub use salaad::SalaadConfig;

@@ -1,0 +1,179 @@
+//! Model geometry. The authoritative copy ships in
+//! `artifacts/manifest.json` (written by the AOT exporter); this module
+//! parses it and also carries the paper's full-size configs for
+//! parameter accounting.
+
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+
+/// LLaMA-style model geometry plus the canonical parameter layout.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    /// Canonical (name, shape) parameter ordering — identical to
+    /// `python/compile/configs.ModelConfig.param_spec()`.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Factored-parameter ordering for the `forward_slr` entrypoint.
+    pub slr_params: Vec<(String, Vec<usize>)>,
+    /// Blocks eligible for SLR induction (default: embed + projections).
+    pub selected_blocks: Vec<String>,
+    /// Same including the LM head (Appendix H experiments).
+    pub selected_blocks_with_head: Vec<String>,
+    /// Static rank padding per 2-D block in the forward_slr artifact.
+    pub rank_pad: std::collections::BTreeMap<String, usize>,
+    /// Entrypoint name -> artifact file name.
+    pub entrypoints: std::collections::BTreeMap<String, String>,
+}
+
+impl ModelConfig {
+    pub fn from_manifest(name: &str, j: &Json) -> Result<Self> {
+        let parse_params = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+            j.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let a = p.as_arr()?;
+                    Ok((a[0].as_str()?.to_string(), a[1].as_shape()?))
+                })
+                .collect()
+        };
+        let strings = |key: &str| -> Result<Vec<String>> {
+            j.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect()
+        };
+        let mut rank_pad = std::collections::BTreeMap::new();
+        for (k, v) in j.req("rank_pad")?.as_obj()? {
+            rank_pad.insert(k.clone(), v.as_usize()?);
+        }
+        let mut entrypoints = std::collections::BTreeMap::new();
+        if let Some(eps) = j.get("entrypoints") {
+            for (k, v) in eps.as_obj()? {
+                entrypoints.insert(k.clone(),
+                                   v.req("file")?.as_str()?.to_string());
+            }
+        }
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab: j.req("vocab")?.as_usize()?,
+            d_model: j.req("d_model")?.as_usize()?,
+            n_layers: j.req("n_layers")?.as_usize()?,
+            n_heads: j.req("n_heads")?.as_usize()?,
+            d_ff: j.req("d_ff")?.as_usize()?,
+            seq_len: j.req("seq_len")?.as_usize()?,
+            batch: j.get("batch").map(|b| b.as_usize()).transpose()?
+                .unwrap_or(8),
+            params: parse_params("params")?,
+            slr_params: j.get("slr_params").map(|_| parse_params("slr_params"))
+                .transpose()?.unwrap_or_default(),
+            selected_blocks: strings("selected_blocks").unwrap_or_default(),
+            selected_blocks_with_head:
+                strings("selected_blocks_with_head").unwrap_or_default(),
+            rank_pad,
+            entrypoints,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn shape_of(&self, name: &str) -> Result<&[usize]> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+            .ok_or_else(|| anyhow!("unknown parameter `{name}`"))
+    }
+
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("unknown parameter `{name}`"))
+    }
+
+    /// Deterministic parameter initialization — bit-mirror of
+    /// `python/compile/initrng.init_tensor` (see util::rng).
+    pub fn init_params(&self, seed: u64) -> Vec<crate::tensor::Tensor> {
+        self.params
+            .iter()
+            .map(|(name, shape)| {
+                crate::tensor::Tensor::init_param(name, shape, seed)
+            })
+            .collect()
+    }
+
+    /// Selected-block name list per experiment flags.
+    pub fn blocks(&self, include_embed: bool, include_head: bool)
+                  -> Vec<String> {
+        let base = if include_head {
+            &self.selected_blocks_with_head
+        } else {
+            &self.selected_blocks
+        };
+        base.iter()
+            .filter(|n| include_embed || n.as_str() != "embed")
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+              "vocab": 256, "d_model": 64, "n_layers": 1, "n_heads": 2,
+              "d_ff": 176, "seq_len": 128, "batch": 8,
+              "params": [["embed", [256, 64]], ["layers.0.wq", [64, 64]],
+                         ["lm_head", [256, 64]]],
+              "slr_params": [["embed.u", [256, 24]]],
+              "selected_blocks": ["embed", "layers.0.wq"],
+              "selected_blocks_with_head": ["embed", "layers.0.wq",
+                                            "lm_head"],
+              "rank_pad": {"embed": 24, "layers.0.wq": 24, "lm_head": 24},
+              "entrypoints": {"fwd_bwd": {"file": "fwd_bwd_nano.hlo.txt",
+                                          "tokens_shape": [8, 128]}}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest_fragment() {
+        let cfg = ModelConfig::from_manifest("nano", &sample_json()).unwrap();
+        assert_eq!(cfg.vocab, 256);
+        assert_eq!(cfg.params.len(), 3);
+        assert_eq!(cfg.shape_of("embed").unwrap(), &[256, 64]);
+        assert_eq!(cfg.param_index("lm_head").unwrap(), 2);
+        assert_eq!(cfg.entrypoints["fwd_bwd"], "fwd_bwd_nano.hlo.txt");
+        assert_eq!(cfg.n_params(), 256 * 64 + 64 * 64 + 256 * 64);
+    }
+
+    #[test]
+    fn block_selection_flags() {
+        let cfg = ModelConfig::from_manifest("nano", &sample_json()).unwrap();
+        assert_eq!(cfg.blocks(true, false),
+                   vec!["embed".to_string(), "layers.0.wq".to_string()]);
+        assert_eq!(cfg.blocks(false, false), vec!["layers.0.wq".to_string()]);
+        assert!(cfg.blocks(true, true).contains(&"lm_head".to_string()));
+    }
+
+    #[test]
+    fn unknown_param_errors() {
+        let cfg = ModelConfig::from_manifest("nano", &sample_json()).unwrap();
+        assert!(cfg.shape_of("nope").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! SALAAD-specific hyperparameters (the "second class" in §4.2): the
+//! single penalty coefficient ρ (via its scaling-law constant, Eq. 7),
+//! I-controller targets and step sizes, and the ADMM schedule (K, J).
+
+use crate::util::Json;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct SalaadConfig {
+    /// Proportionality constant c in ρ_i = c / (N √(nᵢ·mᵢ)) (Eq. 7).
+    /// The paper tunes this on the 60M/130M analogs and reuses it.
+    pub rho_const: f64,
+    /// Target effective rank ratio Γ̂ under energy coverage γ (§5.1:
+    /// 0.15 for all blocks including the embedding).
+    pub target_rank_ratio: f64,
+    /// Target density Υ̂ of the sparse component (§5.1: 0.05).
+    pub target_density: f64,
+    /// Energy coverage γ for the effective-rank definition (0.999).
+    pub gamma: f64,
+    /// I-controller step sizes: Δα ~ 1e-1, Δβ ~ 1e-3 (§5.1).
+    pub delta_alpha: f64,
+    pub delta_beta: f64,
+    /// First-stage gradient steps per ADMM phase (K in Alg. 1).
+    pub k_steps: usize,
+    /// Second-stage proximal iterations per phase (J; the paper uses 1).
+    pub j_iters: usize,
+    /// Include the embedding layer in SLR induction (§5.1 default: yes).
+    pub include_embed: bool,
+    /// Include the LM head (Appendix H: non-benign; default no).
+    pub include_head: bool,
+    /// Worker threads for the block-sharded ADMM phase (Appendix C's
+    /// "distribute surrogate blocks across GPUs" analog).
+    pub admm_workers: usize,
+    /// Initial α/β thresholds before the controller adapts them,
+    /// expressed as fractions of the block's mean |entry| scale.
+    pub alpha_init: f64,
+    pub beta_init: f64,
+    /// Emulate bfloat16 training (Appendix E analog).
+    pub bf16: bool,
+}
+
+impl Default for SalaadConfig {
+    fn default() -> Self {
+        SalaadConfig {
+            rho_const: 2.0,
+            target_rank_ratio: 0.15,
+            target_density: 0.05,
+            gamma: 0.999,
+            delta_alpha: 0.1,
+            delta_beta: 0.005,
+            k_steps: 10,
+            j_iters: 1,
+            include_embed: true,
+            include_head: false,
+            admm_workers: crate::util::parallel::default_workers(),
+            alpha_init: 0.5,
+            beta_init: 0.5,
+            bf16: false,
+        }
+    }
+}
+
+impl SalaadConfig {
+    /// Block-wise penalty ρ_i from the scaling law (Eq. 7):
+    /// ρ ∝ 1 / (N √(n·m)).
+    pub fn rho_for(&self, n_blocks: usize, n: usize, m: usize) -> f64 {
+        self.rho_const / (n_blocks.max(1) as f64 * ((n * m) as f64).sqrt())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("rho_const", Json::Num(self.rho_const))
+            .set("target_rank_ratio", Json::Num(self.target_rank_ratio))
+            .set("target_density", Json::Num(self.target_density))
+            .set("gamma", Json::Num(self.gamma))
+            .set("delta_alpha", Json::Num(self.delta_alpha))
+            .set("delta_beta", Json::Num(self.delta_beta))
+            .set("k_steps", Json::Num(self.k_steps as f64))
+            .set("j_iters", Json::Num(self.j_iters as f64))
+            .set("include_embed", Json::Bool(self.include_embed))
+            .set("include_head", Json::Bool(self.include_head))
+            .set("admm_workers", Json::Num(self.admm_workers as f64))
+            .set("alpha_init", Json::Num(self.alpha_init))
+            .set("beta_init", Json::Num(self.beta_init))
+            .set("bf16", Json::Bool(self.bf16));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = SalaadConfig::default();
+        let num = |k: &str, dv: f64| -> f64 {
+            j.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(dv)
+        };
+        let flag = |k: &str, dv: bool| -> bool {
+            j.get(k).and_then(|x| x.as_bool().ok()).unwrap_or(dv)
+        };
+        Ok(SalaadConfig {
+            rho_const: num("rho_const", d.rho_const),
+            target_rank_ratio: num("target_rank_ratio", d.target_rank_ratio),
+            target_density: num("target_density", d.target_density),
+            gamma: num("gamma", d.gamma),
+            delta_alpha: num("delta_alpha", d.delta_alpha),
+            delta_beta: num("delta_beta", d.delta_beta),
+            k_steps: num("k_steps", d.k_steps as f64) as usize,
+            j_iters: num("j_iters", d.j_iters as f64) as usize,
+            include_embed: flag("include_embed", d.include_embed),
+            include_head: flag("include_head", d.include_head),
+            admm_workers: num("admm_workers", d.admm_workers as f64) as usize,
+            alpha_init: num("alpha_init", d.alpha_init),
+            beta_init: num("beta_init", d.beta_init),
+            bf16: flag("bf16", d.bf16),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rho_scaling_law() {
+        let cfg = SalaadConfig { rho_const: 1.0, ..Default::default() };
+        // ρ halves when block count doubles.
+        let a = cfg.rho_for(10, 64, 64);
+        let b = cfg.rho_for(20, 64, 64);
+        assert!((a / b - 2.0).abs() < 1e-12);
+        // ρ scales as 1/sqrt(nm).
+        let c = cfg.rho_for(10, 256, 64);
+        assert!((a / c - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = SalaadConfig { rho_const: 3.5, include_head: true,
+                                 ..Default::default() };
+        let cfg2 = SalaadConfig::from_json(&cfg.to_json()).unwrap();
+        assert!((cfg2.rho_const - 3.5).abs() < 1e-12);
+        assert!(cfg2.include_head);
+    }
+}

@@ -1,0 +1,128 @@
+//! Base-optimizer training hyperparameters (the "first class" of
+//! hyperparameters in §4.2 — inherited unchanged by SALAAD).
+
+use crate::util::Json;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Total first-stage gradient steps.
+    pub steps: usize,
+    /// Peak learning rate (cosine decay after linear warmup).
+    pub lr: f64,
+    pub warmup_steps: usize,
+    /// Final LR as a fraction of peak.
+    pub min_lr_ratio: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Weight decay — the paper uses Adam with zero weight decay (§5.1).
+    pub weight_decay: f64,
+    pub grad_clip: f64,
+    pub seed: u64,
+    /// Evaluate PPL on held-out batches every `eval_every` steps.
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Log every `log_every` steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr: 3e-3,
+            warmup_steps: 30,
+            min_lr_ratio: 0.1,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            grad_clip: 1.0,
+            seed: 0,
+            eval_every: 100,
+            eval_batches: 8,
+            log_every: 20,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Cosine schedule with warmup.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if step < self.warmup_steps {
+            return self.lr * (step + 1) as f64 / self.warmup_steps as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let t = t.min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        self.lr * (self.min_lr_ratio + (1.0 - self.min_lr_ratio) * cos)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("steps", Json::Num(self.steps as f64))
+            .set("lr", Json::Num(self.lr))
+            .set("warmup_steps", Json::Num(self.warmup_steps as f64))
+            .set("min_lr_ratio", Json::Num(self.min_lr_ratio))
+            .set("beta1", Json::Num(self.beta1))
+            .set("beta2", Json::Num(self.beta2))
+            .set("eps", Json::Num(self.eps))
+            .set("weight_decay", Json::Num(self.weight_decay))
+            .set("grad_clip", Json::Num(self.grad_clip))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("eval_every", Json::Num(self.eval_every as f64))
+            .set("eval_batches", Json::Num(self.eval_batches as f64))
+            .set("log_every", Json::Num(self.log_every as f64));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = TrainConfig::default();
+        let num = |k: &str, dv: f64| -> f64 {
+            j.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(dv)
+        };
+        Ok(TrainConfig {
+            steps: num("steps", d.steps as f64) as usize,
+            lr: num("lr", d.lr),
+            warmup_steps: num("warmup_steps", d.warmup_steps as f64) as usize,
+            min_lr_ratio: num("min_lr_ratio", d.min_lr_ratio),
+            beta1: num("beta1", d.beta1),
+            beta2: num("beta2", d.beta2),
+            eps: num("eps", d.eps),
+            weight_decay: num("weight_decay", d.weight_decay),
+            grad_clip: num("grad_clip", d.grad_clip),
+            seed: num("seed", d.seed as f64) as u64,
+            eval_every: num("eval_every", d.eval_every as f64) as usize,
+            eval_batches: num("eval_batches", d.eval_batches as f64) as usize,
+            log_every: num("log_every", d.log_every as f64) as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig { steps: 100, warmup_steps: 10, lr: 1.0,
+                                min_lr_ratio: 0.1, ..Default::default() };
+        assert!(cfg.lr_at(0) < cfg.lr_at(9));
+        assert!((cfg.lr_at(9) - 1.0).abs() < 0.11);
+        assert!(cfg.lr_at(50) < cfg.lr_at(10));
+        // Floor at min_lr_ratio.
+        assert!(cfg.lr_at(99) >= 0.1 - 1e-9);
+        assert!(cfg.lr_at(1000) >= 0.1 - 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = TrainConfig { steps: 42, lr: 1.5e-3, ..Default::default() };
+        let j = cfg.to_json();
+        let cfg2 = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg2.steps, 42);
+        assert!((cfg2.lr - 1.5e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,240 @@
+//! Checkpoint I/O: parameters + SLR surrogate state + metadata.
+//!
+//! Layout of a checkpoint directory:
+//!   meta.json     — config name, method, step, hyperparameters
+//!   params.bin    — named tensor records (canonical order)
+//!   blocks.bin    — per-block surrogate state (u, s, v, sp, y, α, β, ρ)
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::slr::SlrBlock;
+use crate::tensor::Tensor;
+use crate::util::Json;
+
+const BLOCK_MAGIC: &[u8; 4] = b"SLBK";
+
+fn write_string(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_string(r: &mut impl Read) -> Result<String> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let len = u32::from_le_bytes(b4) as usize;
+    if len > 1 << 20 {
+        bail!("implausible string length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn write_f64(w: &mut impl Write, x: f64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    Ok(f64::from_le_bytes(b8))
+}
+
+/// Write named tensors to a file.
+pub fn save_named_tensors(path: &Path, items: &[(String, Tensor)])
+                          -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(&(items.len() as u32).to_le_bytes())?;
+    for (name, t) in items {
+        write_string(&mut w, name)?;
+        t.write_to(&mut w)?;
+    }
+    Ok(())
+}
+
+pub fn load_named_tensors(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = BufReader::new(File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?);
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+    if n > 1 << 20 {
+        bail!("implausible tensor count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = read_string(&mut r)?;
+        let t = Tensor::read_from(&mut r)?;
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+pub fn save_blocks(path: &Path, blocks: &[SlrBlock]) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BLOCK_MAGIC)?;
+    w.write_all(&(blocks.len() as u32).to_le_bytes())?;
+    for b in blocks {
+        write_string(&mut w, &b.name)?;
+        write_f64(&mut w, b.alpha)?;
+        write_f64(&mut w, b.beta)?;
+        write_f64(&mut w, b.rho)?;
+        b.u.write_to(&mut w)?;
+        Tensor::new(b.s.clone(), &[b.s.len()]).write_to(&mut w)?;
+        b.v.write_to(&mut w)?;
+        b.sp.write_to(&mut w)?;
+        b.y.write_to(&mut w)?;
+    }
+    Ok(())
+}
+
+pub fn load_blocks(path: &Path) -> Result<Vec<SlrBlock>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != BLOCK_MAGIC {
+        bail!("bad blocks magic");
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = read_string(&mut r)?;
+        let alpha = read_f64(&mut r)?;
+        let beta = read_f64(&mut r)?;
+        let rho = read_f64(&mut r)?;
+        let u = Tensor::read_from(&mut r)?;
+        let s = Tensor::read_from(&mut r)?;
+        let v = Tensor::read_from(&mut r)?;
+        let sp = Tensor::read_from(&mut r)?;
+        let y = Tensor::read_from(&mut r)?;
+        let (n_rows, m_cols) = (sp.shape[0], sp.shape[1]);
+        out.push(SlrBlock {
+            name, n: n_rows, m: m_cols, u, s: s.data, v, sp, y, alpha,
+            beta, rho,
+        });
+    }
+    Ok(out)
+}
+
+/// Save a full training checkpoint.
+pub fn save_checkpoint(dir: &Path, cfg_name: &str, method: &str,
+                       step: usize, params: &[(String, Tensor)],
+                       blocks: &[SlrBlock], extra: Json) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut meta = Json::obj();
+    meta.set("config", Json::Str(cfg_name.to_string()))
+        .set("method", Json::Str(method.to_string()))
+        .set("step", Json::Num(step as f64))
+        .set("extra", extra);
+    meta.write_file(&dir.join("meta.json"))?;
+    save_named_tensors(&dir.join("params.bin"), params)?;
+    save_blocks(&dir.join("blocks.bin"), blocks)?;
+    Ok(())
+}
+
+pub struct Checkpoint {
+    pub meta: Json,
+    pub params: Vec<(String, Tensor)>,
+    pub blocks: Vec<SlrBlock>,
+}
+
+pub fn load_checkpoint(dir: &Path) -> Result<Checkpoint> {
+    let meta = Json::parse_file(&dir.join("meta.json"))?;
+    let params = load_named_tensors(&dir.join("params.bin"))?;
+    let blocks = load_blocks(&dir.join("blocks.bin"))?;
+    Ok(Checkpoint { meta, params, blocks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("salaad_test_{name}_{}",
+                                                  std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn named_tensor_roundtrip() {
+        let mut rng = Rng::new(0);
+        let items = vec![
+            ("embed".to_string(), Tensor::randn(&[6, 4], &mut rng, 1.0)),
+            ("norm".to_string(), Tensor::ones(&[4])),
+        ];
+        let d = tmpdir("named");
+        let p = d.join("t.bin");
+        save_named_tensors(&p, &items).unwrap();
+        let back = load_named_tensors(&p).unwrap();
+        assert_eq!(items.len(), back.len());
+        for ((n1, t1), (n2, t2)) in items.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut b = SlrBlock::new("layers.0.wq", 8, 6, 0.01, 0.5, 0.5);
+        b.u = Tensor::randn(&[8, 3], &mut rng, 1.0);
+        b.s = vec![3.0, 2.0, 1.0];
+        b.v = Tensor::randn(&[6, 3], &mut rng, 1.0);
+        b.sp = Tensor::randn(&[8, 6], &mut rng, 0.1);
+        b.y = Tensor::randn(&[8, 6], &mut rng, 0.1);
+        b.alpha = 0.123;
+        let d = tmpdir("blocks");
+        let p = d.join("b.bin");
+        save_blocks(&p, &[b.clone()]).unwrap();
+        let back = load_blocks(&p).unwrap();
+        assert_eq!(back.len(), 1);
+        let b2 = &back[0];
+        assert_eq!(b2.name, b.name);
+        assert_eq!(b2.s, b.s);
+        assert_eq!(b2.u, b.u);
+        assert_eq!(b2.sp, b.sp);
+        assert_eq!(b2.y, b.y);
+        assert_eq!(b2.alpha, b.alpha);
+        assert_eq!((b2.n, b2.m), (8, 6));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn full_checkpoint_roundtrip() {
+        let mut rng = Rng::new(2);
+        let params = vec![("w".to_string(),
+                           Tensor::randn(&[4, 4], &mut rng, 1.0))];
+        let blocks = vec![SlrBlock::new("w", 4, 4, 0.1, 0.5, 0.5)];
+        let d = tmpdir("ckpt");
+        save_checkpoint(&d, "nano", "salaad", 42, &params, &blocks,
+                        Json::obj()).unwrap();
+        let ck = load_checkpoint(&d).unwrap();
+        assert_eq!(ck.meta.req("config").unwrap().as_str().unwrap(), "nano");
+        assert_eq!(ck.meta.req("step").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(ck.params[0].1, params[0].1);
+        assert_eq!(ck.blocks[0].name, "w");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let d = tmpdir("corrupt");
+        let p = d.join("bad.bin");
+        std::fs::write(&p, b"garbage").unwrap();
+        assert!(load_blocks(&p).is_err());
+        assert!(load_named_tensors(&p).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

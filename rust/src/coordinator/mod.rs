@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the paper's Algorithm 1 as a system.
+//!
+//! The [`Trainer`] drives the two-stage schedule — K guided-learning
+//! gradient steps through the AOT-compiled `fwd_bwd` executable, then a
+//! block-sharded ADMM structural phase across a worker pool, then the
+//! I-controller — while recording the Figure 2 wall-clock breakdown and
+//! the Appendix F learning-dynamics traces. One trainer serves SALAAD
+//! and the entire Table 1 baseline family via [`Method`].
+
+pub mod state;
+pub mod scheduler;
+pub mod trainer;
+pub mod checkpoint;
+
+pub use scheduler::{run_admm_phase, AdmmPhaseResult};
+pub use state::{Method, PhaseRecord, TrainHistory};
+pub use trainer::Trainer;

@@ -1,0 +1,174 @@
+//! Block-sharded ADMM phase scheduler.
+//!
+//! The surrogate blocks are fully decoupled (block-wise I-controller,
+//! Appendix C), so the structural phase distributes them across a worker
+//! pool — the CPU analog of the paper's "one surrogate block per GPU".
+//! Blocks are bin-packed by estimated SVD cost (longest-processing-time
+//! heuristic) so the embedding block doesn't straggle a whole phase, and
+//! per-worker wall-clock is recorded for the Figure 2 sync-overhead
+//! breakdown.
+
+use crate::slr::admm::{admm_update, AdmmStats};
+use crate::slr::SlrBlock;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct AdmmPhaseResult {
+    /// Stats per block, in the original block order.
+    pub stats: Vec<AdmmStats>,
+    /// Busy seconds per worker.
+    pub worker_secs: Vec<f64>,
+    /// Wall-clock of the whole phase (max worker + join overhead).
+    pub wall_secs: f64,
+    /// Straggler waste: Σ(max_worker − worker_i) — the "inter-GPU sync"
+    /// analog in Figure 2.
+    pub sync_secs: f64,
+}
+
+/// Run one structural phase over all blocks.
+///
+/// `xs[i]` is the dense snapshot of the parameter tensor for `blocks[i]`;
+/// `rank_caps[i]` bounds the randomized SVT sketch.
+pub fn run_admm_phase(blocks: &mut [SlrBlock], xs: &[Tensor],
+                      rank_caps: &[usize], workers: usize, j_iters: usize,
+                      gamma: f64, seed: u64) -> AdmmPhaseResult {
+    assert_eq!(blocks.len(), xs.len());
+    assert_eq!(blocks.len(), rank_caps.len());
+    let n = blocks.len();
+    let workers = workers.max(1).min(n.max(1));
+    let t0 = std::time::Instant::now();
+
+    // LPT bin packing by estimated SVD cost ~ n*m*min(n,m).
+    let mut order: Vec<usize> = (0..n).collect();
+    let cost = |b: &SlrBlock| (b.n * b.m * b.n.min(b.m)) as u64;
+    order.sort_by_key(|&i| std::cmp::Reverse(cost(&blocks[i])));
+    let mut bins: Vec<Vec<usize>> = vec![Vec::new(); workers];
+    let mut bin_cost = vec![0u64; workers];
+    for i in order {
+        let w = (0..workers).min_by_key(|&w| bin_cost[w]).unwrap();
+        bins[w].push(i);
+        bin_cost[w] += cost(&blocks[i]);
+    }
+
+    // Move blocks out so each worker owns its set.
+    let mut slots: Vec<Option<SlrBlock>> =
+        blocks.iter().map(|b| Some(b.clone())).collect();
+    let mut results: Vec<Option<(SlrBlock, AdmmStats)>> =
+        (0..n).map(|_| None).collect();
+    let mut worker_secs = vec![0.0f64; workers];
+    {
+        // Per-worker take: (bin, Vec<(idx, block)>)
+        let work: Vec<(usize, Vec<(usize, SlrBlock)>)> = bins
+            .iter()
+            .enumerate()
+            .map(|(w, bin)| {
+                (w, bin.iter().map(|&i| (i, slots[i].take().unwrap()))
+                    .collect())
+            })
+            .collect();
+        let out = std::sync::Mutex::new(&mut results);
+        let secs = std::sync::Mutex::new(&mut worker_secs);
+        std::thread::scope(|scope| {
+            for (w, items) in work {
+                let out = &out;
+                let secs = &secs;
+                let xs = &xs;
+                let rank_caps = &rank_caps;
+                scope.spawn(move || {
+                    let tw = std::time::Instant::now();
+                    for (i, mut block) in items {
+                        let mut rng =
+                            Rng::named(&format!("admm.{}", block.name),
+                                       seed);
+                        let st = admm_update(&mut block, &xs[i], j_iters,
+                                             rank_caps[i], gamma,
+                                             &mut rng);
+                        out.lock().unwrap()[i] = Some((block, st));
+                    }
+                    secs.lock().unwrap()[w] = tw.elapsed().as_secs_f64();
+                });
+            }
+        });
+    }
+
+    let mut stats = Vec::with_capacity(n);
+    for (i, r) in results.into_iter().enumerate() {
+        let (block, st) = r.expect("missing block result");
+        blocks[i] = block;
+        stats.push(st);
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let max_w = worker_secs.iter().cloned().fold(0.0, f64::max);
+    let sync_secs: f64 = worker_secs.iter().map(|s| max_w - s).sum();
+    AdmmPhaseResult { stats, worker_secs, wall_secs, sync_secs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_blocks(sizes: &[(usize, usize)], rng: &mut Rng)
+                 -> (Vec<SlrBlock>, Vec<Tensor>, Vec<usize>) {
+        let blocks: Vec<SlrBlock> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, (n, m))| {
+                let mut b = SlrBlock::new(&format!("b{i}"), *n, *m, 1.0,
+                                          0.0, 0.0);
+                b.alpha = 0.1;
+                b.beta = 0.1;
+                b
+            })
+            .collect();
+        let xs: Vec<Tensor> = sizes
+            .iter()
+            .map(|(n, m)| Tensor::randn(&[*n, *m], rng, 0.5))
+            .collect();
+        let caps: Vec<usize> =
+            sizes.iter().map(|(n, m)| *n.min(m)).collect();
+        (blocks, xs, caps)
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(0);
+        let sizes = [(20, 16), (12, 30), (8, 8), (24, 24), (10, 40)];
+        let (mut b1, xs, caps) = mk_blocks(&sizes, &mut rng);
+        let mut b2 = b1.clone();
+        let r1 = run_admm_phase(&mut b1, &xs, &caps, 1, 1, 0.999, 7);
+        let r4 = run_admm_phase(&mut b2, &xs, &caps, 4, 1, 0.999, 7);
+        for (a, b) in b1.iter().zip(&b2) {
+            assert_eq!(a.rank(), b.rank(), "rank mismatch {}", a.name);
+            assert!(a.sp.dist_frob(&b.sp) < 1e-6);
+            assert!(a.y.dist_frob(&b.y) < 1e-6);
+        }
+        for (s1, s4) in r1.stats.iter().zip(&r4.stats) {
+            assert_eq!(s1.name, s4.name);
+            assert!((s1.recon_error - s4.recon_error).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn stats_in_original_order() {
+        let mut rng = Rng::new(1);
+        let sizes = [(30, 8), (8, 8), (16, 16)];
+        let (mut blocks, xs, caps) = mk_blocks(&sizes, &mut rng);
+        let r = run_admm_phase(&mut blocks, &xs, &caps, 2, 1, 0.999, 0);
+        assert_eq!(r.stats.len(), 3);
+        for (i, st) in r.stats.iter().enumerate() {
+            assert_eq!(st.name, format!("b{i}"));
+        }
+        assert_eq!(r.worker_secs.len(), 2);
+        assert!(r.wall_secs > 0.0);
+        assert!(r.sync_secs >= 0.0);
+    }
+
+    #[test]
+    fn single_block_single_worker() {
+        let mut rng = Rng::new(2);
+        let (mut blocks, xs, caps) = mk_blocks(&[(12, 12)], &mut rng);
+        let r = run_admm_phase(&mut blocks, &xs, &caps, 8, 1, 0.999, 0);
+        assert_eq!(r.stats.len(), 1);
+        assert_eq!(r.worker_secs.len(), 1);
+    }
+}

@@ -1,0 +1,263 @@
+//! Training method selection and run history.
+
+use crate::util::Json;
+
+/// Which Table 1 method this run implements. SALAAD and the two
+//  fixed-structure methods share the ADMM machinery; the others are
+/// optimizer-side baselines over dense weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Vanilla dense pretraining (Adam).
+    FullRank,
+    /// The paper's method: penalty + ADMM + I-controller.
+    Salaad,
+    /// SLTrain analog: fixed thresholds, no controller (structure fixed
+    /// before training; layer-agnostic).
+    SlTrainFixed,
+    /// LOST analog: thresholds calibrated once from each block's initial
+    /// spectrum (spectral heuristic), then fixed.
+    LostLike,
+    /// GaLore: low-rank gradient projection, dense at inference.
+    Galore,
+    /// LoRA analog: rank-constrained updates, fixed subspace.
+    Lora,
+    /// ReLoRA analog: rank-constrained updates with subspace restarts.
+    ReLora,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FullRank => "full-rank",
+            Method::Salaad => "salaad",
+            Method::SlTrainFixed => "sltrain",
+            Method::LostLike => "lost",
+            Method::Galore => "galore",
+            Method::Lora => "lora",
+            Method::ReLora => "relora",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "full-rank" | "fullrank" | "dense" => Method::FullRank,
+            "salaad" => Method::Salaad,
+            "sltrain" => Method::SlTrainFixed,
+            "lost" => Method::LostLike,
+            "galore" => Method::Galore,
+            "lora" => Method::Lora,
+            "relora" => Method::ReLora,
+            _ => return None,
+        })
+    }
+
+    /// Does this method maintain SLR surrogate blocks?
+    pub fn uses_admm(&self) -> bool {
+        matches!(self, Method::Salaad | Method::SlTrainFixed
+                 | Method::LostLike)
+    }
+
+    /// Does the I-controller adapt thresholds during training?
+    pub fn uses_controller(&self) -> bool {
+        matches!(self, Method::Salaad)
+    }
+
+    /// Calibrate fixed thresholds from the initial spectrum (LOST).
+    pub fn calibrates_once(&self) -> bool {
+        matches!(self, Method::LostLike)
+    }
+
+    pub fn all() -> [Method; 7] {
+        [Method::FullRank, Method::Salaad, Method::SlTrainFixed,
+         Method::LostLike, Method::Galore, Method::Lora, Method::ReLora]
+    }
+}
+
+/// Per-ADMM-phase snapshot of structural state (Appendix F traces).
+#[derive(Clone, Debug)]
+pub struct PhaseRecord {
+    pub step: usize,
+    /// Mean reconstruction error δ̄ across blocks.
+    pub avg_recon: f64,
+    /// Per-block (name, rank ratio, density, recon error).
+    pub blocks: Vec<(String, f64, f64, f64)>,
+}
+
+/// Scalar training traces.
+#[derive(Clone, Debug, Default)]
+pub struct TrainHistory {
+    pub steps: Vec<usize>,
+    pub losses: Vec<f64>,
+    pub penalty_losses: Vec<f64>,
+    pub grad_norms: Vec<f64>,
+    pub phases: Vec<PhaseRecord>,
+    /// (step, eval ppl) pairs.
+    pub evals: Vec<(usize, f64)>,
+}
+
+impl TrainHistory {
+    pub fn final_loss(&self) -> Option<f64> {
+        self.losses.last().copied()
+    }
+
+    /// Mean loss over the trailing `n` logged steps.
+    pub fn trailing_loss(&self, n: usize) -> Option<f64> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let k = self.losses.len().min(n.max(1));
+        Some(self.losses[self.losses.len() - k..].iter().sum::<f64>()
+             / k as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("steps", Json::from_f64s(
+            &self.steps.iter().map(|s| *s as f64).collect::<Vec<_>>()));
+        j.set("losses", Json::from_f64s(&self.losses));
+        j.set("penalty_losses", Json::from_f64s(&self.penalty_losses));
+        j.set("grad_norms", Json::from_f64s(&self.grad_norms));
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("step", Json::Num(p.step as f64));
+                o.set("avg_recon", Json::Num(p.avg_recon));
+                let blocks: Vec<Json> = p
+                    .blocks
+                    .iter()
+                    .map(|(n, r, d, e)| {
+                        Json::Arr(vec![Json::Str(n.clone()), Json::Num(*r),
+                                       Json::Num(*d), Json::Num(*e)])
+                    })
+                    .collect();
+                o.set("blocks", Json::Arr(blocks));
+                o
+            })
+            .collect();
+        j.set("phases", Json::Arr(phases));
+        let evals: Vec<Json> = self
+            .evals
+            .iter()
+            .map(|(s, p)| Json::Arr(vec![Json::Num(*s as f64),
+                                         Json::Num(*p)]))
+            .collect();
+        j.set("evals", Json::Arr(evals));
+        j
+    }
+}
+
+impl TrainHistory {
+    pub fn from_json(j: &Json) -> Option<TrainHistory> {
+        let nums = |key: &str| -> Option<Vec<f64>> {
+            j.get(key)?
+                .as_arr()
+                .ok()?
+                .iter()
+                .map(|x| x.as_f64().ok())
+                .collect()
+        };
+        let mut h = TrainHistory {
+            steps: nums("steps")?.iter().map(|x| *x as usize).collect(),
+            losses: nums("losses")?,
+            penalty_losses: nums("penalty_losses").unwrap_or_default(),
+            grad_norms: nums("grad_norms").unwrap_or_default(),
+            phases: Vec::new(),
+            evals: Vec::new(),
+        };
+        if let Some(phases) = j.get("phases").and_then(|p| p.as_arr().ok()) {
+            for p in phases {
+                let step = p.get("step")?.as_f64().ok()? as usize;
+                let avg_recon = p.get("avg_recon")?.as_f64().ok()?;
+                let mut blocks = Vec::new();
+                if let Some(bs) = p.get("blocks").and_then(|b| b.as_arr().ok()) {
+                    for b in bs {
+                        let a = b.as_arr().ok()?;
+                        blocks.push((a[0].as_str().ok()?.to_string(),
+                                     a[1].as_f64().ok()?,
+                                     a[2].as_f64().ok()?,
+                                     a[3].as_f64().ok()?));
+                    }
+                }
+                h.phases.push(PhaseRecord { step, avg_recon, blocks });
+            }
+        }
+        if let Some(evals) = j.get("evals").and_then(|e| e.as_arr().ok()) {
+            for e in evals {
+                let a = e.as_arr().ok()?;
+                h.evals.push((a[0].as_f64().ok()? as usize,
+                              a[1].as_f64().ok()?));
+            }
+        }
+        Some(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_json_roundtrip() {
+        let mut h = TrainHistory::default();
+        h.steps = vec![0, 1, 2];
+        h.losses = vec![5.0, 4.0, 3.5];
+        h.penalty_losses = vec![0.0, 0.1, 0.2];
+        h.grad_norms = vec![1.0, 0.9, 0.8];
+        h.phases.push(PhaseRecord {
+            step: 2,
+            avg_recon: 0.5,
+            blocks: vec![("embed".into(), 0.2, 0.05, 0.1)],
+        });
+        h.evals.push((2, 42.0));
+        let h2 = TrainHistory::from_json(&h.to_json()).unwrap();
+        assert_eq!(h2.steps, h.steps);
+        assert_eq!(h2.losses, h.losses);
+        assert_eq!(h2.phases.len(), 1);
+        assert_eq!(h2.phases[0].blocks[0].0, "embed");
+        assert_eq!(h2.evals, h.evals);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn method_flags() {
+        assert!(Method::Salaad.uses_admm());
+        assert!(Method::Salaad.uses_controller());
+        assert!(!Method::SlTrainFixed.uses_controller());
+        assert!(Method::LostLike.calibrates_once());
+        assert!(!Method::FullRank.uses_admm());
+        assert!(!Method::Galore.uses_admm());
+    }
+
+    #[test]
+    fn trailing_loss() {
+        let mut h = TrainHistory::default();
+        h.losses = vec![10.0, 2.0, 4.0];
+        assert_eq!(h.trailing_loss(2), Some(3.0));
+        assert_eq!(h.trailing_loss(100), Some(16.0 / 3.0));
+        assert_eq!(TrainHistory::default().trailing_loss(3), None);
+    }
+
+    #[test]
+    fn history_json_has_traces() {
+        let mut h = TrainHistory::default();
+        h.steps = vec![0, 1];
+        h.losses = vec![5.0, 4.0];
+        h.phases.push(PhaseRecord {
+            step: 1,
+            avg_recon: 0.5,
+            blocks: vec![("embed".into(), 0.2, 0.05, 0.1)],
+        });
+        let j = h.to_json();
+        assert_eq!(j.req("losses").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("phases").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Data pipeline: synthetic Zipf-Markov corpus (the C4 stand-in, see
+//! DESIGN.md §3), deterministic batch loader, a small word-level
+//! tokenizer for the text-facing demos, and downstream probe task
+//! generators (the lm-evaluation-harness stand-in for Table 2).
+
+pub mod synth;
+pub mod loader;
+pub mod tokenizer;
+pub mod tasks;
+
+pub use synth::ZipfMarkov;
+pub use loader::BatchLoader;
+pub use tokenizer::Tokenizer;

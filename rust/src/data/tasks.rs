@@ -1,0 +1,168 @@
+//! Downstream zero-shot probe tasks (Table 2 stand-in).
+//!
+//! Six task families mirroring the response styles of the paper's suite
+//! (MMLU, ARC-C, COPA, HellaSwag, BoolQ, PIQA). Each probe is a context
+//! plus `n_choices` candidate continuations over the model vocabulary;
+//! exactly one continuation is *consistent with the corpus process*
+//! (bigram successor / copy structure), the rest are corrupted. Scoring
+//! is length-normalized log-probability — the same decision rule
+//! lm-evaluation-harness applies to multiple-choice tasks — so the
+//! *scoring code path* matches the paper even though the content is
+//! synthetic (DESIGN.md §3).
+
+use super::synth::ZipfMarkov;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Probe {
+    pub context: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskFamily {
+    /// 4-way successor knowledge (MMLU-style breadth).
+    Mmlu,
+    /// 4-way multi-token consistent continuation (ARC-C style).
+    ArcC,
+    /// 2-way cause/effect: which continuation follows (COPA style).
+    Copa,
+    /// 4-way long continuation plausibility (HellaSwag style).
+    HellaSwag,
+    /// 2-way yes/no: does the context contain a copy event (BoolQ style).
+    BoolQ,
+    /// 2-way short continuation (PIQA style).
+    Piqa,
+}
+
+impl TaskFamily {
+    pub fn all() -> [TaskFamily; 6] {
+        [TaskFamily::Mmlu, TaskFamily::ArcC, TaskFamily::Copa,
+         TaskFamily::HellaSwag, TaskFamily::BoolQ, TaskFamily::Piqa]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskFamily::Mmlu => "MMLU",
+            TaskFamily::ArcC => "ARC-C",
+            TaskFamily::Copa => "COPA",
+            TaskFamily::HellaSwag => "HellaSwag",
+            TaskFamily::BoolQ => "BoolQ",
+            TaskFamily::Piqa => "PIQA",
+        }
+    }
+
+    fn n_choices(&self) -> usize {
+        match self {
+            TaskFamily::Mmlu | TaskFamily::ArcC | TaskFamily::HellaSwag => 4,
+            _ => 2,
+        }
+    }
+
+    fn continuation_len(&self) -> usize {
+        match self {
+            TaskFamily::Mmlu => 1,
+            TaskFamily::Copa | TaskFamily::Piqa => 2,
+            TaskFamily::ArcC | TaskFamily::BoolQ => 3,
+            TaskFamily::HellaSwag => 6,
+        }
+    }
+}
+
+/// Generate `n` probes for a family over vocabulary `vocab`.
+///
+/// `ctx_len` counts context tokens; context + longest continuation must
+/// fit in the model's seq_len.
+pub fn generate(family: TaskFamily, vocab: usize, ctx_len: usize, n: usize,
+                seed: u64) -> Vec<Probe> {
+    let mut rng = Rng::named(family.name(), seed);
+    // Same corpus *structure* the model was trained on (structure seed =
+    // training seed), independent stream so probes are unseen text.
+    let stream = crate::util::rng::fnv1a64(family.name()) ^ seed ^ 0xBEEF;
+    let mut corpus = ZipfMarkov::split(vocab, seed, stream);
+    let mut probes = Vec::with_capacity(n);
+    let cont_len = family.continuation_len();
+    let n_choices = family.n_choices();
+    for _ in 0..n {
+        // Context drawn from the real corpus process so the model's
+        // learned statistics apply.
+        let stream = corpus.fill(ctx_len + cont_len);
+        let context = stream[..ctx_len].to_vec();
+        let truth = stream[ctx_len..].to_vec();
+        let mut choices = Vec::with_capacity(n_choices);
+        let answer = rng.next_below(n_choices as u64) as usize;
+        for c in 0..n_choices {
+            if c == answer {
+                choices.push(truth.clone());
+            } else {
+                // Corrupt: replace every token with a uniform draw that
+                // avoids the truthful token (breaking the bigram/copy
+                // consistency the corpus rewards).
+                let corrupted: Vec<u32> = truth
+                    .iter()
+                    .map(|t| {
+                        let mut x = rng.next_below(vocab as u64) as u32;
+                        if x == *t {
+                            x = (x + 1) % vocab as u32;
+                        }
+                        x
+                    })
+                    .collect();
+                choices.push(corrupted);
+            }
+        }
+        probes.push(Probe { context, choices, answer });
+    }
+    probes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_per_family() {
+        for fam in TaskFamily::all() {
+            let ps = generate(fam, 256, 32, 10, 0);
+            assert_eq!(ps.len(), 10);
+            for p in &ps {
+                assert_eq!(p.context.len(), 32);
+                assert_eq!(p.choices.len(), fam.n_choices());
+                assert!(p.answer < p.choices.len());
+                for c in &p.choices {
+                    assert_eq!(c.len(), fam.continuation_len());
+                    assert!(c.iter().all(|t| (*t as usize) < 256));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(TaskFamily::Copa, 128, 16, 5, 3);
+        let b = generate(TaskFamily::Copa, 128, 16, 5, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn distractors_differ_from_answer() {
+        for p in generate(TaskFamily::Mmlu, 256, 16, 50, 1) {
+            for (i, c) in p.choices.iter().enumerate() {
+                if i != p.answer {
+                    assert_ne!(c, &p.choices[p.answer]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn answer_positions_vary() {
+        let ps = generate(TaskFamily::ArcC, 256, 16, 40, 2);
+        let firsts = ps.iter().filter(|p| p.answer == 0).count();
+        assert!(firsts < 40, "answer position never varies");
+    }
+}

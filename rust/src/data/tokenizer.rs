@@ -1,0 +1,99 @@
+//! Word-level tokenizer for the text-facing serving demo.
+//!
+//! The training pipeline works directly on token ids; this tokenizer
+//! gives the serving example a human-readable surface: every token id
+//! maps to a deterministic pseudo-word (CV-syllable pattern seeded by
+//! the id), and `encode` inverts that mapping with an unknown-token
+//! fallback.
+
+use crate::util::rng::{fnv1a64, Rng};
+use std::collections::HashMap;
+
+pub struct Tokenizer {
+    pub vocab: usize,
+    words: Vec<String>,
+    index: HashMap<String, u32>,
+    pub unk: u32,
+}
+
+const CONSONANTS: &[u8] = b"bcdfghjklmnprstvwz";
+const VOWELS: &[u8] = b"aeiou";
+
+fn synth_word(id: usize, seed: u64) -> String {
+    let mut rng = Rng::new(fnv1a64("word") ^ seed ^ ((id as u64) << 20));
+    let syllables = 1 + (id % 3).min(2) + rng.next_below(2) as usize;
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push(CONSONANTS[rng.next_below(CONSONANTS.len() as u64) as usize]
+            as char);
+        w.push(VOWELS[rng.next_below(VOWELS.len() as u64) as usize] as char);
+    }
+    w
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut words = Vec::with_capacity(vocab);
+        let mut index = HashMap::new();
+        for id in 0..vocab {
+            // Guarantee uniqueness by suffixing collisions with the id.
+            let mut w = synth_word(id, seed);
+            if index.contains_key(&w) {
+                w = format!("{w}{id}");
+            }
+            index.insert(w.clone(), id as u32);
+            words.push(w);
+        }
+        Tokenizer { vocab, words, index, unk: 0 }
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|t| self.words.get(*t as usize).map(|s| s.as_str())
+                 .unwrap_or("?"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .map(|w| self.index.get(w).copied().unwrap_or(self.unk))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = Tokenizer::new(256, 0);
+        let toks: Vec<u32> = vec![1, 5, 200, 31];
+        let text = tk.decode(&toks);
+        assert_eq!(tk.encode(&text), toks);
+    }
+
+    #[test]
+    fn vocabulary_is_unique() {
+        let tk = Tokenizer::new(512, 1);
+        let mut ws = tk.words.clone();
+        ws.sort();
+        ws.dedup();
+        assert_eq!(ws.len(), 512);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let tk = Tokenizer::new(64, 0);
+        assert_eq!(tk.encode("zzzzzzzzzz"), vec![tk.unk]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Tokenizer::new(128, 9);
+        let b = Tokenizer::new(128, 9);
+        assert_eq!(a.words, b.words);
+    }
+}

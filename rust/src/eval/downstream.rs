@@ -1,0 +1,94 @@
+//! Zero-shot multiple-choice scoring (the lm-evaluation-harness decision
+//! rule): for each probe, score every candidate continuation by
+//! length-normalized log-probability under the model and pick the
+//! argmax. Accuracy per task family reproduces Table 2's analog.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::data::tasks::{generate, Probe, TaskFamily};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct TaskScore {
+    pub task: String,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Log-probability of `choice` tokens following `context`, using the
+/// full-logits entrypoint (batch 1).
+fn choice_logprob(rt: &Runtime, cfg: &ModelConfig, params: &[Tensor],
+                  context: &[u32], choice: &[u32]) -> Result<f64> {
+    let t = cfg.seq_len;
+    // Sequence = context ++ choice, left-padded to fixed length with 0s
+    // (scores are read only at choice positions, so padding is inert).
+    let mut seq: Vec<i32> = Vec::with_capacity(t);
+    let used = context.len() + choice.len();
+    assert!(used <= t, "probe longer than seq_len");
+    seq.extend(context.iter().map(|x| *x as i32));
+    seq.extend(choice.iter().map(|x| *x as i32));
+    seq.resize(t, 0);
+
+    let exe = rt.load_entry(cfg, "logits")?;
+    let inputs = rt.pack_inputs(cfg, params, &seq, 1)?;
+    let out = exe.run_tensors(&inputs)?;
+    let logits = &out[0]; // (1, T, vocab)
+    let v = cfg.vocab;
+    let mut lp = 0.0f64;
+    for (k, tok) in choice.iter().enumerate() {
+        // Token at position context.len()+k is predicted from position
+        // context.len()+k-1.
+        let pos = context.len() + k - 1;
+        let row = &logits.data[pos * v..(pos + 1) * v];
+        // log softmax at the target token.
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logz: f64 = row
+            .iter()
+            .map(|x| ((x - maxv) as f64).exp())
+            .sum::<f64>()
+            .ln()
+            + maxv as f64;
+        lp += row[*tok as usize] as f64 - logz;
+    }
+    Ok(lp / choice.len() as f64)
+}
+
+/// Accuracy of the model on a set of probes.
+pub fn score_probes(rt: &Runtime, cfg: &ModelConfig, params: &[Tensor],
+                    probes: &[Probe]) -> Result<f64> {
+    let mut correct = 0usize;
+    for p in probes {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (c, choice) in p.choices.iter().enumerate() {
+            let lp = choice_logprob(rt, cfg, params, &p.context, choice)?;
+            if lp > best.0 {
+                best = (lp, c);
+            }
+        }
+        if best.1 == p.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / probes.len().max(1) as f64)
+}
+
+/// Evaluate one task family with `n` generated probes.
+pub fn eval_task(rt: &Runtime, cfg: &ModelConfig, params: &[Tensor],
+                 family: TaskFamily, n: usize, seed: u64)
+                 -> Result<TaskScore> {
+    let ctx_len = (cfg.seq_len / 2).min(48);
+    let probes = generate(family, cfg.vocab, ctx_len, n, seed);
+    let accuracy = score_probes(rt, cfg, params, &probes)?;
+    Ok(TaskScore { task: family.name().to_string(), accuracy, n })
+}
+
+/// The full six-family suite.
+pub fn eval_suite(rt: &Runtime, cfg: &ModelConfig, params: &[Tensor],
+                  n_per_task: usize, seed: u64) -> Result<Vec<TaskScore>> {
+    TaskFamily::all()
+        .iter()
+        .map(|f| eval_task(rt, cfg, params, *f, n_per_task, seed))
+        .collect()
+}

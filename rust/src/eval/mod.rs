@@ -1,0 +1,8 @@
+//! Evaluation: exact perplexity pooling over held-out batches and the
+//! zero-shot downstream probe suite (Table 2 analog).
+
+pub mod ppl;
+pub mod downstream;
+
+pub use ppl::eval_ppl;
+pub use downstream::{eval_task, eval_suite, TaskScore};

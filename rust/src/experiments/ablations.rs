@@ -1,0 +1,139 @@
+//! Hyperparameter ablations: Table 3 (Δβ, Δα at the 350M-analog scale),
+//! Table 4 (ρ under fixed (Δα, Δβ) pairs), and the Appendix I grids
+//! (Tables 7-9 at the 130M-analog scale).
+
+use anyhow::Result;
+
+use super::common::{emit, eval_set, prm, trained, ExpOptions, Table};
+use crate::coordinator::Method;
+use crate::eval::eval_ppl;
+use crate::runtime::Runtime;
+use crate::util::Json;
+
+/// One SALAAD run at given (Δα, Δβ, ρ-const); returns
+/// (PPL(X), PPL(L+S), surrogate PRM).
+fn run_point(rt: &Runtime, opts: &ExpOptions, scale: &str, da: f64,
+             db: f64, rho_const: f64) -> Result<(f64, f64, usize)> {
+    let mut scfg = opts.scfg();
+    scfg.delta_alpha = da;
+    scfg.delta_beta = db;
+    scfg.rho_const = rho_const;
+    let cfg = rt.model_config(scale)?;
+    let evals = eval_set(&cfg, opts.seed, 4);
+    // Ablation grids compare *trends*, not absolute quality — half-length
+    // runs keep the full grid tractable on CPU.
+    let mut tcfg = opts.tcfg();
+    tcfg.steps = (opts.steps / 2).max(50);
+    tcfg.warmup_steps = (tcfg.steps / 10).clamp(5, 50);
+    let run = trained(rt, scale, Method::Salaad, &tcfg, &scfg,
+                      opts)?;
+    let ppl_x = eval_ppl(rt, &cfg, &run.trainer.params, &evals)?;
+    let ppl_ls = eval_ppl(rt, &cfg, &run.trainer.surrogate_params(),
+                          &evals)?;
+    Ok((ppl_x, ppl_ls, run.trainer.surrogate_param_count()))
+}
+
+fn sweep(rt: &Runtime, opts: &ExpOptions, scale: &str, label: &str,
+         points: &[(f64, f64, f64)], json: &mut Json) -> Result<String> {
+    let mut t = Table::new(&[label, "PPL(X)", "PPL(L+S)", "PRM"]);
+    for (val, da, db) in points.iter().map(|(v, a, b)| (*v, *a, *b)) {
+        // `val` is the swept value; which slot it fills is encoded by
+        // the caller via (da, db) already being set.
+        let rho = opts.scfg().rho_const;
+        let (x, ls, prm_) = run_point(rt, opts, scale, da, db, rho)?;
+        eprintln!("  {label}={val}: X {x:.2} L+S {ls:.2} {}", prm(prm_));
+        t.row(vec![format!("{val}"), format!("{x:.2}"),
+                   format!("{ls:.2}"), prm(prm_)]);
+        let mut o = Json::obj();
+        o.set("ppl_x", Json::Num(x)).set("ppl_ls", Json::Num(ls))
+            .set("prm", Json::Num(prm_ as f64));
+        json.set(&format!("{label}_{val}"), o);
+    }
+    Ok(t.markdown())
+}
+
+/// Table 3: Δβ sweep (Δα fixed) and Δα sweep (Δβ fixed).
+pub fn run_table3(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let scale = opts.scale.clone();
+    let mut json = Json::obj();
+    let d = opts.scfg();
+    let beta_points: Vec<(f64, f64, f64)> = [0.003, 0.005, 0.01, 0.05]
+        .iter().map(|&db| (db, d.delta_alpha, db)).collect();
+    let md_b = sweep(rt, opts, &scale, "Δβ", &beta_points, &mut json)?;
+    let alpha_points: Vec<(f64, f64, f64)> = [0.05, 0.1, 0.15, 0.2]
+        .iter().map(|&da| (da, da, d.delta_beta)).collect();
+    let md_a = sweep(rt, opts, &scale, "Δα", &alpha_points, &mut json)?;
+    let md = format!(
+        "# Table 3 — I-controller step-size ablation (scale {scale})\n\n\
+         Expected shape: larger steps → more aggressive structure → \
+         fewer parameters, higher PPL.\n\n## Δβ sweep (Δα = {})\n\n{md_b}\n\
+         ## Δα sweep (Δβ = {})\n\n{md_a}",
+        d.delta_alpha, d.delta_beta);
+    emit(opts, "table3", &md, json)
+}
+
+/// Table 4: ρ sweep under (Δα, Δβ) pairs.
+pub fn run_table4(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let scale = opts.scale.clone();
+    let mut json = Json::obj();
+    let mut md = format!("# Table 4 — penalty coefficient ρ ablation \
+                          (scale {scale})\n\nExpected shape: larger ρ ≈ \
+                          stronger structure (lower PRM) at some PPL \
+                          cost.\n");
+    for (da, db) in [(0.1, 0.01), (0.1, 0.05)] {
+        let mut t = Table::new(&["ρ-const", "PPL(X)", "PPL(L+S)", "PRM"]);
+        for rho_const in [1.0, 2.0, 4.0] {
+            let (x, ls, prm_) =
+                run_point(rt, opts, &scale, da, db, rho_const)?;
+            eprintln!("  ρc={rho_const} (Δα={da},Δβ={db}): X {x:.2} \
+                       L+S {ls:.2} {}", prm(prm_));
+            t.row(vec![format!("{rho_const}"), format!("{x:.2}"),
+                       format!("{ls:.2}"), prm(prm_)]);
+            let mut o = Json::obj();
+            o.set("ppl_x", Json::Num(x)).set("ppl_ls", Json::Num(ls))
+                .set("prm", Json::Num(prm_ as f64));
+            json.set(&format!("rho{rho_const}_da{da}_db{db}"), o);
+        }
+        md.push_str(&format!("\n## Δα = {da}, Δβ = {db}\n\n{}",
+                             t.markdown()));
+    }
+    emit(opts, "table4", &md, json)
+}
+
+/// Tables 7-9 (Appendix I): the 130M-analog grids at the micro scale.
+pub fn run_tables7_9(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let scale = "micro";
+    let mut json = Json::obj();
+    // Table 7: Δβ ∈ {0.0005, 0.005, 0.5} with Δα = 0.5.
+    let b_points: Vec<(f64, f64, f64)> = [0.0005, 0.005, 0.5]
+        .iter().map(|&db| (db, 0.5, db)).collect();
+    let md7 = sweep(rt, opts, scale, "Δβ", &b_points, &mut json)?;
+    // Table 8: Δα ∈ {0.005, 0.05, 0.2} with Δβ = 0.005.
+    let a_points: Vec<(f64, f64, f64)> = [0.005, 0.05, 0.2]
+        .iter().map(|&da| (da, da, 0.005)).collect();
+    let md8 = sweep(rt, opts, scale, "Δα", &a_points, &mut json)?;
+    // Table 9: ρ grid × (Δα, Δβ) corners (a reduced grid — the paper's
+    // full 27-cell grid at 1/3 resolution).
+    let mut md9 = String::new();
+    for (da, db) in [(0.005, 0.005), (0.05, 0.005), (0.5, 0.005)] {
+        let mut t = Table::new(&["ρ-const", "PPL(X)", "PPL(L+S)", "PRM"]);
+        for rho_const in [1.0, 2.0, 4.0] {
+            let (x, ls, prm_) = run_point(rt, opts, scale, da, db,
+                                          rho_const)?;
+            t.row(vec![format!("{rho_const}"), format!("{x:.2}"),
+                       format!("{ls:.2}"), prm(prm_)]);
+            let mut o = Json::obj();
+            o.set("ppl_x", Json::Num(x)).set("ppl_ls", Json::Num(ls))
+                .set("prm", Json::Num(prm_ as f64));
+            json.set(&format!("t9_rho{rho_const}_da{da}"), o);
+        }
+        md9.push_str(&format!("\n### Δα = {da}, Δβ = {db}\n\n{}",
+                              t.markdown()));
+    }
+    let md = format!(
+        "# Tables 7-9 — Appendix I ablation grids (scale {scale})\n\n\
+         ## Table 7: Δβ sweep (Δα = 0.5)\n\n{md7}\n\
+         ## Table 8: Δα sweep (Δβ = 0.005)\n\n{md8}\n\
+         ## Table 9: ρ × (Δα, Δβ) grid\n{md9}");
+    emit(opts, "tables7_9", &md, json)
+}

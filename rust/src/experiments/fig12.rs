@@ -1,0 +1,54 @@
+//! Figure 12 (Appendix H): the LM head is NOT benign under SLR
+//! induction — a small ρ fails to induce stable structure, a large ρ
+//! induces structure but degrades the training loss. Contrast with the
+//! embedding layer, which structures readily at small ρ.
+
+use anyhow::Result;
+
+use super::common::{emit, trained, ExpOptions, Table};
+use crate::coordinator::Method;
+use crate::runtime::Runtime;
+use crate::util::Json;
+
+pub fn run(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let scale = "nano"; // the paper uses its 60M model here
+    let mut t = Table::new(&["ρ-const", "final loss", "head rank ratio",
+                             "head density", "embed rank ratio"]);
+    let mut json = Json::obj();
+
+    for rho_const in [1.0, 8.0] {
+        let mut scfg = opts.scfg();
+        scfg.include_head = true;
+        scfg.rho_const = rho_const;
+        let run = trained(rt, scale, Method::Salaad, &opts.tcfg(), &scfg,
+                          opts)?;
+        let tr = &run.trainer;
+        let loss = tr.history.trailing_loss(10).unwrap_or(f64::NAN);
+        let head = tr.blocks.iter().find(|b| b.name == "lm_head")
+            .expect("lm_head block");
+        let embed = tr.blocks.iter().find(|b| b.name == "embed")
+            .expect("embed block");
+        eprintln!("  ρc={rho_const}: loss {loss:.3} head rank {:.3} \
+                   embed rank {:.3}", head.rank_ratio(0.999),
+                  embed.rank_ratio(0.999));
+        t.row(vec![format!("{rho_const}"), format!("{loss:.3}"),
+                   format!("{:.3}", head.rank_ratio(0.999)),
+                   format!("{:.3}", head.density()),
+                   format!("{:.3}", embed.rank_ratio(0.999))]);
+        let mut o = Json::obj();
+        o.set("loss", Json::Num(loss))
+            .set("head_rank_ratio", Json::Num(head.rank_ratio(0.999)))
+            .set("head_density", Json::Num(head.density()))
+            .set("embed_rank_ratio", Json::Num(embed.rank_ratio(0.999)));
+        json.set(&format!("rho{rho_const}"), o);
+    }
+
+    let md = format!(
+        "# Figure 12 — non-benign SLR behavior of the LM head \
+         (Appendix H)\n\nScale {scale}, LM head included in SLR \
+         induction. Expected shape: small ρ → weak/unstable head \
+         structure; large ρ → stronger head structure but worse \
+         training loss; the embedding structures readily in both \
+         settings.\n\n{}", t.markdown());
+    emit(opts, "fig12", &md, json)
+}

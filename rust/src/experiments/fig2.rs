@@ -1,0 +1,68 @@
+//! Figure 2: training wall-clock breakdown — gradient steps vs ADMM
+//! updates vs inter-worker synchronization vs auxiliary-variable saving,
+//! and how the structural overhead shrinks as workers scale (the paper's
+//! "distribute surrogate blocks across GPUs" claim, Appendix C).
+
+use anyhow::Result;
+
+use super::common::{emit, ExpOptions, Table};
+use crate::coordinator::{Method, Trainer};
+use crate::runtime::Runtime;
+use crate::util::Json;
+
+pub fn run(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let cfg = rt.model_config(&opts.scale)?;
+    let worker_counts = [1usize, 2, 4, 8];
+    let steps = opts.steps.min(60).max(20);
+
+    // Warm the executable cache so the first row doesn't pay the XLA
+    // compile cost.
+    rt.load_entry(&cfg, "fwd_bwd")?;
+    rt.load_entry(&cfg, "eval_loss")?;
+
+    let mut t = Table::new(&["workers", "grad (s)", "admm busy (s)",
+                             "admm wall (s)", "sync (s)", "save aux (s)",
+                             "optim (s)", "structural wall share %"]);
+    let mut json = Json::obj();
+    for &w in &worker_counts {
+        let mut scfg = opts.scfg();
+        scfg.admm_workers = w;
+        let mut tcfg = opts.tcfg();
+        tcfg.steps = steps;
+        let mut tr = Trainer::new(rt, cfg.clone(), Method::Salaad, tcfg,
+                                  scfg)?;
+        tr.run()?;
+        let grad = tr.timer.total_secs("grad_step")
+            + tr.timer.total_secs("penalty");
+        let admm = tr.timer.total_secs("admm");
+        let wall = tr.timer.total_secs("admm_wall");
+        let sync = tr.timer.total_secs("sync");
+        let save = tr.timer.total_secs("save_aux");
+        let optim = tr.timer.total_secs("optim");
+        // The paper's Figure 2 metric: how much *wall-clock* the
+        // structural machinery adds on top of gradient training.
+        let total_wall = grad + wall + save + optim;
+        let share = 100.0 * (wall + save) / total_wall.max(1e-12);
+        t.row(vec![w.to_string(), format!("{grad:.3}"),
+                   format!("{admm:.3}"), format!("{wall:.3}"),
+                   format!("{sync:.3}"), format!("{save:.3}"),
+                   format!("{optim:.3}"), format!("{share:.1}")]);
+        let mut o = Json::obj();
+        o.set("grad", Json::Num(grad)).set("admm_busy", Json::Num(admm))
+            .set("admm_wall", Json::Num(wall))
+            .set("sync", Json::Num(sync)).set("save", Json::Num(save))
+            .set("optim", Json::Num(optim))
+            .set("structural_wall_share_pct", Json::Num(share));
+        json.set(&format!("workers_{w}"), o);
+        eprintln!("  workers={w}: admm wall {wall:.3}s, structural share \
+                   {share:.1}%");
+    }
+
+    let md = format!(
+        "# Figure 2 — wall-clock breakdown of SALAAD training\n\n\
+         Scale {}, {} steps, ADMM every {} steps. The paper's claim to \
+         reproduce: the additional cost is dominated by ADMM updates and \
+         *decreases as workers increase* (blocks are decoupled).\n\n{}",
+        opts.scale, steps, opts.scfg().k_steps, t.markdown());
+    emit(opts, "fig2", &md, json)
+}

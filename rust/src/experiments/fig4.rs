@@ -1,0 +1,68 @@
+//! Figure 4: effect of the HPA allocation ratio κ under multiple
+//! parameter budgets — the paper finds a stable optimal band with
+//! κ* > 0.5 (prefer spending the removal budget on the low-rank part).
+
+use anyhow::Result;
+
+use super::common::{emit, eval_set, trained, ExpOptions, Table};
+use crate::coordinator::Method;
+use crate::eval::eval_ppl;
+use crate::runtime::Runtime;
+use crate::slr::hpa;
+use crate::util::Json;
+
+pub fn run(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let cfg = rt.model_config(&opts.scale)?;
+    let evals = eval_set(&cfg, opts.seed, 4);
+    let run = trained(rt, &opts.scale, Method::Salaad, &opts.tcfg(),
+                      &opts.scfg(), opts)?;
+    let tr = &run.trainer;
+
+    let kappas = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+    let budget_fracs = [0.25, 0.4, 0.55];
+    let pool = hpa::plan(&tr.blocks, 0.5, 0)?;
+    let removable = pool.c_l + pool.c_s;
+
+    let mut header = vec!["κ".to_string()];
+    for f in budget_fracs {
+        header.push(format!("PPL @ {:.0}% budget", f * 100.0));
+    }
+    let mut t = Table::new(&header.iter().map(|s| s.as_str())
+                           .collect::<Vec<_>>());
+    let mut json = Json::obj();
+    let mut best: Vec<(f64, f64)> = budget_fracs.iter()
+        .map(|_| (f64::INFINITY, 0.0)).collect();
+
+    for kappa in kappas {
+        let mut cells = vec![format!("{kappa:.1}")];
+        for (bi, frac) in budget_fracs.iter().enumerate() {
+            let budget = (removable as f64 * frac) as usize;
+            let plan = hpa::plan(&tr.blocks, kappa, budget)?;
+            let (trunc, _) = hpa::apply(&tr.blocks, &plan);
+            let ppl = eval_ppl(rt, &cfg, &tr.params_with_blocks(&trunc),
+                               &evals)?;
+            cells.push(format!("{ppl:.2}"));
+            if ppl < best[bi].0 {
+                best[bi] = (ppl, kappa);
+            }
+            json.set(&format!("k{kappa:.1}_f{frac:.2}"), Json::Num(ppl));
+        }
+        eprintln!("  κ={kappa:.1}: {:?}", &cells[1..]);
+        t.row(cells);
+    }
+
+    let kstars: Vec<String> = budget_fracs.iter().zip(&best)
+        .map(|(f, (p, k))| format!("budget {:.0}%: κ* = {k:.1} \
+                                    (PPL {p:.2})", f * 100.0))
+        .collect();
+    for (bi, (_, k)) in best.iter().enumerate() {
+        json.set(&format!("kappa_star_f{}", budget_fracs[bi]),
+                 Json::Num(*k));
+    }
+
+    let md = format!(
+        "# Figure 4 — allocation ratio κ sweep under parameter budgets\n\n\
+         Scale {}. Expected shape: κ* stable across budgets and > 0.5.\n\n\
+         {}\n{}\n", opts.scale, t.markdown(), kstars.join("\n"));
+    emit(opts, "fig4", &md, json)
+}

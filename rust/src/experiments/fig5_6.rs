@@ -1,0 +1,134 @@
+//! Figures 5 and 6 (Appendix A): post-hoc RPCA.
+//!
+//! Fig 5 — RPCA on *standard-trained* weights: recovered decompositions
+//! have weakly-SLR statistics (high rank ratios, only moderate
+//! sparsity), showing post-hoc decomposition cannot extract structure
+//! that training never induced.
+//!
+//! Fig 6 — RPCA on *SALAAD-trained* surrogate reconstructions: the
+//! recovered rank/sparsity statistics track the ground-truth factors,
+//! confirming RPCA finds SLR structure when it is genuinely present.
+
+use anyhow::Result;
+
+use super::common::{emit, trained, ExpOptions, Table};
+use crate::coordinator::Method;
+use crate::runtime::Runtime;
+use crate::slr::rpca::rpca;
+use crate::util::{Json, Rng};
+
+/// Representative shallow/middle/deep projection blocks of a config.
+fn representative_blocks(names: &[String]) -> Vec<String> {
+    let mut layers: Vec<usize> = names
+        .iter()
+        .filter_map(|n| {
+            n.strip_prefix("layers.")
+                .and_then(|s| s.split('.').next())
+                .and_then(|s| s.parse().ok())
+        })
+        .collect();
+    layers.sort_unstable();
+    layers.dedup();
+    if layers.is_empty() {
+        return Vec::new();
+    }
+    let picks = [layers[0], layers[layers.len() / 2],
+                 *layers.last().unwrap()];
+    let mut out = Vec::new();
+    for l in picks {
+        for mat in ["wq", "wv", "w_gate", "w_down"] {
+            let name = format!("layers.{l}.{mat}");
+            if names.contains(&name) {
+                out.push(name);
+            }
+        }
+    }
+    out.dedup();
+    out
+}
+
+pub fn run_fig5(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let cfg = rt.model_config(&opts.scale)?;
+    let van = trained(rt, &opts.scale, Method::FullRank, &opts.tcfg(),
+                      &opts.scfg(), opts)?;
+    let names: Vec<String> =
+        cfg.params.iter().map(|(n, _)| n.clone()).collect();
+    let picks = representative_blocks(&names);
+
+    let mut t = Table::new(&["block", "rank ratio", "sparsity", "resid"]);
+    let mut json = Json::obj();
+    let mut rng = Rng::named("fig5", opts.seed);
+    let mut ratios = Vec::new();
+    let mut sparsities = Vec::new();
+    for name in &picks {
+        let idx = cfg.param_index(name)?;
+        let out = rpca(&van.trainer.params[idx], 1.0, 40, 1e-5, &mut rng);
+        let rr = out.rank_ratio(0.999);
+        let sp = out.sparsity(1e-6);
+        eprintln!("  {name}: rank ratio {rr:.3} sparsity {sp:.3}");
+        t.row(vec![name.clone(), format!("{rr:.3}"), format!("{sp:.3}"),
+                   format!("{:.1e}", out.resid)]);
+        let mut o = Json::obj();
+        o.set("rank_ratio", Json::Num(rr)).set("sparsity", Json::Num(sp));
+        json.set(name, o);
+        ratios.push(rr);
+        sparsities.push(sp);
+    }
+    let mean_r = ratios.iter().sum::<f64>() / ratios.len().max(1) as f64;
+    let mean_s =
+        sparsities.iter().sum::<f64>() / sparsities.len().max(1) as f64;
+    json.set("mean_rank_ratio", Json::Num(mean_r));
+    json.set("mean_sparsity", Json::Num(mean_s));
+
+    let md = format!(
+        "# Figure 5 — post-hoc RPCA on standard-trained weights\n\n\
+         Scale {}. Paper reports ~48-55% mean rank ratio / 68-82% \
+         sparsity — i.e. weakly SLR. Measured mean: rank ratio {:.1}%, \
+         sparsity {:.1}%.\n\n{}",
+        opts.scale, 100.0 * mean_r, 100.0 * mean_s, t.markdown());
+    emit(opts, "fig5", &md, json)
+}
+
+pub fn run_fig6(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let sal = trained(rt, &opts.scale, Method::Salaad, &opts.tcfg(),
+                      &opts.scfg(), opts)?;
+    let mut t = Table::new(&["block", "true rank ratio", "RPCA rank ratio",
+                             "true sparsity", "RPCA sparsity"]);
+    let mut json = Json::obj();
+    let mut rng = Rng::named("fig6", opts.seed);
+    // Sample a handful of blocks with developed structure.
+    let blocks: Vec<_> = sal
+        .trainer
+        .blocks
+        .iter()
+        .filter(|b| b.rank() > 0)
+        .take(6)
+        .collect();
+    for b in blocks {
+        // Reconstruct X̂ = L + S densely, then ask RPCA to find the
+        // latent decomposition.
+        let xhat = b.xhat();
+        let out = rpca(&xhat, 1.0, 40, 1e-5, &mut rng);
+        let true_r = b.rank_ratio(0.999);
+        let true_s = 1.0 - b.density();
+        let rec_r = out.rank_ratio(0.999);
+        let rec_s = out.sparsity(1e-6);
+        eprintln!("  {}: true ({true_r:.3},{true_s:.3}) vs rpca \
+                   ({rec_r:.3},{rec_s:.3})", b.name);
+        t.row(vec![b.name.clone(), format!("{true_r:.3}"),
+                   format!("{rec_r:.3}"), format!("{true_s:.3}"),
+                   format!("{rec_s:.3}")]);
+        let mut o = Json::obj();
+        o.set("true_rank_ratio", Json::Num(true_r))
+            .set("rpca_rank_ratio", Json::Num(rec_r))
+            .set("true_sparsity", Json::Num(true_s))
+            .set("rpca_sparsity", Json::Num(rec_s));
+        json.set(&b.name, o);
+    }
+    let md = format!(
+        "# Figure 6 — RPCA sanity check on SALAAD-trained surrogates\n\n\
+         Scale {}. Expected shape: recovered statistics track the \
+         ground-truth SLR components (close in magnitude, not exact).\n\n\
+         {}", opts.scale, t.markdown());
+    emit(opts, "fig6", &md, json)
+}

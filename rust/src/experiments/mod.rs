@@ -1,0 +1,64 @@
+//! Experiment runners — one per table/figure in the paper's evaluation
+//! (see DESIGN.md §6 for the index). Every runner regenerates the same
+//! rows/series the paper reports, at the simulator's scale, and writes
+//! a markdown + json report under `reports/`.
+//!
+//! Run with `salaad exp <id>`; `salaad exp all` runs the full suite.
+
+pub mod common;
+pub mod table1;
+pub mod table2;
+pub mod ablations; // tables 3, 4, 7-9
+pub mod table5;
+pub mod table6;
+pub mod fig1;      // + fig11 (other scales)
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5_6;
+pub mod fig10;
+pub mod fig12;
+pub mod fig13;     // + table 10
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Runtime;
+pub use common::ExpOptions;
+
+/// All experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig1", "fig2", "fig3", "table2", "fig4", "table3",
+    "table4", "table5", "table6", "fig5", "fig6", "fig10", "fig11",
+    "fig12", "fig13", "tables7_9",
+];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    match id {
+        "table1" => table1::run(rt, opts),
+        "table2" => table2::run(rt, opts),
+        "table3" => ablations::run_table3(rt, opts),
+        "table4" => ablations::run_table4(rt, opts),
+        "tables7_9" => ablations::run_tables7_9(rt, opts),
+        "table5" => table5::run(rt, opts),
+        "table6" => table6::run(rt, opts),
+        "fig1" => fig1::run(rt, opts, &["micro"]),
+        "fig11" => fig1::run(rt, opts, &["nano", "micro"]),
+        "fig2" => fig2::run(rt, opts),
+        "fig3" => fig3::run(rt, opts),
+        "fig4" => fig4::run(rt, opts),
+        "fig5" => fig5_6::run_fig5(rt, opts),
+        "fig6" => fig5_6::run_fig6(rt, opts),
+        "fig10" => fig10::run(rt, opts),
+        "fig12" => fig12::run(rt, opts),
+        "fig13" | "table10" => fig13::run(rt, opts),
+        "all" => {
+            for id in ALL {
+                eprintln!("\n===== exp {id} =====");
+                run(id, rt, opts)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment `{id}`; known: {ALL:?} or `all`"),
+    }
+}

@@ -1,0 +1,106 @@
+//! Table 1: perplexity + parameter count for SALAAD (X, L+S, HPA)
+//! against the baseline family, across model scales.
+
+use anyhow::Result;
+
+use super::common::{emit, eval_set, prm, trained, ExpOptions, Table};
+use crate::coordinator::Method;
+use crate::eval::eval_ppl;
+use crate::runtime::Runtime;
+use crate::slr::hpa;
+use crate::util::Json;
+
+pub fn run(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let mut scales = vec!["nano".to_string()];
+    if opts.scale != "nano" {
+        scales.push(opts.scale.clone());
+    }
+    let methods = [Method::FullRank, Method::Lora, Method::ReLora,
+                   Method::Galore, Method::SlTrainFixed, Method::LostLike];
+
+    let mut table = Table::new(&["method",
+                                 &format!("{} PPL", scales[0]),
+                                 &format!("{} PRM", scales[0]),
+                                 &format!("{} PPL", scales.last().unwrap()),
+                                 &format!("{} PRM", scales.last().unwrap())]);
+    let mut json = Json::obj();
+
+    // Collect per scale: method -> (ppl, prm)
+    let mut cols: Vec<std::collections::BTreeMap<String, (f64, usize)>> =
+        Vec::new();
+    for scale in &scales {
+        let cfg = rt.model_config(scale)?;
+        let evals = eval_set(&cfg, opts.seed, 4);
+        let mut col = std::collections::BTreeMap::new();
+        for m in methods {
+            let run = trained(rt, scale, m, &opts.tcfg(), &opts.scfg(),
+                              opts)?;
+            let tr = &run.trainer;
+            let (ppl, count) = if m.uses_admm() {
+                (eval_ppl(rt, &cfg, &tr.surrogate_params(), &evals)?,
+                 tr.surrogate_param_count())
+            } else {
+                (eval_ppl(rt, &cfg, &tr.params, &evals)?, cfg.n_params())
+            };
+            eprintln!("  [{scale}] {}: ppl {ppl:.2} prm {}", m.name(),
+                      prm(count));
+            col.insert(m.name().to_string(), (ppl, count));
+        }
+        // SALAAD rows: X, L+S, HPA.
+        let run = trained(rt, scale, Method::Salaad, &opts.tcfg(),
+                          &opts.scfg(), opts)?;
+        let tr = &run.trainer;
+        let ppl_x = eval_ppl(rt, &cfg, &tr.params, &evals)?;
+        col.insert("salaad X".into(), (ppl_x, cfg.n_params()));
+        let ppl_ls = eval_ppl(rt, &cfg, &tr.surrogate_params(), &evals)?;
+        col.insert("salaad L+S".into(),
+                   (ppl_ls, tr.surrogate_param_count()));
+        // HPA at 25% of the removable pool, κ = 0.7 (the paper's 60M
+        // setting; ablated in fig4).
+        let pool = hpa::plan(&tr.blocks, 0.7, 0)?;
+        let budget = (pool.c_l + pool.c_s) / 4;
+        let plan = hpa::plan(&tr.blocks, 0.7, budget)?;
+        let (trunc, _) = hpa::apply(&tr.blocks, &plan);
+        let ppl_hpa = eval_ppl(rt, &cfg, &tr.params_with_blocks(&trunc),
+                               &evals)?;
+        col.insert("salaad HPA(κ=0.7)".into(),
+                   (ppl_hpa, tr.surrogate_count_for(&trunc)));
+        eprintln!("  [{scale}] salaad: X {ppl_x:.2} | L+S {ppl_ls:.2} | \
+                   HPA {ppl_hpa:.2}");
+        cols.push(col);
+    }
+
+    let order = ["full-rank", "lora", "relora", "galore", "sltrain",
+                 "lost", "salaad X", "salaad L+S", "salaad HPA(κ=0.7)"];
+    for name in order {
+        let mut cells = vec![name.to_string()];
+        for col in &cols {
+            if let Some((ppl, count)) = col.get(name) {
+                cells.push(format!("{ppl:.2}"));
+                cells.push(prm(*count));
+            } else {
+                cells.push("-".into());
+                cells.push("-".into());
+            }
+        }
+        while cells.len() < 5 {
+            cells.push("-".into());
+        }
+        table.row(cells);
+        for (si, col) in cols.iter().enumerate() {
+            if let Some((ppl, count)) = col.get(name) {
+                let mut o = Json::obj();
+                o.set("ppl", Json::Num(*ppl))
+                    .set("params", Json::Num(*count as f64));
+                json.set(&format!("{}/{}", scales[si], name), o);
+            }
+        }
+    }
+
+    let md = format!(
+        "# Table 1 — PPL and parameter count across methods and scales\n\n\
+         Steps: {} per run, seed {}. Scales: {:?} (CPU analogs of the \
+         paper's 60M-1B).\n\n{}",
+        opts.steps, opts.seed, scales, table.markdown());
+    emit(opts, "table1", &md, json)
+}

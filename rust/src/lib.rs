@@ -1,0 +1,35 @@
+//! # SALAAD — Sparse And Low-Rank Adaptation via ADMM
+//!
+//! A full-system reproduction of *SALAAD: Sparse And Low-Rank Adaptation
+//! via ADMM for Large Language Model Inference* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the training/deployment coordinator:
+//!   Algorithm 1's two-stage schedule, the block-wise I-controller,
+//!   Rust-native SVD/RPCA/HPA, optimizers, data pipeline, elastic
+//!   serving, and the paper's full experiment suite.
+//! - **Layer 2** — a JAX LLaMA-style model AOT-lowered to HLO text
+//!   (`python/compile/model.py`), loaded and executed here via PJRT.
+//! - **Layer 1** — Pallas kernels for the compute hot spots
+//!   (`python/compile/kernels/`), lowered into the same HLO.
+//!
+//! Python never runs on the training or serving path: after
+//! `make artifacts` the binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod config;
+pub mod data;
+pub mod runtime;
+pub mod optim;
+pub mod slr;
+pub mod coordinator;
+pub mod eval;
+pub mod serve;
+pub mod baselines;
+pub mod experiments;
+pub mod cli;

@@ -1,0 +1,199 @@
+//! Blocked, thread-parallel f32 GEMM variants.
+//!
+//! Layout-aware inner loops (ikj order over row-major data) keep the
+//! compiler auto-vectorizing; rows of the output are sharded across
+//! scoped threads. This is deliberately simple — the heavy model math
+//! runs inside XLA; these GEMMs serve the SVD / RPCA / HPA path where
+//! matrices are at most (vocab × d_model).
+
+use crate::tensor::Tensor;
+
+/// Threshold below which threading isn't worth the spawn cost.
+const PAR_FLOP_THRESHOLD: usize = 1 << 22;
+
+fn workers_for(flops: usize) -> usize {
+    if flops < PAR_FLOP_THRESHOLD {
+        1
+    } else {
+        crate::util::parallel::default_workers()
+    }
+}
+
+/// C = A (n×k) · B (k×m).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = (a.nrows(), a.ncols());
+    let (k2, m) = (b.nrows(), b.ncols());
+    assert_eq!(k, k2, "matmul dims {:?} x {:?}", a.shape, b.shape);
+    let mut out = Tensor::zeros(&[n, m]);
+    let workers = workers_for(2 * n * k * m);
+    par_rows(&mut out.data, m, workers, |i, row| {
+        for l in 0..k {
+            let av = a.data[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[l * m..(l + 1) * m];
+            for (o, bv) in row.iter_mut().zip(brow) {
+                *o += av * *bv;
+            }
+        }
+    });
+    out
+}
+
+/// C = A (n×k) · Bᵀ where B is (m×k). Dot-product friendly: both operand
+/// rows are contiguous.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = (a.nrows(), a.ncols());
+    let (m, k2) = (b.nrows(), b.ncols());
+    assert_eq!(k, k2, "matmul_nt dims {:?} x {:?}", a.shape, b.shape);
+    let mut out = Tensor::zeros(&[n, m]);
+    let workers = workers_for(2 * n * k * m);
+    par_rows(&mut out.data, m, workers, |i, row| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (j, o) in row.iter_mut().enumerate() {
+            let brow = &b.data[j * k..(j + 1) * k];
+            *o = dot8(arow, brow);
+        }
+    });
+    out
+}
+
+/// Dot product with 8 independent accumulators — breaks the reduction
+/// dependency chain so the compiler vectorizes (EXPERIMENTS.md §Perf).
+#[inline]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        for l in 0..8 {
+            acc[l] += a[base + l] * b[base + l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// C = Aᵀ · B where A is (k×n), B is (k×m).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, n) = (a.nrows(), a.ncols());
+    let (k2, m) = (b.nrows(), b.ncols());
+    assert_eq!(k, k2, "matmul_tn dims {:?} x {:?}", a.shape, b.shape);
+    let mut out = Tensor::zeros(&[n, m]);
+    let workers = workers_for(2 * n * k * m);
+    par_rows(&mut out.data, m, workers, |i, row| {
+        for l in 0..k {
+            let av = a.data[l * n + i];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[l * m..(l + 1) * m];
+            for (o, bv) in row.iter_mut().zip(brow) {
+                *o += av * *bv;
+            }
+        }
+    });
+    out
+}
+
+/// Run `f(i, row_i)` over rows of a flat row-major buffer, sharded across
+/// `workers` scoped threads with disjoint row chunks.
+fn par_rows(data: &mut [f32], row_len: usize, workers: usize,
+            f: impl Fn(usize, &mut [f32]) + Sync) {
+    let n = if row_len == 0 { 0 } else { data.len() / row_len };
+    if workers <= 1 || n <= 1 {
+        for (i, row) in data.chunks_mut(row_len.max(1)).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let chunk_rows = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (c, chunk) in data.chunks_mut(chunk_rows * row_len).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                    f(c * chunk_rows + r, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (n, k, m) = (a.nrows(), a.ncols(), b.ncols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..n {
+            for j in 0..m {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += a.at2(i, l) as f64 * b.at2(l, j) as f64;
+                }
+                out.set2(i, j, acc as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive() {
+        prop::check("matmul_naive", 16, |rng| {
+            let n = prop::dim(rng, 1, 40);
+            let k = prop::dim(rng, 1, 40);
+            let m = prop::dim(rng, 1, 40);
+            let a = Tensor::randn(&[n, k], rng, 1.0);
+            let b = Tensor::randn(&[k, m], rng, 1.0);
+            let c = matmul(&a, &b);
+            let c0 = naive(&a, &b);
+            assert!(c.dist_frob(&c0) < 1e-3 * (1.0 + c0.frob_norm()));
+        });
+    }
+
+    #[test]
+    fn nt_tn_consistency() {
+        prop::check("matmul_variants", 16, |rng| {
+            let n = prop::dim(rng, 1, 24);
+            let k = prop::dim(rng, 1, 24);
+            let m = prop::dim(rng, 1, 24);
+            let a = Tensor::randn(&[n, k], rng, 1.0);
+            let b = Tensor::randn(&[k, m], rng, 1.0);
+            let c = matmul(&a, &b);
+            let c_nt = matmul_nt(&a, &b.transpose());
+            let c_tn = matmul_tn(&a.transpose(), &b);
+            assert!(c.dist_frob(&c_nt) < 1e-4 * (1.0 + c.frob_norm()));
+            assert!(c.dist_frob(&c_tn) < 1e-4 * (1.0 + c.frob_norm()));
+        });
+    }
+
+    #[test]
+    fn identity() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[5, 5], &mut rng, 1.0);
+        let mut eye = Tensor::zeros(&[5, 5]);
+        for i in 0..5 {
+            eye.set2(i, i, 1.0);
+        }
+        assert!(matmul(&a, &eye).dist_frob(&a) < 1e-6);
+        assert!(matmul(&eye, &a).dist_frob(&a) < 1e-6);
+    }
+
+    #[test]
+    fn large_parallel_path() {
+        // Big enough to cross PAR_FLOP_THRESHOLD.
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[256, 128], &mut rng, 1.0);
+        let b = Tensor::randn(&[128, 256], &mut rng, 1.0);
+        let c = matmul(&a, &b);
+        let c0 = naive(&a, &b);
+        assert!(c.dist_frob(&c0) < 1e-2);
+    }
+}

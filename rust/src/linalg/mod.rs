@@ -1,0 +1,43 @@
+//! Dense linear algebra built from scratch (no LAPACK in the offline
+//! vendor set; DESIGN.md §3).
+//!
+//! This is the substrate under the ADMM structural phase: the paper's
+//! second-stage optimization needs an SVD per selected block per update
+//! (the `ε` in the Appendix C cost model `ε·J/K`). We provide
+//!
+//! - [`matmul`]: blocked, thread-parallel f32 GEMM variants,
+//! - [`qr`]: modified Gram-Schmidt with reorthogonalization,
+//! - [`svd`]: one-sided Jacobi (exact, f64 accumulation),
+//! - [`rand_svd`]: randomized subspace SVD (the fast path used by the
+//!   coordinator when only the top of the spectrum is needed, with a
+//!   certified escape hatch back to Jacobi).
+
+pub mod matmul;
+pub mod qr;
+pub mod svd;
+pub mod rand_svd;
+
+pub use matmul::{matmul, matmul_nt, matmul_tn};
+pub use qr::qr_thin;
+pub use svd::{jacobi_svd, Svd};
+pub use rand_svd::rand_svd;
+
+use crate::tensor::Tensor;
+
+/// Reconstruct `U diag(s) V^T` (test/HPA utility).
+pub fn reconstruct(u: &Tensor, s: &[f32], v: &Tensor) -> Tensor {
+    let (n, r) = (u.nrows(), u.ncols());
+    let m = v.nrows();
+    assert_eq!(v.ncols(), r);
+    assert_eq!(s.len(), r);
+    // (U * s) @ V^T
+    let mut us = u.clone();
+    for i in 0..n {
+        for j in 0..r {
+            us.data[i * r + j] *= s[j];
+        }
+    }
+    let out = matmul_nt(&us, v);
+    debug_assert_eq!(out.shape, vec![n, m]);
+    out
+}

@@ -1,0 +1,109 @@
+//! Thin QR via modified Gram-Schmidt with one reorthogonalization pass
+//! (MGS2) — numerically adequate for the randomized-SVD range finder,
+//! where Q only needs orthonormality to working precision.
+
+use crate::tensor::Tensor;
+
+/// Thin QR of A (n×r, n >= r): returns Q (n×r) with orthonormal columns
+/// and R (r×r) upper-triangular such that A ≈ Q R. Rank-deficient
+/// columns are replaced with zeros (and flagged by a zero R diagonal).
+pub fn qr_thin(a: &Tensor) -> (Tensor, Tensor) {
+    let (n, r) = (a.nrows(), a.ncols());
+    assert!(n >= r, "qr_thin expects tall matrix, got {n}x{r}");
+    // Column-major working copy in f64.
+    let mut q: Vec<Vec<f64>> = (0..r)
+        .map(|j| (0..n).map(|i| a.at2(i, j) as f64).collect())
+        .collect();
+    let mut rm = vec![0.0f64; r * r];
+
+    for j in 0..r {
+        // Two rounds of MGS projection against previous columns.
+        for _round in 0..2 {
+            for i in 0..j {
+                let dot: f64 =
+                    q[i].iter().zip(&q[j]).map(|(x, y)| x * y).sum();
+                rm[i * r + j] += dot;
+                let qi = q[i].clone();
+                for (x, y) in q[j].iter_mut().zip(&qi) {
+                    *x -= dot * y;
+                }
+            }
+        }
+        let norm: f64 = q[j].iter().map(|x| x * x).sum::<f64>().sqrt();
+        rm[j * r + j] = norm;
+        if norm > 1e-300 {
+            for x in q[j].iter_mut() {
+                *x /= norm;
+            }
+        } else {
+            for x in q[j].iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+
+    let mut qt = Tensor::zeros(&[n, r]);
+    for j in 0..r {
+        for i in 0..n {
+            qt.data[i * r + j] = q[j][i] as f32;
+        }
+    }
+    let rt = Tensor::new(rm.iter().map(|x| *x as f32).collect(), &[r, r]);
+    (qt, rt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_tn};
+    use crate::util::prop;
+
+    #[test]
+    fn reconstructs_and_orthonormal() {
+        prop::check("qr_reconstruct", 16, |rng| {
+            let n = prop::dim(rng, 4, 40);
+            let r = prop::dim(rng, 1, n.min(12));
+            let a = Tensor::randn(&[n, r], rng, 1.0);
+            let (q, rm) = qr_thin(&a);
+            // A ≈ QR
+            let qr = matmul(&q, &rm);
+            assert!(qr.dist_frob(&a) < 1e-3 * (1.0 + a.frob_norm()),
+                    "reconstruction failed");
+            // QᵀQ ≈ I
+            let qtq = matmul_tn(&q, &q);
+            for i in 0..r {
+                for j in 0..r {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((qtq.at2(i, j) - want).abs() < 1e-4,
+                            "qtq[{i},{j}]={}", qtq.at2(i, j));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = crate::util::Rng::new(9);
+        let a = Tensor::randn(&[10, 5], &mut rng, 1.0);
+        let (_, rm) = qr_thin(&a);
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(rm.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_column_zeroed() {
+        // Second column is a multiple of the first.
+        let a = Tensor::new(vec![1.0, 2.0,
+                                 2.0, 4.0,
+                                 3.0, 6.0], &[3, 2]);
+        let (q, rm) = qr_thin(&a);
+        assert!(rm.at2(1, 1).abs() < 1e-5);
+        // Q's second column is zero, not NaN.
+        for i in 0..3 {
+            assert!(q.at2(i, 1).is_finite());
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! `salaad` — leader binary for the SALAAD reproduction.
+//!
+//! Subcommands:
+//!   info                          artifact/config inventory
+//!   train <scale>                 train one method, save a checkpoint
+//!   eval <ckpt-dir>               PPL + downstream suite of a checkpoint
+//!   compress <ckpt-dir>           HPA-compress a checkpoint to a budget
+//!   serve <scale>                 budgeted elastic serving demo
+//!   exp <id>                      regenerate a paper table/figure
+//!
+//! Python never runs here: everything executes against the AOT
+//! artifacts produced by `make artifacts`.
+
+use anyhow::{bail, Context, Result};
+
+use salaad::cli::Args;
+use salaad::config::{SalaadConfig, TrainConfig};
+use salaad::coordinator::{checkpoint, Method, Trainer};
+use salaad::data::BatchLoader;
+use salaad::eval::{eval_ppl, eval_suite};
+use salaad::experiments::{self, ExpOptions};
+use salaad::runtime::Runtime;
+use salaad::slr::hpa;
+
+const USAGE: &str = "\
+salaad — Sparse And Low-Rank Adaptation via ADMM (paper reproduction)
+
+USAGE:
+  salaad info
+  salaad train <scale> [--method M] [--steps N] [--seed N] [--k N]
+               [--rho-const X] [--out DIR] [--quiet] [--include-head]
+  salaad eval <ckpt-dir> [--downstream]
+  salaad compress <ckpt-dir> [--budget-frac F] [--kappa K] [--out DIR]
+  salaad serve <scale> [--steps N] [--requests N]
+  salaad exp <id|all> [--scale S] [--steps N] [--seed N] [--out DIR]
+             [--no-cache] [--verbose]
+
+Scales: nano micro mini small.  Methods: full-rank salaad sltrain lost
+galore lora relora.  Experiment ids: table1 table2 table3 table4 table5
+table6 tables7_9 fig1 fig2 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13.";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "info" => cmd_info(),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "compress" => cmd_compress(&args),
+        "serve" => cmd_serve(&args),
+        "exp" => cmd_exp(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::from_env()?;
+    println!("platform: {} ({} devices)", rt.client.platform_name(),
+             rt.client.device_count());
+    println!("artifacts: {}", rt.dir.display());
+    for name in rt.config_names() {
+        let cfg = rt.model_config(&name)?;
+        println!(
+            "  {name}: d={} L={} H={} ff={} vocab={} seq={}  \
+             params={:.2}M  entrypoints=[{}]",
+            cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.vocab,
+            cfg.seq_len, cfg.n_params() as f64 / 1e6,
+            cfg.entrypoints.keys().cloned().collect::<Vec<_>>().join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let scale = args.positional_at(0).context("train <scale>")?;
+    let method = Method::parse(&args.flag_or("method", "salaad"))
+        .context("bad --method")?;
+    let rt = Runtime::from_env()?;
+    let cfg = rt.model_config(scale)?;
+    let mut tcfg = TrainConfig {
+        steps: args.usize_flag("steps", 300)?,
+        seed: args.usize_flag("seed", 0)? as u64,
+        ..Default::default()
+    };
+    tcfg.eval_every = args.usize_flag("eval-every", 100)?;
+    let mut scfg = SalaadConfig {
+        k_steps: args.usize_flag("k", 10)?,
+        ..Default::default()
+    };
+    scfg.rho_const = args.f64_flag("rho-const", scfg.rho_const)?;
+    scfg.include_head = args.has("include-head");
+
+    eprintln!("training {} on `{scale}` ({:.2}M params) for {} steps",
+              method.name(), cfg.n_params() as f64 / 1e6, tcfg.steps);
+    let mut tr = Trainer::new(&rt, cfg.clone(), method, tcfg.clone(),
+                              scfg)?;
+    tr.verbose = !args.has("quiet");
+    let t0 = std::time::Instant::now();
+    tr.run()?;
+    eprintln!("done in {:.1}s", t0.elapsed().as_secs_f64());
+    eprintln!("{}", tr.timer.report());
+
+    let eval_set = BatchLoader::eval_set(cfg.vocab, cfg.batch, cfg.seq_len,
+                                         tcfg.seed, tcfg.eval_batches);
+    let ppl = eval_ppl(&rt, &cfg, &tr.params, &eval_set)?;
+    println!("final eval PPL(X) = {ppl:.3}");
+    if method.uses_admm() {
+        let sur = eval_ppl(&rt, &cfg, &tr.surrogate_params(), &eval_set)?;
+        println!("final eval PPL(L+S) = {sur:.3}  \
+                  (surrogate params {:.2}M vs dense {:.2}M)",
+                 tr.surrogate_param_count() as f64 / 1e6,
+                 tr.dense_param_count() as f64 / 1e6);
+    }
+
+    let out = args.flag_or("out", &format!("checkpoints/{}_{}",
+                                           scale, method.name()));
+    let named: Vec<(String, salaad::tensor::Tensor)> = cfg
+        .params
+        .iter()
+        .map(|(n, _)| n.clone())
+        .zip(tr.params.iter().cloned())
+        .collect();
+    checkpoint::save_checkpoint(std::path::Path::new(&out), scale,
+                                method.name(), tr.step, &named, &tr.blocks,
+                                tr.history.to_json())?;
+    println!("checkpoint saved to {out}");
+    Ok(())
+}
+
+fn load_ckpt_with_cfg(rt: &Runtime, dir: &str)
+                      -> Result<(salaad::config::ModelConfig,
+                                 checkpoint::Checkpoint)> {
+    let ck = checkpoint::load_checkpoint(std::path::Path::new(dir))?;
+    let scale = ck.meta.req("config")?.as_str()?.to_string();
+    let cfg = rt.model_config(&scale)?;
+    Ok((cfg, ck))
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = args.positional_at(0).context("eval <ckpt-dir>")?;
+    let rt = Runtime::from_env()?;
+    let (cfg, ck) = load_ckpt_with_cfg(&rt, dir)?;
+    let params: Vec<salaad::tensor::Tensor> =
+        ck.params.into_iter().map(|(_, t)| t).collect();
+    let eval_set = BatchLoader::eval_set(cfg.vocab, cfg.batch, cfg.seq_len,
+                                         0, 8);
+    let ppl = eval_ppl(&rt, &cfg, &params, &eval_set)?;
+    println!("PPL = {ppl:.3} over {} eval batches", eval_set.len());
+    if args.has("downstream") {
+        for s in eval_suite(&rt, &cfg, &params, 25, 0)? {
+            println!("  {:>10}: {:.1}%", s.task, s.accuracy * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let dir = args.positional_at(0).context("compress <ckpt-dir>")?;
+    let rt = Runtime::from_env()?;
+    let (cfg, ck) = load_ckpt_with_cfg(&rt, dir)?;
+    anyhow::ensure!(!ck.blocks.is_empty(),
+                    "checkpoint has no SLR surrogate blocks");
+    let kappa = args.f64_flag("kappa", 0.7)?;
+    let frac = args.f64_flag("budget-frac", 0.3)?;
+    let pool = hpa::plan(&ck.blocks, kappa, 0)?;
+    let budget = ((pool.c_l + pool.c_s) as f64 * frac) as usize;
+    let plan = hpa::plan(&ck.blocks, kappa, budget)?;
+    let (trunc, report) = hpa::apply(&ck.blocks, &plan);
+    println!("HPA: κ={kappa} budget={budget} → φ_L={:.3} φ_S={:.3}",
+             plan.phi_l, plan.phi_s);
+    println!("surrogate params: {} → {} (removed {})",
+             report.params_before, report.params_after, report.removed);
+
+    // Materialize + evaluate.
+    let mut params: Vec<salaad::tensor::Tensor> =
+        ck.params.iter().map(|(_, t)| t.clone()).collect();
+    for b in &trunc {
+        let idx = cfg.param_index(&b.name)?;
+        params[idx] = b.xhat();
+    }
+    let eval_set = BatchLoader::eval_set(cfg.vocab, cfg.batch, cfg.seq_len,
+                                         0, 8);
+    let ppl = eval_ppl(&rt, &cfg, &params, &eval_set)?;
+    println!("compressed PPL = {ppl:.3}");
+
+    if let Some(out) = args.flag("out") {
+        let named: Vec<(String, salaad::tensor::Tensor)> = cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.clone())
+            .zip(params.iter().cloned())
+            .collect();
+        checkpoint::save_checkpoint(std::path::Path::new(out), &cfg.name,
+                                    "hpa-compressed", 0, &named, &trunc,
+                                    salaad::util::Json::obj())?;
+        println!("compressed checkpoint saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use salaad::serve::{Request, Server, ServerOptions};
+    let scale = args.positional_at(0).context("serve <scale>")?;
+    let rt = Runtime::from_env()?;
+    let cfg = rt.model_config(scale)?;
+    let steps = args.usize_flag("steps", 60)?;
+    let n_requests = args.usize_flag("requests", 16)?;
+
+    eprintln!("training a quick SALAAD model for the demo ({steps} steps)…");
+    let tcfg = TrainConfig { steps, eval_every: 0, ..Default::default() };
+    let scfg = SalaadConfig::default();
+    let mut tr = Trainer::new(&rt, cfg.clone(), Method::Salaad, tcfg,
+                              scfg)?;
+    tr.run()?;
+
+    let mut server = Server::new(&rt, cfg.clone(), &tr.params, &tr.blocks,
+                                 &tr.block_param_idx, &[0.3, 0.6],
+                                 ServerOptions::default())?;
+    eprintln!("variants: {:?}",
+              server.variants.iter().map(|v| v.params_count)
+                  .collect::<Vec<_>>());
+    let budgets: Vec<usize> =
+        server.variants.iter().map(|v| v.params_count).collect();
+
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    let vocab = cfg.vocab as u64;
+    let producer = std::thread::spawn(move || {
+        let mut rng = salaad::util::Rng::new(42);
+        for i in 0..n_requests as u64 {
+            let prompt: Vec<u32> = (0..12)
+                .map(|_| rng.next_below(vocab) as u32)
+                .collect();
+            let budget = budgets[(i as usize) % budgets.len()];
+            req_tx.send(Request { id: i, prompt, max_new_tokens: 4,
+                                  budget_params: budget }).unwrap();
+        }
+    });
+    server.run(req_rx, resp_tx)?;
+    producer.join().unwrap();
+    let mut lat = Vec::new();
+    for r in resp_rx.iter() {
+        println!("req {:>3} served by {:>8}-param variant in {:.1} ms \
+                  (queued {:.1} ms): {:?}",
+                 r.id, r.served_params, r.latency_ms, r.queue_ms, r.tokens);
+        lat.push(r.latency_ms);
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if !lat.is_empty() {
+        let p95 = lat[((lat.len() * 95) / 100).min(lat.len() - 1)];
+        println!("p50 {:.1} ms  p95 {p95:.1} ms  served {} reqs",
+                 lat[lat.len() / 2], lat.len());
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args.positional_at(0).context("exp <id|all>")?;
+    let rt = Runtime::from_env()?;
+    let opts = ExpOptions {
+        scale: args.flag_or("scale", "micro"),
+        steps: args.usize_flag("steps", 200)?,
+        seed: args.usize_flag("seed", 0)? as u64,
+        out_dir: std::path::PathBuf::from(args.flag_or("out", "reports")),
+        use_cache: !args.has("no-cache"),
+        verbose: args.has("verbose"),
+    };
+    let t0 = std::time::Instant::now();
+    experiments::run(id, &rt, &opts)?;
+    eprintln!("exp {id} finished in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

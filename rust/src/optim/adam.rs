@@ -1,0 +1,133 @@
+//! Adam (Kingma & Ba) with bias correction — the paper's base optimizer
+//! (§5.1: Adam, zero weight decay).
+
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+pub struct Adam {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    t: u64,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(shapes: &[Vec<usize>], beta1: f64, beta2: f64, eps: f64,
+               weight_decay: f64) -> Self {
+        Adam {
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            t: 0,
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+        }
+    }
+
+    pub fn from_config(shapes: &[Vec<usize>],
+                       cfg: &crate::config::TrainConfig) -> Self {
+        Adam::new(shapes, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    }
+
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let bias1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bias2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let b1 = self.beta1 as f32;
+            let b2 = self.beta2 as f32;
+            let lr32 = lr as f32;
+            let eps = self.eps as f32;
+            let wd = self.weight_decay as f32;
+            let (m, v) = (&mut self.m[i], &mut self.v[i]);
+            let p = &mut params[i];
+            let g0 = &grads[i];
+            debug_assert_eq!(p.shape, g0.shape);
+            for k in 0..p.data.len() {
+                let g = g0.data[k] + wd * p.data[k];
+                m.data[k] = b1 * m.data[k] + (1.0 - b1) * g;
+                v.data[k] = b2 * v.data[k] + (1.0 - b2) * g * g;
+                let mhat = m.data[k] / bias1 as f32;
+                let vhat = v.data[k] / bias2 as f32;
+                p.data[k] -= lr32 * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.iter().map(|t| t.numel()).sum::<usize>() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Quadratic bowl: f(x) = 0.5‖x − c‖², ∇f = x − c.
+    #[test]
+    fn converges_on_quadratic() {
+        let c = Tensor::new(vec![1.0, -2.0, 3.0, 0.5], &[4]);
+        let mut params = vec![Tensor::zeros(&[4])];
+        let mut opt = Adam::new(&[vec![4]], 0.9, 0.999, 1e-8, 0.0);
+        for _ in 0..500 {
+            let g = params[0].sub(&c);
+            opt.step(&mut params, &[g], 0.05);
+        }
+        assert!(params[0].dist_frob(&c) < 1e-2,
+                "did not converge: {:?}", params[0].data);
+    }
+
+    #[test]
+    fn first_step_is_lr_signed() {
+        // With bias correction, the very first Adam step ≈ lr·sign(g).
+        let mut params = vec![Tensor::new(vec![0.0, 0.0], &[2])];
+        let g = Tensor::new(vec![0.3, -0.7], &[2]);
+        let mut opt = Adam::new(&[vec![2]], 0.9, 0.999, 1e-8, 0.0);
+        opt.step(&mut params, &[g], 0.1);
+        assert!((params[0].data[0] + 0.1).abs() < 1e-3);
+        assert!((params[0].data[1] - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut params = vec![Tensor::new(vec![5.0], &[1])];
+        let g = Tensor::zeros(&[1]);
+        let mut opt = Adam::new(&[vec![1]], 0.9, 0.999, 1e-8, 0.1);
+        for _ in 0..100 {
+            opt.step(&mut params, &[g.clone()], 0.05);
+        }
+        assert!(params[0].data[0] < 5.0);
+    }
+
+    #[test]
+    fn state_accounting() {
+        let opt = Adam::new(&[vec![4, 4], vec![8]], 0.9, 0.999, 1e-8, 0.0);
+        assert_eq!(opt.state_floats(), (16 + 8) * 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(0);
+        let g: Vec<Tensor> =
+            (0..3).map(|_| Tensor::randn(&[6], &mut rng, 1.0)).collect();
+        let run = |gs: &[Tensor]| {
+            let mut params = vec![Tensor::ones(&[6])];
+            let mut opt = Adam::new(&[vec![6]], 0.9, 0.999, 1e-8, 0.0);
+            for g in gs {
+                opt.step(&mut params, std::slice::from_ref(g), 0.01);
+            }
+            params[0].clone()
+        };
+        assert_eq!(run(&g), run(&g));
+    }
+}

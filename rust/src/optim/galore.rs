@@ -1,0 +1,193 @@
+//! GaLore-style optimizer (Zhao et al. 2024): project 2-D gradients onto
+//! a low-rank subspace refreshed periodically from the gradient's own
+//! top singular directions, run Adam in the compact space, project the
+//! update back. Training memory shrinks (optimizer state lives in the
+//! r-dim space) but the *model stays dense at inference* — exactly the
+//! contrast Table 1 draws against SALAAD.
+
+use super::Optimizer;
+use crate::linalg::{matmul, matmul_tn, rand_svd};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct GaLore {
+    /// Projection rank for 2-D parameters.
+    pub rank: usize,
+    /// Refresh the projector every `refresh_every` steps.
+    pub refresh_every: usize,
+    /// Per-parameter projector P (n×r), None for 1-D params.
+    projectors: Vec<Option<Tensor>>,
+    /// Adam moments in projected space (or full space for 1-D).
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    rng: Rng,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl GaLore {
+    pub fn new(shapes: &[Vec<usize>], rank: usize, refresh_every: usize,
+               beta1: f64, beta2: f64, eps: f64, seed: u64) -> Self {
+        let projectors: Vec<Option<Tensor>> =
+            shapes.iter().map(|_| None).collect();
+        let (m, v) = shapes
+            .iter()
+            .map(|s| {
+                let proj_shape = Self::state_shape(s, rank);
+                (Tensor::zeros(&proj_shape), Tensor::zeros(&proj_shape))
+            })
+            .unzip();
+        GaLore {
+            rank,
+            refresh_every: refresh_every.max(1),
+            projectors,
+            m,
+            v,
+            beta1,
+            beta2,
+            eps,
+            t: 0,
+            rng: Rng::named("galore", seed),
+            shapes: shapes.to_vec(),
+        }
+    }
+
+    fn state_shape(shape: &[usize], rank: usize) -> Vec<usize> {
+        if shape.len() == 2 {
+            let r = rank.min(shape[0]).min(shape[1]);
+            // Project the shorter side.
+            if shape[0] <= shape[1] {
+                vec![r, shape[1]]
+            } else {
+                vec![shape[0], r]
+            }
+        } else {
+            shape.to_vec()
+        }
+    }
+
+    /// Refresh P from the top-r left (or right) singular vectors of g.
+    fn refresh(&mut self, idx: usize, g: &Tensor) {
+        let shape = &self.shapes[idx];
+        let r = self.rank.min(shape[0]).min(shape[1]);
+        let svd = rand_svd(g, r, 4, 1, &mut self.rng);
+        // Tall matrices project rows (Pᵀ g), wide project columns (g P).
+        let p = if shape[0] <= shape[1] { svd.u } else { svd.v };
+        self.projectors[idx] = Some(p);
+        // Projected moments are no longer aligned; reset them (GaLore
+        // keeps them, but resetting is the conservative choice for a
+        // freshly rotated basis).
+        self.m[idx].scale_assign(0.0);
+        self.v[idx].scale_assign(0.0);
+    }
+}
+
+impl Optimizer for GaLore {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        self.t += 1;
+        let bias1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bias2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let is_2d = self.shapes[i].len() == 2
+                && self.shapes[i][0] > 1 && self.shapes[i][1] > 1;
+            if is_2d && (self.t as usize - 1) % self.refresh_every == 0 {
+                self.refresh(i, &grads[i]);
+            }
+            let (g_proj, proj): (Tensor, Option<&Tensor>) = if is_2d {
+                let p = self.projectors[i].as_ref().unwrap();
+                let tall = self.shapes[i][0] <= self.shapes[i][1];
+                let gp = if tall {
+                    matmul_tn(p, &grads[i]) // (r×m)
+                } else {
+                    matmul(&grads[i], p) // (n×r)
+                };
+                (gp, Some(p))
+            } else {
+                (grads[i].clone(), None)
+            };
+            // Adam in compact space.
+            let b1 = self.beta1 as f32;
+            let b2 = self.beta2 as f32;
+            let (m, v) = (&mut self.m[i], &mut self.v[i]);
+            debug_assert_eq!(m.shape, g_proj.shape);
+            let mut upd = Tensor::zeros(&g_proj.shape);
+            for k in 0..g_proj.data.len() {
+                let g = g_proj.data[k];
+                m.data[k] = b1 * m.data[k] + (1.0 - b1) * g;
+                v.data[k] = b2 * v.data[k] + (1.0 - b2) * g * g;
+                let mhat = m.data[k] / bias1 as f32;
+                let vhat = v.data[k] / bias2 as f32;
+                upd.data[k] = mhat / (vhat.sqrt() + self.eps as f32);
+            }
+            // Project back and apply.
+            if let Some(p) = proj {
+                let tall = self.shapes[i][0] <= self.shapes[i][1];
+                let full = if tall { matmul(p, &upd) } else {
+                    crate::linalg::matmul_nt(&upd, p)
+                };
+                params[i].axpy(-(lr as f32), &full);
+            } else {
+                params[i].axpy(-(lr as f32), &upd);
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        let moments: usize =
+            self.m.iter().map(|t| t.numel()).sum::<usize>() * 2;
+        let projs: usize = self
+            .projectors
+            .iter()
+            .filter_map(|p| p.as_ref().map(|t| t.numel()))
+            .sum();
+        moments + projs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduces_quadratic_loss() {
+        // f(W) = 0.5‖W − C‖² over a 16×12 matrix; GaLore with rank 4
+        // should still make steady progress (updates live in a rotating
+        // low-rank subspace).
+        let mut rng = Rng::new(0);
+        let c = Tensor::randn(&[16, 12], &mut rng, 1.0);
+        let mut params = vec![Tensor::zeros(&[16, 12])];
+        let mut opt = GaLore::new(&[vec![16, 12]], 4, 20, 0.9, 0.999,
+                                  1e-8, 0);
+        let d0 = params[0].dist_frob(&c);
+        for _ in 0..400 {
+            let g = params[0].sub(&c);
+            opt.step(&mut params, &[g], 0.05);
+        }
+        let d1 = params[0].dist_frob(&c);
+        assert!(d1 < 0.25 * d0, "no progress: {d0} -> {d1}");
+    }
+
+    #[test]
+    fn state_is_smaller_than_dense_adam() {
+        let shapes = vec![vec![64, 48]];
+        let galore = GaLore::new(&shapes, 8, 10, 0.9, 0.999, 1e-8, 0);
+        let dense_moments = 64 * 48 * 2;
+        // Projected moments: 2 * 8*64 (wide side is 64? shorter side is
+        // 48 -> shape [64, 8]); either way far below dense.
+        assert!(galore.m[0].numel() * 2 < dense_moments / 2);
+    }
+
+    #[test]
+    fn handles_1d_params_as_plain_adam() {
+        let mut params = vec![Tensor::new(vec![2.0, -2.0], &[2])];
+        let mut opt = GaLore::new(&[vec![2]], 4, 10, 0.9, 0.999, 1e-8, 0);
+        for _ in 0..300 {
+            let g = params[0].clone(); // pull to zero
+            opt.step(&mut params, &[g], 0.05);
+        }
+        assert!(params[0].frob_norm() < 0.05);
+    }
+}

@@ -1,0 +1,70 @@
+//! Optimizers. The exported `fwd_bwd` HLO returns raw gradients; every
+//! optimizer (the base Adam and the Table 1 baseline family) runs here
+//! in Rust, which is what makes SALAAD a *plug-and-play optimizer-side*
+//! procedure (§4.2): the structural machinery composes with any of
+//! these without re-lowering the model.
+
+pub mod adam;
+pub mod galore;
+pub mod lowrank_proj;
+pub mod precision;
+
+pub use adam::Adam;
+pub use galore::GaLore;
+pub use lowrank_proj::{LowRankProjector, ProjMode};
+
+use crate::tensor::Tensor;
+
+/// A stateful first-order optimizer over a flat parameter list.
+pub trait Optimizer {
+    /// In-place parameter update from gradients at learning rate `lr`.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64);
+
+    /// Optimizer-state memory in floats (for the cost accounting).
+    fn state_floats(&self) -> usize;
+}
+
+/// Global-norm gradient clipping; returns the pre-clip norm.
+pub fn clip_grads(grads: &mut [Tensor], max_norm: f64) -> f64 {
+    let norm: f64 = grads
+        .iter()
+        .map(|g| {
+            let n = g.frob_norm();
+            n * n
+        })
+        .sum::<f64>()
+        .sqrt();
+    if max_norm > 0.0 && norm > max_norm {
+        let scale = (max_norm / norm) as f32;
+        for g in grads.iter_mut() {
+            g.scale_assign(scale);
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn clip_scales_to_max_norm() {
+        let mut rng = Rng::new(0);
+        let mut gs = vec![Tensor::randn(&[8, 8], &mut rng, 10.0),
+                          Tensor::randn(&[4], &mut rng, 10.0)];
+        let pre = clip_grads(&mut gs, 1.0);
+        assert!(pre > 1.0);
+        let post: f64 = gs.iter().map(|g| g.frob_norm().powi(2)).sum::<f64>()
+            .sqrt();
+        assert!((post - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn clip_noop_below_threshold() {
+        let mut gs = vec![Tensor::new(vec![0.1, 0.1], &[2])];
+        let orig = gs[0].clone();
+        clip_grads(&mut gs, 5.0);
+        assert_eq!(gs[0], orig);
+    }
+}

@@ -1,0 +1,74 @@
+//! bfloat16 training emulation (Appendix E analog).
+//!
+//! The CPU artifacts compute in f32; we emulate reduced-precision
+//! training by rounding parameters (and optionally gradients) through
+//! bf16 after every optimizer step — reproducing the mechanism by which
+//! bf16 degrades SALAAD (coarser proximal/penalty interactions) without
+//! native bf16 kernels. See DESIGN.md §3.
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrecisionPolicy {
+    /// Round parameters to bf16 after each update.
+    pub bf16_params: bool,
+    /// Round incoming gradients to bf16 before the optimizer.
+    pub bf16_grads: bool,
+}
+
+impl PrecisionPolicy {
+    pub fn f32() -> Self {
+        PrecisionPolicy { bf16_params: false, bf16_grads: false }
+    }
+
+    pub fn bf16() -> Self {
+        PrecisionPolicy { bf16_params: true, bf16_grads: true }
+    }
+
+    pub fn apply_params(&self, params: &mut [Tensor]) {
+        if self.bf16_params {
+            for p in params.iter_mut() {
+                p.round_bf16_assign();
+            }
+        }
+    }
+
+    pub fn apply_grads(&self, grads: &mut [Tensor]) {
+        if self.bf16_grads {
+            for g in grads.iter_mut() {
+                g.round_bf16_assign();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn f32_policy_is_identity() {
+        let mut rng = Rng::new(0);
+        let mut ps = vec![Tensor::randn(&[8, 8], &mut rng, 1.0)];
+        let orig = ps[0].clone();
+        PrecisionPolicy::f32().apply_params(&mut ps);
+        assert_eq!(ps[0], orig);
+    }
+
+    #[test]
+    fn bf16_policy_quantizes() {
+        let mut rng = Rng::new(1);
+        let mut ps = vec![Tensor::randn(&[32, 32], &mut rng, 1.0)];
+        let orig = ps[0].clone();
+        PrecisionPolicy::bf16().apply_params(&mut ps);
+        // Values changed but only slightly.
+        assert_ne!(ps[0], orig);
+        let rel = ps[0].dist_frob(&orig) / orig.frob_norm();
+        assert!(rel < 2f64.powi(-7), "rel err {rel}");
+        // Idempotent.
+        let once = ps[0].clone();
+        PrecisionPolicy::bf16().apply_params(&mut ps);
+        assert_eq!(ps[0], once);
+    }
+}

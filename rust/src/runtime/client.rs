@@ -1,0 +1,152 @@
+//! PJRT client wrapper: artifact manifest, executable cache, execution.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::literal::{literal_to_tensor, tensor_to_literal,
+                     tokens_to_literal};
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::Json;
+
+/// One compiled HLO entrypoint.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; flattens the single tuple output.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing `{}`", self.name))?;
+        let out = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("no output from `{}`", self.name))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(out.to_tuple()?)
+    }
+
+    /// Execute and convert every output to a host tensor.
+    pub fn run_tensors(&self, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        self.run(inputs)?.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// Artifact-directory-backed runtime: manifest + executable cache on one
+/// owner thread.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Json,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Json::parse_file(&dir.join("manifest.json"))
+            .context("artifacts/manifest.json missing — run `make artifacts`")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts dir: $SALAAD_ARTIFACTS or ./artifacts.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("SALAAD_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::new(dir)
+    }
+
+    /// Model config for a named scale (nano/micro/mini/small).
+    pub fn model_config(&self, name: &str) -> Result<ModelConfig> {
+        let j = self
+            .manifest
+            .req("configs")?
+            .get(name)
+            .ok_or_else(|| anyhow!("config `{name}` not in manifest"))?;
+        ModelConfig::from_manifest(name, j)
+    }
+
+    pub fn config_names(&self) -> Vec<String> {
+        self.manifest
+            .get("configs")
+            .and_then(|c| c.as_obj().ok())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Load + compile an artifact file (cached).
+    pub fn load_file(&self, file: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {file}"))?;
+        let exe = Rc::new(Executable { name: file.to_string(), exe });
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load a model entrypoint (e.g. "fwd_bwd") for a config.
+    pub fn load_entry(&self, cfg: &ModelConfig, entry: &str)
+                      -> Result<Rc<Executable>> {
+        let file = cfg
+            .entrypoints
+            .get(entry)
+            .ok_or_else(|| anyhow!("entry `{entry}` not exported for {}",
+                                    cfg.name))?;
+        self.load_file(file)
+    }
+
+    /// Load a standalone kernel artifact by short name.
+    pub fn load_kernel(&self, name: &str) -> Result<Rc<Executable>> {
+        let file = self
+            .manifest
+            .req("kernels")?
+            .get(name)
+            .ok_or_else(|| anyhow!("kernel `{name}` not in manifest"))?
+            .req("file")?
+            .as_str()?
+            .to_string();
+        self.load_file(&file)
+    }
+
+    /// Pack (params..., tokens) literal inputs for a model entrypoint.
+    pub fn pack_inputs(&self, cfg: &ModelConfig, params: &[Tensor],
+                       tokens: &[i32], rows: usize) -> Result<Vec<xla::Literal>> {
+        if params.len() != cfg.params.len() {
+            bail!("expected {} params, got {}", cfg.params.len(),
+                  params.len());
+        }
+        let mut lits = Vec::with_capacity(params.len() + 1);
+        for (t, (name, shape)) in params.iter().zip(&cfg.params) {
+            if t.shape != *shape {
+                bail!("param `{name}` shape {:?} != {:?}", t.shape, shape);
+            }
+            lits.push(tensor_to_literal(t)?);
+        }
+        let cols = tokens.len() / rows;
+        lits.push(tokens_to_literal(tokens, rows, cols)?);
+        Ok(lits)
+    }
+
+    pub fn fixtures(&self) -> Result<Json> {
+        Json::parse_file(&self.dir.join("fixtures.json"))
+    }
+}

@@ -1,0 +1,56 @@
+//! Host `Tensor` ⇄ `xla::Literal` marshalling.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// View a typed slice as raw bytes (single-copy literal creation; the
+/// XLA side copies once from this view).
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data numeric slices; alignment of u8 is 1.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   std::mem::size_of_val(data))
+    }
+}
+
+/// f32 tensor -> device literal of the same shape (one copy total —
+/// `Literal::vec1 + reshape` would copy twice; this is the trainer's
+/// per-step marshalling hot path, see EXPERIMENTS.md §Perf).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, &t.shape, as_bytes(&t.data))?)
+}
+
+/// i32 token buffer -> (rows, cols) literal.
+pub fn tokens_to_literal(tokens: &[i32], rows: usize, cols: usize)
+                         -> Result<xla::Literal> {
+    if tokens.len() != rows * cols {
+        bail!("token buffer {} != {rows}x{cols}", tokens.len());
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32, &[rows, cols], as_bytes(tokens))?)
+}
+
+/// Device literal -> host tensor (f32; converts from other float types).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let lit_f32;
+    let src = if shape.ty() == xla::ElementType::F32 {
+        lit
+    } else {
+        lit_f32 = lit.convert(xla::PrimitiveType::F32)?;
+        &lit_f32
+    };
+    let data = src.to_vec::<f32>()?;
+    Ok(Tensor::new(data, &dims))
+}
+
+/// Scalar literal -> f64.
+pub fn literal_scalar(lit: &xla::Literal) -> Result<f64> {
+    let t = literal_to_tensor(lit)?;
+    if t.numel() != 1 {
+        bail!("expected scalar, got shape {:?}", t.shape);
+    }
+    Ok(t.data[0] as f64)
+}

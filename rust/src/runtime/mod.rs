@@ -1,0 +1,17 @@
+//! PJRT runtime bridge: load AOT-compiled HLO text artifacts and execute
+//! them from the coordinator hot path.
+//!
+//! Wiring (see /opt/xla-example/load_hlo for the reference pattern):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute`. HLO *text* is the
+//! interchange format — jax ≥ 0.5 emits protos with 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so a [`Runtime`] lives on
+//! one owner thread; the block-parallel ADMM phase is pure Rust and
+//! never touches PJRT.
+
+pub mod literal;
+pub mod client;
+
+pub use client::{Executable, Runtime};

@@ -1,0 +1,86 @@
+//! Deadline-based dynamic batcher: collect up to `max_batch` requests or
+//! wait at most `max_wait`, whichever comes first — the standard
+//! latency/throughput knob of LLM serving frontends.
+
+use super::request::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Batcher { max_batch: max_batch.max(1), max_wait }
+    }
+
+    /// Block until at least one request is available, then keep
+    /// collecting until the batch is full or the deadline passes.
+    /// Returns None when the channel is closed and drained.
+    pub fn next_batch(&self, rx: &Receiver<Request>)
+                      -> Option<Vec<(Request, Instant)>> {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return None,
+        };
+        let mut out = vec![(first, Instant::now())];
+        let deadline = Instant::now() + self.max_wait;
+        while out.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => out.push((r, Instant::now())),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1, 2], max_new_tokens: 1,
+                  budget_params: 0 }
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = Batcher::new(3, Duration::from_millis(50));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch2 = b.next_batch(&rx).unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(req(0)).unwrap();
+        let b = Batcher::new(8, Duration::from_millis(20));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = channel::<Request>();
+        drop(tx);
+        let b = Batcher::new(4, Duration::from_millis(5));
+        assert!(b.next_batch(&rx).is_none());
+    }
+}

@@ -1,0 +1,16 @@
+//! Elastic budgeted serving: the deployment half of the paper's claim.
+//!
+//! A [`Server`] owns one HPA-compressed model variant per configured
+//! memory budget, batches incoming requests with a deadline-based
+//! dynamic batcher, and routes each request to the variant that fits its
+//! memory budget. Threading: PJRT is not `Send`, so the server runs on
+//! its owner thread and talks to clients over std::sync::mpsc channels
+//! (the offline vendor set has no tokio; DESIGN.md §3).
+
+pub mod request;
+pub mod batcher;
+pub mod server;
+
+pub use request::{Request, Response};
+pub use batcher::Batcher;
+pub use server::{Server, ServerOptions, VariantSpec};

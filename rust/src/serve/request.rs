@@ -1,0 +1,23 @@
+//! Request/response types for the serving loop.
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt tokens (truncated to seq_len − max_new_tokens if longer).
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Memory budget in parameters for this request (selects the HPA
+    /// variant); 0 = full surrogate.
+    pub budget_params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Which variant served it (surrogate parameter count).
+    pub served_params: usize,
+    pub latency_ms: f64,
+    /// Queueing + batching delay component.
+    pub queue_ms: f64,
+}

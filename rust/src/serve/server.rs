@@ -1,0 +1,177 @@
+//! The elastic server: HPA-derived model variants + dynamic batching +
+//! budget-aware routing, with greedy decoding through the `logits`
+//! executable.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::request::{Request, Response};
+use crate::config::ModelConfig;
+use crate::runtime::Runtime;
+use crate::slr::{hpa, SlrBlock};
+use crate::tensor::Tensor;
+
+/// One deployable model variant: a parameter budget and its HPA-derived
+/// weights (materialized once at startup — elastic deployment without
+/// retraining).
+pub struct VariantSpec {
+    /// Surrogate parameter count of this variant.
+    pub params_count: usize,
+    pub params: Vec<Tensor>,
+}
+
+pub struct ServerOptions {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub kappa: f64,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { max_batch: 8,
+                        max_wait: Duration::from_millis(10),
+                        kappa: 0.7 }
+    }
+}
+
+pub struct Server<'a> {
+    rt: &'a Runtime,
+    cfg: ModelConfig,
+    /// Variants sorted by ascending parameter count.
+    pub variants: Vec<VariantSpec>,
+    batcher: Batcher,
+    pub served: u64,
+}
+
+impl<'a> Server<'a> {
+    /// Build variants from a trained surrogate: one per requested budget
+    /// (given as fractions of removable parameters) plus the full
+    /// surrogate.
+    pub fn new(rt: &'a Runtime, cfg: ModelConfig, base_params: &[Tensor],
+               blocks: &[SlrBlock], block_param_idx: &[usize],
+               budget_fracs: &[f64], opts: ServerOptions) -> Result<Self> {
+        let mut variants = Vec::new();
+        let pool = hpa::plan(blocks, opts.kappa, 0)?;
+        let removable = pool.c_l + pool.c_s;
+        let full_count = Self::count_with(cfg.n_params(), blocks,
+                                          block_param_idx, blocks);
+        // Full surrogate variant.
+        variants.push(VariantSpec {
+            params_count: full_count,
+            params: Self::materialize(base_params, blocks, block_param_idx),
+        });
+        for frac in budget_fracs {
+            let budget = (removable as f64 * frac.clamp(0.0, 0.95)) as usize;
+            let plan = hpa::plan(blocks, opts.kappa, budget)?;
+            let (trunc, _report) = hpa::apply(blocks, &plan);
+            variants.push(VariantSpec {
+                params_count: Self::count_with(cfg.n_params(), blocks,
+                                               block_param_idx, &trunc),
+                params: Self::materialize(base_params, &trunc,
+                                          block_param_idx),
+            });
+        }
+        variants.sort_by_key(|v| v.params_count);
+        Ok(Server {
+            rt,
+            cfg,
+            variants,
+            batcher: Batcher::new(opts.max_batch, opts.max_wait),
+            served: 0,
+        })
+    }
+
+    fn materialize(base: &[Tensor], blocks: &[SlrBlock], idx: &[usize])
+                   -> Vec<Tensor> {
+        let mut out = base.to_vec();
+        for (b, &i) in blocks.iter().zip(idx) {
+            out[i] = b.xhat();
+        }
+        out
+    }
+
+    fn count_with(dense_total: usize, orig: &[SlrBlock], _idx: &[usize],
+                  blocks: &[SlrBlock]) -> usize {
+        let dense_selected: usize =
+            orig.iter().map(|b| b.dense_param_count()).sum();
+        let slr: usize = blocks.iter().map(|b| b.param_count()).sum();
+        dense_total - dense_selected + slr
+    }
+
+    /// Pick the largest variant that fits the request's budget
+    /// (0 = unconstrained → largest available).
+    pub fn route(&self, budget_params: usize) -> &VariantSpec {
+        if budget_params == 0 {
+            return self.variants.last().unwrap();
+        }
+        self.variants
+            .iter()
+            .rev()
+            .find(|v| v.params_count <= budget_params)
+            .unwrap_or(&self.variants[0])
+    }
+
+    /// Greedy-decode continuation tokens for one prompt.
+    fn generate(&self, variant: &VariantSpec, prompt: &[u32],
+                max_new: usize) -> Result<Vec<u32>> {
+        let t = self.cfg.seq_len;
+        let exe = self.rt.load_entry(&self.cfg, "logits")?;
+        let mut seq: Vec<u32> = prompt.to_vec();
+        let keep = t.saturating_sub(max_new.max(1));
+        if seq.len() > keep {
+            seq = seq[seq.len() - keep..].to_vec();
+        }
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let mut padded: Vec<i32> =
+                seq.iter().map(|x| *x as i32).collect();
+            let last_pos = padded.len() - 1;
+            padded.resize(t, 0);
+            let inputs =
+                self.rt.pack_inputs(&self.cfg, &variant.params, &padded, 1)?;
+            let logits = exe.run_tensors(&inputs)?;
+            let v = self.cfg.vocab;
+            let row = &logits[0].data[last_pos * v..(last_pos + 1) * v];
+            let next = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as u32)
+                .unwrap();
+            out.push(next);
+            seq.push(next);
+            if seq.len() >= t {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Serve until the request channel closes. Runs on the caller's
+    /// thread (PJRT is not Send); clients live on other threads.
+    pub fn run(&mut self, rx: Receiver<Request>, tx: Sender<Response>)
+               -> Result<()> {
+        while let Some(batch) = self.batcher.next_batch(&rx) {
+            for (req, enqueued) in batch {
+                let queue_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+                let t0 = Instant::now();
+                let variant = self.route(req.budget_params);
+                let served_params = variant.params_count;
+                let tokens = self.generate(variant, &req.prompt,
+                                           req.max_new_tokens)?;
+                self.served += 1;
+                let _ = tx.send(Response {
+                    id: req.id,
+                    tokens,
+                    served_params,
+                    latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    queue_ms,
+                });
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-block SLR surrogate state: factored L = U diag(s) Vᵀ, sparse
+//! residual S (dense storage, sparse content), dual Y, and the
+//! block-local regularization state (α, β, ρ).
+
+use super::metrics::{density, effective_rank_ratio, slr_param_count};
+use crate::linalg::reconstruct;
+use crate::tensor::Tensor;
+
+/// Threshold below which an S entry counts as a structural zero.
+pub const S_EPS: f32 = 1e-12;
+
+#[derive(Clone, Debug)]
+pub struct SlrBlock {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    /// Low-rank factors: u (n×r), s (r), v (m×r). r may be 0.
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+    /// Sparse residual, stored dense (content is sparse; accounting uses
+    /// nnz — see DESIGN.md §3 on the simulator's memory model).
+    pub sp: Tensor,
+    /// Scaled dual variable Y for the X = L + S constraint.
+    pub y: Tensor,
+    /// Nuclear / ℓ1 regularization weights (the I-controller's state).
+    pub alpha: f64,
+    pub beta: f64,
+    /// Block-wise penalty from the scaling law (Eq. 7).
+    pub rho: f64,
+}
+
+impl SlrBlock {
+    /// Fresh surrogate for an (n×m) block. Initial thresholds are scaled
+    /// to the expected init spectrum (σ₁ ≈ std·(√n+√m) for a Gaussian
+    /// matrix) so the first ADMM phase neither wipes the block nor
+    /// keeps everything; the I-controller adapts from there.
+    pub fn new(name: &str, n: usize, m: usize, rho: f64, alpha_frac: f64,
+               beta_frac: f64) -> Self {
+        let sigma1_est = 0.02 * ((n as f64).sqrt() + (m as f64).sqrt());
+        let alpha = alpha_frac * sigma1_est * rho;
+        let beta = beta_frac * 0.02 * rho;
+        SlrBlock {
+            name: name.to_string(),
+            n,
+            m,
+            u: Tensor::zeros(&[n, 0]),
+            s: Vec::new(),
+            v: Tensor::zeros(&[m, 0]),
+            sp: Tensor::zeros(&[n, m]),
+            y: Tensor::zeros(&[n, m]),
+            alpha,
+            beta,
+            rho,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// SVT threshold τ_L = α/ρ.
+    pub fn tau_l(&self) -> f32 {
+        (self.alpha / self.rho) as f32
+    }
+
+    /// Shrinkage threshold τ_S = β/ρ.
+    pub fn tau_s(&self) -> f32 {
+        (self.beta / self.rho) as f32
+    }
+
+    /// Dense L = U diag(s) Vᵀ.
+    pub fn l_dense(&self) -> Tensor {
+        if self.rank() == 0 {
+            return Tensor::zeros(&[self.n, self.m]);
+        }
+        reconstruct(&self.u, &self.s, &self.v)
+    }
+
+    /// Structured surrogate X̂ = L + S.
+    pub fn xhat(&self) -> Tensor {
+        let mut out = self.l_dense();
+        out.add_assign(&self.sp);
+        out
+    }
+
+    /// Effective rank ratio Γ_L^γ of the current L.
+    pub fn rank_ratio(&self, gamma: f64) -> f64 {
+        effective_rank_ratio(&self.s, gamma, self.n.min(self.m))
+    }
+
+    /// Density Υ_S of the current S.
+    pub fn density(&self) -> f64 {
+        density(&self.sp.data, S_EPS)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.sp.nnz(S_EPS)
+    }
+
+    /// Deployable parameter count of the surrogate.
+    pub fn param_count(&self) -> usize {
+        slr_param_count(self.rank(), self.n, self.m, self.nnz())
+    }
+
+    /// Dense parameter count of the original block.
+    pub fn dense_param_count(&self) -> usize {
+        self.n * self.m
+    }
+
+    /// Reconstruction error δ = ‖X − L − S‖_F against a dense X.
+    pub fn recon_error(&self, x: &Tensor) -> f64 {
+        self.xhat().dist_frob(x)
+    }
+
+    /// Anchor A = L + S − Y/ρ for the coupled-loss penalty
+    /// ℓ_ρ = ρ/2‖X − A‖²_F (Eq. 6 rearranged).
+    pub fn anchor(&self) -> Tensor {
+        let mut a = self.xhat();
+        a.axpy(-(1.0 / self.rho) as f32, &self.y);
+        a
+    }
+
+    /// Hard projection to a fixed structural quota: keep the top
+    /// `rank_k` singular values and the top `nnz_q` sparse entries by
+    /// magnitude. This is how the fixed-structure baselines (SLTrain /
+    /// LOST analogs) enforce their pre-declared rank/sparsity budgets.
+    pub fn project_to_quota(&mut self, rank_k: usize, nnz_q: usize) {
+        // Spectrum is stored descending after SVT; truncate the tail.
+        if self.rank() > rank_k {
+            let r = self.rank();
+            let keep = rank_k;
+            let mut u = Tensor::zeros(&[self.n, keep]);
+            let mut v = Tensor::zeros(&[self.m, keep]);
+            for i in 0..self.n {
+                for j in 0..keep {
+                    u.data[i * keep + j] = self.u.data[i * r + j];
+                }
+            }
+            for i in 0..self.m {
+                for j in 0..keep {
+                    v.data[i * keep + j] = self.v.data[i * r + j];
+                }
+            }
+            self.u = u;
+            self.v = v;
+            self.s.truncate(keep);
+        }
+        let nnz = self.nnz();
+        if nnz > nnz_q {
+            let mut mags: Vec<(f32, usize)> = self
+                .sp
+                .data
+                .iter()
+                .enumerate()
+                .filter(|(_, x)| x.abs() > S_EPS)
+                .map(|(i, x)| (x.abs(), i))
+                .collect();
+            mags.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for (_, idx) in mags.into_iter().take(nnz - nnz_q) {
+                self.sp.data[idx] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fresh_block_is_zero() {
+        let b = SlrBlock::new("t", 8, 6, 1e-3, 0.5, 0.5);
+        assert_eq!(b.rank(), 0);
+        assert_eq!(b.nnz(), 0);
+        assert_eq!(b.param_count(), 0);
+        assert_eq!(b.xhat(), Tensor::zeros(&[8, 6]));
+        assert!(b.tau_l() > 0.0 && b.tau_s() > 0.0);
+    }
+
+    #[test]
+    fn xhat_is_l_plus_s() {
+        let mut rng = Rng::new(0);
+        let mut b = SlrBlock::new("t", 6, 5, 1e-3, 0.5, 0.5);
+        b.u = Tensor::randn(&[6, 2], &mut rng, 1.0);
+        b.s = vec![2.0, 1.0];
+        b.v = Tensor::randn(&[5, 2], &mut rng, 1.0);
+        b.sp = Tensor::randn(&[6, 5], &mut rng, 0.1);
+        let want = b.l_dense().add(&b.sp);
+        assert!(b.xhat().dist_frob(&want) < 1e-6);
+        assert_eq!(b.param_count(), 2 * (6 + 5 + 1) + 30);
+    }
+
+    #[test]
+    fn anchor_formula() {
+        let mut rng = Rng::new(1);
+        let mut b = SlrBlock::new("t", 4, 4, 0.5, 0.5, 0.5);
+        b.sp = Tensor::randn(&[4, 4], &mut rng, 1.0);
+        b.y = Tensor::randn(&[4, 4], &mut rng, 1.0);
+        let a = b.anchor();
+        let manual = b.xhat().sub(&b.y.scale(1.0 / 0.5));
+        assert!(a.dist_frob(&manual) < 1e-6);
+    }
+
+    #[test]
+    fn recon_error_of_exact_match_is_zero() {
+        let mut rng = Rng::new(2);
+        let mut b = SlrBlock::new("t", 5, 5, 1e-3, 0.5, 0.5);
+        b.sp = Tensor::randn(&[5, 5], &mut rng, 1.0);
+        let x = b.xhat();
+        assert!(b.recon_error(&x) < 1e-9);
+    }
+}

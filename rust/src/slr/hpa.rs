@@ -1,0 +1,291 @@
+//! Homomorphic Parameter Allocation (§4.3): deployment-time budgeted
+//! truncation without retraining.
+//!
+//! Given a removal budget C and mixing coefficient κ, derive global
+//! scaling ratios (Eq. 9)
+//!
+//!   φ_L = κC / C_L,   φ_S = (1−κ)C / C_S,
+//!
+//! with surplus reassignment when either ratio exceeds 1 (footnote 3),
+//! then apply the *same fractional* truncation to every block: drop the
+//! smallest φ_L fraction of each block's singular values (each freeing
+//! n+m+1 parameters) and the smallest φ_S fraction of each block's
+//! sparse entries. Relative block-to-block differences learned during
+//! training are preserved (Remark 4.2).
+
+use super::block::{SlrBlock, S_EPS};
+use super::metrics::slr_param_count;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// The derived plan for a budget.
+#[derive(Clone, Debug)]
+pub struct HpaPlan {
+    pub kappa: f64,
+    /// Parameters requested for removal.
+    pub budget: usize,
+    pub phi_l: f64,
+    pub phi_s: f64,
+    /// Removable pools.
+    pub c_l: usize,
+    pub c_s: usize,
+}
+
+/// Accounting of an applied plan.
+#[derive(Clone, Debug)]
+pub struct HpaReport {
+    pub plan: HpaPlan,
+    pub removed: usize,
+    pub params_before: usize,
+    pub params_after: usize,
+}
+
+/// Derive (φ_L, φ_S) for removing `budget` parameters at mixing κ.
+pub fn plan(blocks: &[SlrBlock], kappa: f64, budget: usize)
+            -> Result<HpaPlan> {
+    if !(0.0..=1.0).contains(&kappa) {
+        bail!("κ must be in [0,1], got {kappa}");
+    }
+    // C_L: parameters freed if every singular value were removed.
+    let c_l: usize = blocks
+        .iter()
+        .map(|b| b.rank() * (b.n + b.m + 1))
+        .sum();
+    let c_s: usize = blocks.iter().map(|b| b.nnz()).sum();
+    if budget > c_l + c_s {
+        bail!("budget {budget} exceeds removable pool {}", c_l + c_s);
+    }
+    let mut want_l = kappa * budget as f64;
+    let mut want_s = (1.0 - kappa) * budget as f64;
+    // Footnote 3: surplus reassignment keeps both ratios feasible.
+    if want_l > c_l as f64 {
+        want_s += want_l - c_l as f64;
+        want_l = c_l as f64;
+    }
+    if want_s > c_s as f64 {
+        want_l = (want_l + want_s - c_s as f64).min(c_l as f64);
+        want_s = c_s as f64;
+    }
+    let phi_l = if c_l == 0 { 0.0 } else { want_l / c_l as f64 };
+    let phi_s = if c_s == 0 { 0.0 } else { want_s / c_s as f64 };
+    Ok(HpaPlan { kappa, budget, phi_l, phi_s, c_l, c_s })
+}
+
+/// Apply a plan, producing truncated copies of the blocks (the deployed
+/// model) plus accounting. Original blocks are untouched — one training
+/// run serves every budget (the paper's elastic-deployment claim).
+pub fn apply(blocks: &[SlrBlock], plan_: &HpaPlan)
+             -> (Vec<SlrBlock>, HpaReport) {
+    let params_before: usize =
+        blocks.iter().map(|b| b.param_count()).sum();
+    let mut removed = 0usize;
+    let out: Vec<SlrBlock> = blocks
+        .iter()
+        .map(|b| {
+            let (nb, freed) = truncate_block(b, plan_.phi_l, plan_.phi_s);
+            removed += freed;
+            nb
+        })
+        .collect();
+    let params_after: usize = out.iter().map(|b| b.param_count()).sum();
+    (out, HpaReport { plan: plan_.clone(), removed, params_before,
+                      params_after })
+}
+
+/// Remove the smallest `phi_l` fraction of singular values and the
+/// smallest `phi_s` fraction of sparse nonzeros from one block.
+fn truncate_block(b: &SlrBlock, phi_l: f64, phi_s: f64)
+                  -> (SlrBlock, usize) {
+    let mut out = b.clone();
+    let mut freed = 0usize;
+
+    // --- Low-rank truncation: drop the k_drop smallest values.
+    let r = b.rank();
+    let k_drop = ((r as f64 * phi_l).round() as usize).min(r);
+    if k_drop > 0 {
+        let keep = r - k_drop;
+        // Singular values are stored descending; keep the head.
+        let mut order: Vec<usize> = (0..r).collect();
+        order.sort_by(|&i, &j| b.s[j].partial_cmp(&b.s[i]).unwrap());
+        let kept: Vec<usize> = order[..keep].to_vec();
+        let mut u = Tensor::zeros(&[b.n, keep]);
+        let mut v = Tensor::zeros(&[b.m, keep]);
+        let mut s = Vec::with_capacity(keep);
+        for (jj, &src) in kept.iter().enumerate() {
+            s.push(b.s[src]);
+            for i in 0..b.n {
+                u.data[i * keep + jj] = b.u.data[i * r + src];
+            }
+            for i in 0..b.m {
+                v.data[i * keep + jj] = b.v.data[i * r + src];
+            }
+        }
+        out.u = u;
+        out.s = s;
+        out.v = v;
+        freed += k_drop * (b.n + b.m + 1);
+    }
+
+    // --- Sparse truncation: zero the smallest-|.| phi_s fraction.
+    let nnz = b.nnz();
+    let s_drop = ((nnz as f64 * phi_s).round() as usize).min(nnz);
+    if s_drop > 0 {
+        let mut mags: Vec<(f32, usize)> = b
+            .sp
+            .data
+            .iter()
+            .enumerate()
+            .filter(|(_, x)| x.abs() > S_EPS)
+            .map(|(i, x)| (x.abs(), i))
+            .collect();
+        mags.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (_, idx) in mags.into_iter().take(s_drop) {
+            out.sp.data[idx] = 0.0;
+        }
+        freed += s_drop;
+    }
+    (out, freed)
+}
+
+/// Total surrogate parameter count across blocks.
+pub fn total_params(blocks: &[SlrBlock]) -> usize {
+    blocks
+        .iter()
+        .map(|b| slr_param_count(b.rank(), b.n, b.m, b.nnz()))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn random_blocks(rng: &mut Rng, n_blocks: usize) -> Vec<SlrBlock> {
+        (0..n_blocks)
+            .map(|i| {
+                let n = prop::dim(rng, 8, 24);
+                let m = prop::dim(rng, 8, 24);
+                let r = prop::dim(rng, 2, n.min(m) / 2);
+                let mut b = SlrBlock::new(&format!("b{i}"), n, m, 1.0,
+                                          0.5, 0.5);
+                b.u = Tensor::randn(&[n, r], rng, 1.0);
+                b.s = (0..r)
+                    .map(|k| (r - k) as f32 + rng.next_f64() as f32)
+                    .collect();
+                b.v = Tensor::randn(&[m, r], rng, 1.0);
+                // ~30% dense sparse part.
+                let mut sp = Tensor::zeros(&[n, m]);
+                for idx in 0..sp.data.len() {
+                    if rng.next_f64() < 0.3 {
+                        sp.data[idx] = rng.next_normal() as f32;
+                    }
+                }
+                b.sp = sp;
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_respects_budget_and_feasibility() {
+        prop::check("hpa_budget", 12, |rng| {
+            let blocks = random_blocks(rng, 4);
+            let pool = plan(&blocks, 0.5, 0).unwrap();
+            let max_budget = pool.c_l + pool.c_s;
+            let budget = (max_budget as f64
+                          * rng.next_range_f64(0.1, 0.9)) as usize;
+            let kappa = rng.next_f64();
+            let p = plan(&blocks, kappa, budget).unwrap();
+            assert!(p.phi_l <= 1.0 + 1e-9 && p.phi_s <= 1.0 + 1e-9);
+            assert!(p.phi_l >= 0.0 && p.phi_s >= 0.0);
+            // Planned removal covers the budget.
+            let planned = p.phi_l * p.c_l as f64 + p.phi_s * p.c_s as f64;
+            assert!(planned >= budget as f64 - 1e-6,
+                    "planned {planned} < budget {budget}");
+        });
+    }
+
+    #[test]
+    fn infeasible_budget_rejected() {
+        let mut rng = Rng::new(0);
+        let blocks = random_blocks(&mut rng, 2);
+        let pool = plan(&blocks, 0.5, 0).unwrap();
+        assert!(plan(&blocks, 0.5, pool.c_l + pool.c_s + 1).is_err());
+        assert!(plan(&blocks, 1.5, 10).is_err());
+    }
+
+    #[test]
+    fn apply_removes_close_to_budget() {
+        prop::check("hpa_apply", 10, |rng| {
+            let blocks = random_blocks(rng, 5);
+            let pool = plan(&blocks, 0.5, 0).unwrap();
+            let budget = (pool.c_l + pool.c_s) / 3;
+            let p = plan(&blocks, 0.6, budget).unwrap();
+            let (trunc, report) = apply(&blocks, &p);
+            // Rounding per block: allow slack of one unit per block.
+            let slack: usize = blocks
+                .iter()
+                .map(|b| b.n + b.m + 2)
+                .sum();
+            assert!(report.removed + slack >= budget,
+                    "removed {} vs budget {budget}", report.removed);
+            assert_eq!(report.params_before - report.params_after,
+                       report.removed);
+            assert_eq!(trunc.len(), blocks.len());
+        });
+    }
+
+    #[test]
+    fn surplus_reassignment_kappa_one() {
+        // κ=1 with a tiny low-rank pool must spill into S.
+        let mut rng = Rng::new(3);
+        let blocks = random_blocks(&mut rng, 3);
+        let pool = plan(&blocks, 0.5, 0).unwrap();
+        let budget = pool.c_l + pool.c_s / 2; // more than C_L alone
+        let p = plan(&blocks, 1.0, budget).unwrap();
+        assert!((p.phi_l - 1.0).abs() < 1e-9);
+        assert!(p.phi_s > 0.0);
+    }
+
+    #[test]
+    fn homomorphism_preserves_relative_ranks() {
+        // Remark 4.2: block with twice the rank keeps twice the rank.
+        let mut rng = Rng::new(4);
+        let mut blocks = random_blocks(&mut rng, 2);
+        // Force known ranks 12 and 6.
+        for (b, r) in blocks.iter_mut().zip([12usize, 6usize]) {
+            b.u = Tensor::randn(&[b.n, r], &mut rng, 1.0);
+            b.s = (0..r).map(|k| (r - k) as f32).collect();
+            b.v = Tensor::randn(&[b.m, r], &mut rng, 1.0);
+        }
+        let pool = plan(&blocks, 1.0, 0).unwrap();
+        let budget = pool.c_l / 2;
+        let p = plan(&blocks, 1.0, budget).unwrap();
+        let (trunc, _) = apply(&blocks, &p);
+        assert_eq!(trunc[0].rank(), 2 * trunc[1].rank());
+    }
+
+    #[test]
+    fn truncation_drops_smallest_first() {
+        let mut rng = Rng::new(5);
+        let mut b = SlrBlock::new("t", 8, 8, 1.0, 0.5, 0.5);
+        b.u = Tensor::randn(&[8, 4], &mut rng, 1.0);
+        b.s = vec![4.0, 3.0, 2.0, 1.0];
+        b.v = Tensor::randn(&[8, 4], &mut rng, 1.0);
+        let (out, _) = truncate_block(&b, 0.5, 0.0);
+        assert_eq!(out.s, vec![4.0, 3.0]);
+    }
+
+    #[test]
+    fn zero_budget_is_identity() {
+        let mut rng = Rng::new(6);
+        let blocks = random_blocks(&mut rng, 3);
+        let p = plan(&blocks, 0.5, 0).unwrap();
+        let (trunc, report) = apply(&blocks, &p);
+        assert_eq!(report.removed, 0);
+        for (a, b) in blocks.iter().zip(&trunc) {
+            assert_eq!(a.rank(), b.rank());
+            assert_eq!(a.nnz(), b.nnz());
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Structural metrics: effective rank ratio under energy coverage
+//! (Definition 4.1) and sparse density.
+
+/// Effective rank ratio Γ_L^γ (Definition 4.1): the smallest k such that
+/// the top-k singular values cover a γ fraction of the *sum* of singular
+/// values, divided by min(n, m).
+///
+/// `s` need not be sorted; zero spectra have ratio 0.
+pub fn effective_rank_ratio(s: &[f32], gamma: f64, min_dim: usize) -> f64 {
+    if min_dim == 0 {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = s.iter().map(|x| *x as f64).collect();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f64 = sorted.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for (k, v) in sorted.iter().enumerate() {
+        acc += v;
+        if acc / total >= gamma {
+            return (k + 1) as f64 / min_dim as f64;
+        }
+    }
+    sorted.len() as f64 / min_dim as f64
+}
+
+/// Density Υ_S: fraction of entries with |x| > eps.
+pub fn density(data: &[f32], eps: f32) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter().filter(|x| x.abs() > eps).count() as f64 / data.len() as f64
+}
+
+/// Parameter count of a factored SLR block: r·(n+m+1) for the low-rank
+/// factors plus the nonzero count of S (sparse storage assumption —
+/// indices are accounted on the low side, as the paper's PRM column
+/// does).
+pub fn slr_param_count(rank: usize, n: usize, m: usize, nnz: usize)
+                       -> usize {
+    rank * (n + m + 1) + nnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn rank_ratio_known_cases() {
+        // Single dominant value covers everything.
+        assert!((effective_rank_ratio(&[10.0, 0.0, 0.0], 0.999, 3)
+                 - 1.0 / 3.0).abs() < 1e-12);
+        // Uniform spectrum needs ~all values.
+        let r = effective_rank_ratio(&[1.0; 10], 0.999, 10);
+        assert!(r >= 0.9);
+        // Zero spectrum.
+        assert_eq!(effective_rank_ratio(&[0.0; 5], 0.999, 5), 0.0);
+    }
+
+    #[test]
+    fn rank_ratio_monotone_in_gamma() {
+        prop::check("rank_ratio_monotone", 32, |rng| {
+            let k = prop::dim(rng, 2, 20);
+            let s: Vec<f32> =
+                (0..k).map(|_| rng.next_f64() as f32 + 0.01).collect();
+            let lo = effective_rank_ratio(&s, 0.5, k);
+            let hi = effective_rank_ratio(&s, 0.999, k);
+            assert!(lo <= hi + 1e-12);
+            assert!((0.0..=1.0).contains(&lo));
+            assert!((0.0..=1.0).contains(&hi));
+        });
+    }
+
+    #[test]
+    fn rank_ratio_ignores_order() {
+        let a = effective_rank_ratio(&[1.0, 5.0, 2.0], 0.9, 3);
+        let b = effective_rank_ratio(&[5.0, 2.0, 1.0], 0.9, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn density_cases() {
+        assert_eq!(density(&[0.0, 1.0, 0.0, -2.0], 1e-9), 0.5);
+        assert_eq!(density(&[], 1e-9), 0.0);
+        assert_eq!(density(&[1e-12; 4], 1e-9), 0.0);
+    }
+
+    #[test]
+    fn param_count() {
+        assert_eq!(slr_param_count(2, 10, 5, 7), 2 * 16 + 7);
+        assert_eq!(slr_param_count(0, 10, 5, 0), 0);
+    }
+}

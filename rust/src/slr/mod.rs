@@ -1,0 +1,17 @@
+//! The paper's core algorithms: SLR surrogate state, proximal operators,
+//! the ADMM structural update (Alg. 1 second stage), the block-wise
+//! I-controller (§4.2), RPCA (the post-hoc baseline, Appendix A) and the
+//! HPA deployment-time allocator (§4.3).
+
+pub mod block;
+pub mod prox;
+pub mod metrics;
+pub mod admm;
+pub mod controller;
+pub mod rpca;
+pub mod hpa;
+pub mod sparse;
+
+pub use block::SlrBlock;
+pub use controller::IController;
+pub use hpa::{HpaPlan, HpaReport};

@@ -1,0 +1,193 @@
+//! Proximal operators for the ADMM structural phase:
+//!
+//! - [`soft_threshold`] — prox of τ‖·‖₁ (Eq. 4's S-update),
+//! - [`svt`] — singular value thresholding, prox of τ‖·‖* (Eq. 3's
+//!   L-update), with a randomized fast path certified against the
+//!   threshold and an exact Jacobi fallback.
+
+use crate::linalg::{jacobi_svd, rand_svd, rand_svd::tail_bounded, Svd};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Element-wise shrinkage: sign(z)·max(|z|−τ, 0).
+pub fn soft_threshold(z: &Tensor, tau: f32) -> Tensor {
+    let data = z
+        .data
+        .iter()
+        .map(|x| x.signum() * (x.abs() - tau).max(0.0))
+        .collect();
+    Tensor::new(data, &z.shape)
+}
+
+/// In-place variant for the hot path.
+pub fn soft_threshold_assign(z: &mut Tensor, tau: f32) {
+    for x in z.data.iter_mut() {
+        *x = x.signum() * (x.abs() - tau).max(0.0);
+    }
+}
+
+/// Result of singular-value thresholding: factored L with only the
+/// surviving (shrunk) singular values.
+pub struct SvtResult {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+    /// True when the randomized path was used (perf accounting).
+    pub randomized: bool,
+}
+
+/// prox_{τ‖·‖*}(Z) = U diag((σ−τ)+) Vᵀ, keeping only surviving columns.
+///
+/// `rank_hint` caps the randomized sketch; when the sketch cannot
+/// certify that every discarded singular value falls below τ the
+/// computation escalates to the exact Jacobi SVD.
+pub fn svt(z: &Tensor, tau: f32, rank_hint: usize, rng: &mut Rng)
+           -> SvtResult {
+    let (n, m) = (z.nrows(), z.ncols());
+    let min_dim = n.min(m);
+    let use_exact = min_dim <= 32 || rank_hint * 2 >= min_dim;
+    let (svd, randomized) = if use_exact {
+        (jacobi_svd(z), false)
+    } else {
+        let sketch = rand_svd(z, rank_hint, 8, 2, rng);
+        if tail_bounded(&sketch, tau) {
+            (sketch, true)
+        } else {
+            (jacobi_svd(z), false)
+        }
+    };
+    let (trunc_u, kept_s, trunc_v) = threshold_svd(&svd, tau);
+    SvtResult { u: trunc_u, s: kept_s, v: trunc_v, randomized }
+}
+
+/// Shrink the spectrum by τ and drop zeroed directions.
+fn threshold_svd(svd: &Svd, tau: f32) -> (Tensor, Vec<f32>, Tensor) {
+    let kept: Vec<(usize, f32)> = svd
+        .s
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| {
+            let shrunk = s - tau;
+            if shrunk > 0.0 { Some((i, shrunk)) } else { None }
+        })
+        .collect();
+    let k = kept.len();
+    let n = svd.u.nrows();
+    let m = svd.v.nrows();
+    let ucols = svd.u.ncols();
+    let vcols = svd.v.ncols();
+    let mut u = Tensor::zeros(&[n, k]);
+    let mut v = Tensor::zeros(&[m, k]);
+    let mut s = Vec::with_capacity(k);
+    for (jj, (src, shrunk)) in kept.iter().enumerate() {
+        s.push(*shrunk);
+        for i in 0..n {
+            u.data[i * k + jj] = svd.u.data[i * ucols + src];
+        }
+        for i in 0..m {
+            v.data[i * k + jj] = svd.v.data[i * vcols + src];
+        }
+    }
+    (u, s, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::reconstruct;
+    use crate::util::prop;
+
+    #[test]
+    fn soft_threshold_matches_definition() {
+        prop::check("shrink_def", 32, |rng| {
+            let t = Tensor::randn(&[8, 8], rng, 1.0);
+            let tau = rng.next_f64() as f32;
+            let out = soft_threshold(&t, tau);
+            for (o, z) in out.data.iter().zip(&t.data) {
+                let want = z.signum() * (z.abs() - tau).max(0.0);
+                assert_eq!(*o, want);
+            }
+        });
+    }
+
+    #[test]
+    fn soft_threshold_nonexpansive() {
+        // prox of a convex function is 1-Lipschitz.
+        prop::check("shrink_nonexpansive", 16, |rng| {
+            let a = Tensor::randn(&[6, 6], rng, 1.0);
+            let b = Tensor::randn(&[6, 6], rng, 1.0);
+            let tau = 0.3;
+            let pa = soft_threshold(&a, tau);
+            let pb = soft_threshold(&b, tau);
+            assert!(pa.dist_frob(&pb) <= a.dist_frob(&b) + 1e-6);
+        });
+    }
+
+    #[test]
+    fn inplace_matches() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[5, 7], &mut rng, 1.0);
+        let a = soft_threshold(&t, 0.4);
+        let mut b = t.clone();
+        soft_threshold_assign(&mut b, 0.4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn svt_spectrum_is_shrunk() {
+        prop::check("svt_spectrum", 8, |rng| {
+            let z = Tensor::randn(&[20, 14], rng, 1.0);
+            let exact = jacobi_svd(&z);
+            let tau = exact.s[exact.s.len() / 2];
+            let out = svt(&z, tau, 14, rng);
+            // Every kept value equals (σ − τ)+ of the original spectrum.
+            let expect: Vec<f32> = exact
+                .s
+                .iter()
+                .filter_map(|s| {
+                    let d = s - tau;
+                    if d > 0.0 { Some(d) } else { None }
+                })
+                .collect();
+            assert_eq!(out.s.len(), expect.len());
+            for (a, b) in out.s.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                        "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn svt_zero_tau_reconstructs() {
+        let mut rng = Rng::new(5);
+        let z = Tensor::randn(&[12, 9], &mut rng, 1.0);
+        let out = svt(&z, 0.0, 9, &mut rng);
+        let rec = reconstruct(&out.u, &out.s, &out.v);
+        assert!(rec.dist_frob(&z) < 1e-3);
+    }
+
+    #[test]
+    fn svt_huge_tau_empties() {
+        let mut rng = Rng::new(6);
+        let z = Tensor::randn(&[10, 10], &mut rng, 0.1);
+        let out = svt(&z, 1e6, 10, &mut rng);
+        assert!(out.s.is_empty());
+        assert_eq!(out.u.shape, vec![10, 0]);
+    }
+
+    #[test]
+    fn svt_randomized_path_on_low_rank() {
+        // Large low-rank matrix: sketch certifies, randomized path used.
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&[96, 4], &mut rng, 1.0);
+        let y = Tensor::randn(&[4, 80], &mut rng, 1.0);
+        let z = crate::linalg::matmul(&x, &y);
+        let out = svt(&z, 0.5, 12, &mut rng);
+        assert!(out.randomized, "expected randomized path");
+        assert!(!out.s.is_empty());
+        // Reconstruction error bounded by sqrt(sum of clipped tails).
+        let rec = reconstruct(&out.u, &out.s, &out.v);
+        let err = rec.dist_frob(&z);
+        assert!(err < 0.55 * (out.s.len() as f64 + 4.0).sqrt() + 1e-3);
+    }
+}

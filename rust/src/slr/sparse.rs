@@ -1,0 +1,197 @@
+//! Compressed sparse row (CSR) storage for the S component.
+//!
+//! The training path keeps S dense-stored for fast proximal updates;
+//! *deployment* converts to CSR, which is what actually realizes the
+//! paper's memory claim (nnz values + column indices + row offsets
+//! instead of n·m floats). `spmv`/`spmm_t` provide the factored
+//! inference path on the Rust side, mirroring the `slr_matmul` Pallas
+//! kernel's residual term.
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub n: usize,
+    pub m: usize,
+    /// Row offsets, length n+1.
+    pub indptr: Vec<u32>,
+    /// Column indices, length nnz.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Convert a dense matrix, treating |x| <= eps as structural zero.
+    pub fn from_dense(t: &Tensor, eps: f32) -> Self {
+        let (n, m) = (t.nrows(), t.ncols());
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u32);
+        for i in 0..n {
+            for (j, &x) in t.row(i).iter().enumerate() {
+                if x.abs() > eps {
+                    indices.push(j as u32);
+                    values.push(x);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        CsrMatrix { n, m, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.n * self.m == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n * self.m) as f64
+    }
+
+    /// Deployed memory footprint in bytes (values f32 + indices u32 +
+    /// row offsets u32) — the honest version of the paper's PRM column.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.indices.len() * 4
+            + self.indptr.len() * 4
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.n, self.m]);
+        for i in 0..self.n {
+            let (lo, hi) = (self.indptr[i] as usize,
+                            self.indptr[i + 1] as usize);
+            for k in lo..hi {
+                out.data[i * self.m + self.indices[k] as usize] =
+                    self.values[k];
+            }
+        }
+        out
+    }
+
+    /// y = S · x  (x length m, y length n).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.m);
+        let mut y = vec![0.0f32; self.n];
+        for i in 0..self.n {
+            let (lo, hi) = (self.indptr[i] as usize,
+                            self.indptr[i + 1] as usize);
+            let mut acc = 0.0f32;
+            for k in lo..hi {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Y = X · Sᵀ for row-major X (t×m) -> (t×n): the residual term of
+    /// the factored linear layer, matching `slr_matmul`'s x·Sᵀ.
+    pub fn spmm_t(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ncols(), self.m);
+        let t = x.nrows();
+        let mut out = Tensor::zeros(&[t, self.n]);
+        for r in 0..t {
+            let xrow = x.row(r);
+            let orow = out.row_mut(r);
+            for i in 0..self.n {
+                let (lo, hi) = (self.indptr[i] as usize,
+                                self.indptr[i + 1] as usize);
+                let mut acc = 0.0f32;
+                for k in lo..hi {
+                    acc += self.values[k]
+                        * xrow[self.indices[k] as usize];
+                }
+                orow[i] = acc;
+            }
+        }
+        out
+    }
+}
+
+/// Deployed byte footprint of a factored SLR block: f32 factors
+/// (U: n·r, s: r, V: m·r) + CSR residual.
+pub fn slr_block_bytes(n: usize, m: usize, rank: usize,
+                       csr: &CsrMatrix) -> usize {
+    4 * (n * rank + rank + m * rank) + csr.bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn random_sparse(n: usize, m: usize, density: f64, rng: &mut Rng)
+                     -> Tensor {
+        let mut t = Tensor::zeros(&[n, m]);
+        for x in t.data.iter_mut() {
+            if rng.next_f64() < density {
+                *x = rng.next_normal() as f32;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        prop::check("csr_roundtrip", 16, |rng| {
+            let n = prop::dim(rng, 1, 20);
+            let m = prop::dim(rng, 1, 20);
+            let t = random_sparse(n, m, 0.3, rng);
+            let csr = CsrMatrix::from_dense(&t, 0.0);
+            assert_eq!(csr.to_dense(), t);
+            assert_eq!(csr.nnz(), t.nnz(0.0));
+        });
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        prop::check("csr_spmv", 16, |rng| {
+            let n = prop::dim(rng, 1, 16);
+            let m = prop::dim(rng, 1, 16);
+            let t = random_sparse(n, m, 0.4, rng);
+            let csr = CsrMatrix::from_dense(&t, 0.0);
+            let x: Vec<f32> =
+                (0..m).map(|_| rng.next_normal() as f32).collect();
+            let y = csr.spmv(&x);
+            for i in 0..n {
+                let want: f32 = t.row(i).iter().zip(&x)
+                    .map(|(a, b)| a * b).sum();
+                assert!((y[i] - want).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_matches_matmul_nt() {
+        let mut rng = Rng::new(0);
+        let s = random_sparse(12, 10, 0.3, &mut rng);
+        let x = Tensor::randn(&[5, 10], &mut rng, 1.0);
+        let csr = CsrMatrix::from_dense(&s, 0.0);
+        let got = csr.spmm_t(&x);
+        let want = crate::linalg::matmul_nt(&x, &s);
+        assert!(got.dist_frob(&want) < 1e-4);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut rng = Rng::new(1);
+        let s = random_sparse(64, 64, 0.05, &mut rng);
+        let csr = CsrMatrix::from_dense(&s, 0.0);
+        // Sparse storage must beat dense at 5% density.
+        assert!(csr.bytes() < 64 * 64 * 4,
+                "csr {} bytes vs dense {}", csr.bytes(), 64 * 64 * 4);
+        assert_eq!(csr.bytes(),
+                   csr.nnz() * 8 + (64 + 1) * 4);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let t = Tensor::zeros(&[4, 6]);
+        let csr = CsrMatrix::from_dense(&t, 0.0);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.spmv(&vec![1.0; 6]), vec![0.0; 4]);
+    }
+}

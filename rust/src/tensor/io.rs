@@ -1,0 +1,90 @@
+//! Binary tensor (de)serialization for checkpoints.
+//!
+//! Format (little-endian): magic `SLDT`, u32 ndim, u64 dims…, f32 data.
+//! A checkpoint file is a sequence of (name, tensor) records framed by a
+//! `SLCK` header — see `coordinator::checkpoint`.
+
+use super::Tensor;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"SLDT";
+
+impl Tensor {
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.shape.len() as u32).to_le_bytes())?;
+        for d in &self.shape {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        // Bulk-write the f32 payload.
+        let bytes: Vec<u8> =
+            self.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        w.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Tensor> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad tensor magic {magic:?}");
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let ndim = u32::from_le_bytes(b4) as usize;
+        if ndim > 8 {
+            bail!("implausible tensor rank {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut b8 = [0u8; 8];
+        for _ in 0..ndim {
+            r.read_exact(&mut b8)?;
+            shape.push(u64::from_le_bytes(b8) as usize);
+        }
+        let n: usize = shape.iter().product();
+        if n > 1 << 31 {
+            bail!("implausible tensor size {n}");
+        }
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { data, shape })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::randn(&[7, 3], &mut rng, 1.0);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let t2 = Tensor::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn roundtrip_scalar_and_empty() {
+        for t in [Tensor::scalar(3.5), Tensor::zeros(&[0]),
+                  Tensor::zeros(&[2, 0, 3])] {
+            let mut buf = Vec::new();
+            t.write_to(&mut buf).unwrap();
+            let t2 = Tensor::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(t, t2);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"XXXX\x01\x00\x00\x00".to_vec();
+        assert!(Tensor::read_from(&mut buf.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Host-side tensor: a row-major `Vec<f32>` plus shape.
+//!
+//! This is the coordinator's working representation for parameters,
+//! gradients, optimizer state and SLR surrogate blocks. Heavy math lives
+//! in `crate::linalg`; device compute lives in the HLO executables.
+
+pub mod ops;
+pub mod io;
+
+pub use ops::*;
+
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(),
+                   "data len {} != shape {:?}", data.len(), shape);
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()],
+                 shape: shape.to_vec() }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { data: vec![1.0; shape.iter().product()],
+                 shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { data: vec![v; shape.iter().product()],
+                 shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    /// N(0, std^2) init — identical stream semantics to the Python mirror
+    /// (`initrng.init_tensor`): f64 Box-Muller, cast to f32.
+    pub fn randn(shape: &[usize], rng: &mut Rng, std: f64) -> Self {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> =
+            (0..n).map(|_| (rng.next_normal() * std) as f32).collect();
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// Deterministic named init used for model parameters: matches
+    /// `python/compile/initrng.init_tensor` (1-D tensors are all-ones
+    /// norm scales; 2-D are N(0, 0.02^2) from the tensor's own stream).
+    pub fn init_param(name: &str, shape: &[usize], seed: u64) -> Self {
+        if shape.len() == 1 {
+            return Tensor::ones(shape);
+        }
+        let mut rng = Rng::named(name, seed);
+        Tensor::randn(shape, &mut rng, 0.02)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn nrows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn ncols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != self.numel() {
+            bail!("reshape {:?} -> {:?}", self.shape, shape);
+        }
+        Ok(Tensor { data: self.data.clone(), shape: shape.to_vec() })
+    }
+
+    /// 2-D transpose.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (n, m) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..n {
+            for j in 0..m {
+                out.data[j * n + i] = self.data[i * m + j];
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, x| a.max(x.abs()))
+    }
+
+    /// Count of entries with |x| > eps (density bookkeeping).
+    pub fn nnz(&self, eps: f32) -> usize {
+        self.data.iter().filter(|x| x.abs() > eps).count()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::new(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(&[5, 7], &mut rng, 1.0);
+        let tt = t.transpose().transpose();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn init_param_matches_spec() {
+        let norm = Tensor::init_param("x.norm", &[16], 0);
+        assert!(norm.data.iter().all(|v| *v == 1.0));
+        let w = Tensor::init_param("embed", &[8, 8], 0);
+        let w2 = Tensor::init_param("embed", &[8, 8], 0);
+        assert_eq!(w, w2);
+        let w3 = Tensor::init_param("embed", &[8, 8], 1);
+        assert_ne!(w, w3);
+        assert!(w.max_abs() < 0.2); // 0.02 std, 64 samples
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::new(vec![3.0, 4.0], &[2]);
+        assert!((t.frob_norm() - 5.0).abs() < 1e-9);
+        assert!((t.abs_sum() - 7.0).abs() < 1e-9);
+        assert_eq!(t.nnz(0.5), 2);
+        assert_eq!(t.nnz(3.5), 1);
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert!(t.reshape(&[3, 2]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Element-wise tensor operations used on the coordinator hot path
+//! (optimizer updates, penalty gradients, reconstruction errors).
+
+use super::Tensor;
+
+impl Tensor {
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= *b;
+        }
+    }
+
+    pub fn scale_assign(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// self += s * other (axpy).
+    pub fn axpy(&mut self, s: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * *b;
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.sub_assign(other);
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        let mut out = self.clone();
+        out.scale_assign(s);
+        out
+    }
+
+    /// ||a - b||_F without allocating the difference.
+    pub fn dist_frob(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    /// Round every value through bfloat16 (truncate-to-nearest-even on
+    /// the top 16 bits). Used by the precision-emulation experiments
+    /// (Appendix E analog) — see `optim::precision`.
+    pub fn round_bf16_assign(&mut self) {
+        for a in self.data.iter_mut() {
+            *a = bf16_round(*a);
+        }
+    }
+}
+
+/// Round an f32 to the nearest bfloat16 (round-half-to-even), returned
+/// as f32.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // round to nearest even on bit 16
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Tensor::new(vec![1., 2.], &[2]);
+        let b = Tensor::new(vec![3., 5.], &[2]);
+        assert_eq!(a.add(&b).data, vec![4., 7.]);
+        assert_eq!(b.sub(&a).data, vec![2., 3.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4.]);
+        let mut c = a.clone();
+        c.axpy(10.0, &b);
+        assert_eq!(c.data, vec![31., 52.]);
+        assert!((a.dot(&b) - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dist() {
+        let a = Tensor::new(vec![0., 0.], &[2]);
+        let b = Tensor::new(vec![3., 4.], &[2]);
+        assert!((a.dist_frob(&b) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bf16_rounding() {
+        // Values exactly representable in bf16 survive.
+        for v in [0.0f32, 1.0, -2.0, 0.5, 1.5] {
+            assert_eq!(bf16_round(v), v);
+        }
+        // Mantissa beyond 8 bits is dropped.
+        let x = 1.0 + 2f32.powi(-12);
+        assert_eq!(bf16_round(x), 1.0);
+        // Rounds up when past half (ulp at 1.0 is 2^-7: 7 explicit
+        // mantissa bits).
+        let y = 1.0 + 2f32.powi(-7) * 0.75;
+        assert_eq!(bf16_round(y), 1.0 + 2f32.powi(-7));
+        // Error bounded by half an ulp relative.
+        let z = 3.14159f32;
+        assert!((bf16_round(z) - z).abs() / z <= 2f32.powi(-7));
+    }
+}

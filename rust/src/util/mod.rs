@@ -1,0 +1,16 @@
+//! Small self-built substrates: deterministic RNG (bit-mirrored with the
+//! Python compile path), minimal JSON, timing, parallel helpers and a
+//! lightweight property-testing engine.
+//!
+//! These exist because the offline vendor set only ships the `xla` crate
+//! closure (no serde / rayon / proptest / criterion); see DESIGN.md §3.
+
+pub mod rng;
+pub mod json;
+pub mod timer;
+pub mod parallel;
+pub mod prop;
+
+pub use rng::Rng;
+pub use json::Json;
+pub use timer::{Stopwatch, PhaseTimer};

@@ -1,0 +1,99 @@
+//! Scoped-thread parallel helpers (the vendor set has no rayon).
+//!
+//! Used by the coordinator's ADMM phase to shard surrogate-block updates
+//! across a worker pool — the CPU analog of the paper's "distribute
+//! surrogate blocks across GPUs" (Appendix C).
+
+/// Apply `f` to every index in [0, n) using `workers` OS threads.
+/// Indices are striped across workers so heterogeneous per-item costs
+/// (e.g. SVDs on differently-sized blocks) balance reasonably.
+pub fn parallel_for(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let f = &f;
+            scope.spawn(move || {
+                let mut i = w;
+                while i < n {
+                    f(i);
+                    i += workers;
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map collecting results in index order.
+pub fn parallel_map<T, R>(items: &[T], workers: usize,
+                          f: impl Fn(&T) -> R + Sync) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+{
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    {
+        let slots = std::sync::Mutex::new(&mut out);
+        parallel_for(n, workers, |i| {
+            let r = f(&items[i]);
+            slots.lock().unwrap()[i] = Some(r);
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Number of worker threads to default to.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, 8, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let xs: Vec<usize> = (0..257).collect();
+        let ys = parallel_map(&xs, 7, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let seen = AtomicUsize::new(0);
+        parallel_for(5, 1, |_| {
+            seen.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let seen = AtomicUsize::new(0);
+        parallel_for(3, 64, |_| {
+            seen.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), 3);
+    }
+}

@@ -1,0 +1,80 @@
+//! Tiny property-testing engine (the vendor set has no proptest).
+//!
+//! `check(name, iters, |rng| ...)` runs a closure over seeded RNG streams
+//! and reports the failing seed on panic, so failures reproduce exactly:
+//!
+//! ```ignore
+//! prop::check("svt_shrinks", 64, |rng| {
+//!     let a = Tensor::randn(&[8, 8], rng, 1.0);
+//!     // ... assert invariant ...
+//! });
+//! ```
+//!
+//! Set `SALAAD_PROP_SEED` to re-run a single failing case.
+
+use super::rng::Rng;
+
+/// Run `iters` property iterations. Each iteration gets an independent
+/// seeded RNG; on panic the failing seed is printed and the panic is
+/// re-raised so the test harness records a failure.
+pub fn check(name: &str, iters: u64, f: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    if let Ok(s) = std::env::var("SALAAD_PROP_SEED") {
+        let seed: u64 = s.parse().expect("SALAAD_PROP_SEED must be u64");
+        let mut rng = Rng::named(name, seed);
+        f(&mut rng);
+        return;
+    }
+    for it in 0..iters {
+        let seed = 0x5A1A_AD00 + it;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::named(name, seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!(
+                "property `{name}` failed at iteration {it} (seed {seed}); \
+                 re-run with SALAAD_PROP_SEED={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi] — convenience for dimension sampling.
+pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_iterations() {
+        let count = std::sync::atomic::AtomicU64::new(0);
+        check("counter", 17, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn seeds_differ_across_iterations() {
+        let vals = std::sync::Mutex::new(Vec::new());
+        check("uniq", 8, |rng| {
+            vals.lock().unwrap().push(rng.next_u64());
+        });
+        let v = vals.lock().unwrap();
+        let mut dedup = v.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), v.len());
+    }
+
+    #[test]
+    fn dim_in_range() {
+        check("dim_range", 32, |rng| {
+            let d = dim(rng, 3, 9);
+            assert!((3..=9).contains(&d));
+        });
+    }
+}

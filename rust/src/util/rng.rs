@@ -1,0 +1,140 @@
+//! SplitMix64 RNG, bit-for-bit mirrored with `python/compile/initrng.py`.
+//!
+//! Parameter initialization must agree across languages so the numeric
+//! parity fixtures in `artifacts/fixtures.json` (loss, grad norms) can be
+//! asserted from Rust integration tests. Every arithmetic step here is
+//! kept in lock-step with the Python implementation.
+
+/// FNV-1a 64-bit hash (stream-selection for per-tensor seeds).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Seed for the named tensor's stream: order-independent across tensors.
+pub fn tensor_seed(name: &str, seed: u64) -> u64 {
+    fnv1a64(name) ^ seed
+}
+
+/// SplitMix64 generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Per-tensor / per-purpose named stream.
+    pub fn named(name: &str, seed: u64) -> Self {
+        Rng::new(tensor_seed(name, seed))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Standard normal via Box-Muller (cosine branch only — matches the
+    /// Python mirror exactly; the sine branch is discarded).
+    pub fn next_normal(&mut self) -> f64 {
+        let mut u1 = self.next_f64();
+        let u2 = self.next_f64();
+        if u1 <= 0.0 {
+            u1 = 1.0 / 9007199254740992.0;
+        }
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn next_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Same pins as python/tests/test_initrng.py.
+        let mut rng = Rng::new(0);
+        assert_eq!(rng.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(rng.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(rng.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn fnv_reference() {
+        assert_eq!(fnv1a64(""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xAF63_DC4C_8601_EC8C);
+        assert_ne!(fnv1a64("embed"), fnv1a64("lm_head"));
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Rng::new(99);
+        for _ in 0..1000 {
+            let u = rng.next_f64();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(7);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn named_streams_differ() {
+        let a = Rng::named("embed", 0).next_u64();
+        let b = Rng::named("lm_head", 0).next_u64();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

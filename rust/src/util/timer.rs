@@ -1,0 +1,130 @@
+//! Timing utilities: a stopwatch plus a named-phase accumulator used for
+//! the paper's Figure 2 wall-clock breakdown (gradient steps vs ADMM vs
+//! synchronization vs checkpoint saving).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates wall-clock per named phase (Figure 2 reproduction).
+#[derive(Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn measure<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        *self.totals.entry(phase.to_string()).or_default() += d;
+        *self.counts.entry(phase.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total_secs(&self, phase: &str) -> f64 {
+        self.total(phase).as_secs_f64()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn phases(&self) -> Vec<&str> {
+        self.totals.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn grand_total_secs(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    /// Markdown table of the breakdown, sorted by share.
+    pub fn report(&self) -> String {
+        let total = self.grand_total_secs().max(1e-12);
+        let mut rows: Vec<_> = self.totals.iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(a.1));
+        let mut out = String::from(
+            "| phase | total (s) | calls | share |\n|---|---|---|---|\n");
+        for (name, d) in rows {
+            let s = d.as_secs_f64();
+            out.push_str(&format!(
+                "| {name} | {s:.3} | {} | {:.1}% |\n",
+                self.counts[name], 100.0 * s / total));
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accumulation() {
+        let mut pt = PhaseTimer::new();
+        pt.measure("a", || std::thread::sleep(Duration::from_millis(5)));
+        pt.measure("a", || std::thread::sleep(Duration::from_millis(5)));
+        pt.measure("b", || ());
+        assert_eq!(pt.count("a"), 2);
+        assert_eq!(pt.count("b"), 1);
+        assert!(pt.total_secs("a") >= 0.009);
+        assert!(pt.report().contains("| a |"));
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(10));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(20));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+        assert!((a.total_secs("x") - 0.03).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,200 @@
+//! Integration tests for the PJRT runtime against real AOT artifacts.
+//!
+//! These verify the entire cross-language contract: Rust-initialized
+//! parameters (SplitMix64 mirror) fed into python-lowered HLO reproduce
+//! the loss/gradient numbers recorded in artifacts/fixtures.json by JAX.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use salaad::runtime::literal::{literal_scalar, tensor_to_literal};
+use salaad::runtime::Runtime;
+use salaad::tensor::Tensor;
+use salaad::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::env::var("SALAAD_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+/// Fixture token stream mirror of aot.make_fixtures.
+fn fixture_tokens(vocab: usize, batch: usize, seq: usize, seed: u64)
+                  -> Vec<i32> {
+    let mut rng = Rng::named("fixture.tokens", seed);
+    (0..batch * seq).map(|_| (rng.next_u64() % vocab as u64) as i32).collect()
+}
+
+#[test]
+fn kernel_soft_threshold_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_kernel("soft_threshold").unwrap();
+    let mut rng = Rng::new(0);
+    let z = Tensor::randn(&[128, 128], &mut rng, 1.0);
+    let tau = Tensor::new(vec![0.5], &[1, 1]);
+    let out = exe
+        .run_tensors(&[tensor_to_literal(&z).unwrap(),
+                       tensor_to_literal(&tau).unwrap()])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let want = salaad::slr::prox::soft_threshold(&z, 0.5);
+    assert!(out[0].dist_frob(&want) < 1e-5,
+            "pallas soft_threshold != rust prox");
+}
+
+#[test]
+fn kernel_matmul_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_kernel("matmul").unwrap();
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&[128, 256], &mut rng, 1.0);
+    let w = Tensor::randn(&[256, 192], &mut rng, 1.0);
+    let out = exe
+        .run_tensors(&[tensor_to_literal(&x).unwrap(),
+                       tensor_to_literal(&w).unwrap()])
+        .unwrap();
+    let want = salaad::linalg::matmul(&x, &w);
+    let rel = out[0].dist_frob(&want) / (1.0 + want.frob_norm());
+    assert!(rel < 1e-5, "pallas matmul mismatch rel={rel}");
+}
+
+#[test]
+fn kernel_slr_matmul_matches_block_apply() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_kernel("slr_matmul").unwrap();
+    let (t, m, n, r) = (128, 192, 160, 32);
+    let mut rng = Rng::new(2);
+    let x = Tensor::randn(&[t, m], &mut rng, 1.0);
+    let u = Tensor::randn(&[n, r], &mut rng, 1.0);
+    let s = Tensor::randn(&[r], &mut rng, 1.0);
+    let v = Tensor::randn(&[m, r], &mut rng, 1.0);
+    let sp = Tensor::randn(&[n, m], &mut rng, 0.05);
+    let out = exe
+        .run_tensors(&[&x, &u, &s, &v, &sp]
+            .iter()
+            .map(|t| tensor_to_literal(t).unwrap())
+            .collect::<Vec<_>>())
+        .unwrap();
+    // Dense reference: x @ (U diag(s) V^T + sp)^T
+    let mut w = salaad::linalg::reconstruct(&u, &s.data, &v);
+    w.add_assign(&sp);
+    let want = salaad::linalg::matmul_nt(&x, &w);
+    let rel = out[0].dist_frob(&want) / (1.0 + want.frob_norm());
+    assert!(rel < 1e-4, "slr_matmul mismatch rel={rel}");
+}
+
+#[test]
+fn fixtures_loss_parity_nano() {
+    let Some(rt) = runtime() else { return };
+    let fx = rt.fixtures().unwrap();
+    let fx = fx.req("nano").unwrap();
+    let seed = fx.req("seed").unwrap().as_f64().unwrap() as u64;
+    let cfg = rt.model_config("nano").unwrap();
+
+    // Token stream parity first (cheap, catches RNG drift with a clear
+    // message).
+    let toks = fixture_tokens(cfg.vocab, cfg.batch, cfg.seq_len, seed);
+    let first: Vec<f64> = fx
+        .req("tokens_first_row").unwrap()
+        .as_arr().unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    for (i, want) in first.iter().enumerate() {
+        assert_eq!(toks[i] as f64, *want, "token stream drift at {i}");
+    }
+
+    // Parameter checksum parity.
+    let params = cfg.init_params(seed);
+    let embed_sum: f64 = params[0].data.iter().map(|x| *x as f64).sum();
+    let want_embed = fx.req("param_checksums").unwrap()
+        .req("embed").unwrap().as_f64().unwrap();
+    assert!((embed_sum - want_embed).abs() < 1e-2 * (1.0 + want_embed.abs()),
+            "embed checksum {embed_sum} vs {want_embed}");
+
+    // Full eval_loss through the HLO executable.
+    let exe = rt.load_entry(&cfg, "eval_loss").unwrap();
+    let inputs = rt.pack_inputs(&cfg, &params, &toks, cfg.batch).unwrap();
+    let out = exe.run(&inputs).unwrap();
+    let sum = literal_scalar(&out[0]).unwrap();
+    let count = literal_scalar(&out[1]).unwrap();
+    let want_sum = fx.req("eval_sum").unwrap().as_f64().unwrap();
+    let want_count = fx.req("eval_count").unwrap().as_f64().unwrap();
+    assert_eq!(count, want_count);
+    let loss = sum / count;
+    let want_loss = fx.req("loss").unwrap().as_f64().unwrap();
+    assert!((loss - want_loss).abs() < 5e-3,
+            "loss {loss} vs jax {want_loss}");
+}
+
+#[test]
+fn fwd_bwd_grad_norms_match_fixtures() {
+    let Some(rt) = runtime() else { return };
+    let fx = rt.fixtures().unwrap();
+    let fx = fx.req("nano").unwrap();
+    let seed = fx.req("seed").unwrap().as_f64().unwrap() as u64;
+    let cfg = rt.model_config("nano").unwrap();
+    let params = cfg.init_params(seed);
+    let toks = fixture_tokens(cfg.vocab, cfg.batch, cfg.seq_len, seed);
+    let exe = rt.load_entry(&cfg, "fwd_bwd").unwrap();
+    let inputs = rt.pack_inputs(&cfg, &params, &toks, cfg.batch).unwrap();
+    let out = exe.run_tensors(&inputs).unwrap();
+    assert_eq!(out.len(), 1 + cfg.params.len());
+    let loss = out[0].data[0] as f64;
+    let want_loss = fx.req("loss").unwrap().as_f64().unwrap();
+    assert!((loss - want_loss).abs() < 5e-3);
+    // Gradient norms for embed (index 1) and head (last).
+    let g_embed = out[1].frob_norm();
+    let want_embed = fx.req("grad_norm_embed").unwrap().as_f64().unwrap();
+    assert!((g_embed - want_embed).abs() < 5e-3 * (1.0 + want_embed),
+            "embed grad norm {g_embed} vs {want_embed}");
+    let g_head = out[out.len() - 1].frob_norm();
+    let want_head = fx.req("grad_norm_head").unwrap().as_f64().unwrap();
+    assert!((g_head - want_head).abs() < 5e-3 * (1.0 + want_head),
+            "head grad norm {g_head} vs {want_head}");
+}
+
+#[test]
+fn logits_entry_shape_and_stats() {
+    let Some(rt) = runtime() else { return };
+    let fx = rt.fixtures().unwrap();
+    let fx = fx.req("nano").unwrap();
+    let seed = fx.req("seed").unwrap().as_f64().unwrap() as u64;
+    let cfg = rt.model_config("nano").unwrap();
+    let params = cfg.init_params(seed);
+    let toks = fixture_tokens(cfg.vocab, cfg.batch, cfg.seq_len, seed);
+    let row0: Vec<i32> = toks[..cfg.seq_len].to_vec();
+    let exe = rt.load_entry(&cfg, "logits").unwrap();
+    let inputs = rt.pack_inputs(&cfg, &params, &row0, 1).unwrap();
+    let out = exe.run_tensors(&inputs).unwrap();
+    assert_eq!(out[0].shape, vec![1, cfg.seq_len, cfg.vocab]);
+    let mean: f64 = out[0].data.iter().map(|x| *x as f64).sum::<f64>()
+        / out[0].numel() as f64;
+    let want_mean = fx.req("logits_mean").unwrap().as_f64().unwrap();
+    assert!((mean - want_mean).abs() < 1e-3 * (1.0 + want_mean.abs()),
+            "logits mean {mean} vs {want_mean}");
+}
+
+#[test]
+fn forward_pallas_matches_logits_path() {
+    // Dense pallas forward (Layer-1 kernels) vs the jnp-fused logits
+    // entrypoint — same params, same tokens, same numbers.
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.model_config("nano").unwrap();
+    if !cfg.entrypoints.contains_key("forward_pallas") {
+        return;
+    }
+    let params = cfg.init_params(7);
+    let toks = fixture_tokens(cfg.vocab, 1, cfg.seq_len, 99);
+    let a = rt.load_entry(&cfg, "logits").unwrap()
+        .run_tensors(&rt.pack_inputs(&cfg, &params, &toks, 1).unwrap())
+        .unwrap();
+    let b = rt.load_entry(&cfg, "forward_pallas").unwrap()
+        .run_tensors(&rt.pack_inputs(&cfg, &params, &toks, 1).unwrap())
+        .unwrap();
+    let rel = a[0].dist_frob(&b[0]) / (1.0 + a[0].frob_norm());
+    assert!(rel < 1e-4, "pallas vs jnp forward rel={rel}");
+}
