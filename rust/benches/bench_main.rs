@@ -6,8 +6,9 @@
 //!   L3 numeric core : jacobi/randomized SVD (the ε in Appendix C's
 //!                     ε·J/K cost model), prox ops, ADMM block update,
 //!                     HPA, RPCA, GEMMs, data loader
-//!   runtime bridge  : literal marshalling, fwd_bwd/eval/logits step
-//!                     latency per scale (table1/fig2/fig3 drivers)
+//!   backend         : fwd_bwd/eval/logits step latency per scale
+//!                     (table1/fig2/fig3 drivers) through the active
+//!                     Runtime backend (native by default)
 //!   serving         : greedy-decode token latency (the serving path)
 //!
 //! Set SALAAD_BENCH_FILTER=<substr> to run a subset.
@@ -18,7 +19,6 @@ use salaad::config::{SalaadConfig, TrainConfig};
 use salaad::coordinator::{run_admm_phase, Method, Trainer};
 use salaad::data::BatchLoader;
 use salaad::linalg::{jacobi_svd, matmul, matmul_nt, rand_svd};
-use salaad::runtime::literal::tensor_to_literal;
 use salaad::runtime::Runtime;
 use salaad::slr::prox::{soft_threshold_assign, svt};
 use salaad::slr::{hpa, rpca::rpca, SlrBlock};
@@ -172,58 +172,34 @@ fn main() {
         });
     }
 
-    // ---------------- runtime bridge + end-to-end ----------------
-    let artifacts = std::env::var("SALAAD_ARTIFACTS")
-        .unwrap_or_else(|_| "artifacts".to_string());
-    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
-        let rt = Runtime::new(&artifacts).expect("runtime");
+    // ---------------- backend + end-to-end ----------------
+    {
+        let rt = Runtime::from_env().expect("runtime");
+        eprintln!("backend: {}", rt.describe());
         for scale in ["nano", "micro", "mini"] {
             let cfg = rt.model_config(scale).unwrap();
             let params = cfg.init_params(0);
             let mut loader = BatchLoader::new(cfg.vocab, cfg.batch,
                                               cfg.seq_len, "bench", 0);
             let batch = loader.next_batch();
-            // Literal marshalling.
-            b.bench(&format!("runtime/pack_inputs_{scale}"), || {
-                std::hint::black_box(
-                    rt.pack_inputs(&cfg, &params, &batch, cfg.batch)
-                        .unwrap());
-            });
             // fwd_bwd step (table1/fig2 driver hot path).
-            let exe = rt.load_entry(&cfg, "fwd_bwd").unwrap();
-            let inputs = rt.pack_inputs(&cfg, &params, &batch, cfg.batch)
-                .unwrap();
             b.bench(&format!("e2e/fwd_bwd_step_{scale}"), || {
-                std::hint::black_box(exe.run(&inputs).unwrap());
+                std::hint::black_box(
+                    rt.loss_and_grads(&cfg, &params, &batch).unwrap());
             });
             // eval_loss (fig3/fig4/table ppl driver).
-            let eexe = rt.load_entry(&cfg, "eval_loss").unwrap();
             b.bench(&format!("e2e/eval_loss_{scale}"), || {
-                std::hint::black_box(eexe.run(&inputs).unwrap());
+                std::hint::black_box(
+                    rt.eval_loss(&cfg, &params, &batch).unwrap());
             });
             // serving logits latency (1×T).
-            let lexe = rt.load_entry(&cfg, "logits").unwrap();
             let one: Vec<i32> = batch[..cfg.seq_len].to_vec();
-            let linputs = rt.pack_inputs(&cfg, &params, &one, 1).unwrap();
             b.bench(&format!("serve/logits_1x{}_{scale}", cfg.seq_len),
                     || {
-                std::hint::black_box(lexe.run(&linputs).unwrap());
+                std::hint::black_box(
+                    rt.forward_logits(&cfg, &params, &one, 1).unwrap());
             });
         }
-        // Standalone pallas kernels through PJRT.
-        let k = rt.load_kernel("slr_matmul").unwrap();
-        let x = Tensor::randn(&[128, 192], &mut rng, 1.0);
-        let u = Tensor::randn(&[160, 32], &mut rng, 1.0);
-        let s = Tensor::randn(&[32], &mut rng, 1.0);
-        let v = Tensor::randn(&[192, 32], &mut rng, 1.0);
-        let sp = Tensor::randn(&[160, 192], &mut rng, 0.05);
-        let lits: Vec<xla::Literal> = [&x, &u, &s, &v, &sp]
-            .iter()
-            .map(|t| tensor_to_literal(t).unwrap())
-            .collect();
-        b.bench("kernel/slr_matmul_pjrt", || {
-            std::hint::black_box(k.run(&lits).unwrap());
-        });
 
         // One short SALAAD training step sequence (fully end-to-end).
         let cfg = rt.model_config("nano").unwrap();
@@ -237,8 +213,6 @@ fn main() {
             tr.grad_step().unwrap();
             tr.admm_phase().unwrap();
         });
-    } else {
-        eprintln!("artifacts missing — runtime benches skipped");
     }
 
     b.report();

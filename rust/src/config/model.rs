@@ -1,10 +1,13 @@
-//! Model geometry. The authoritative copy ships in
-//! `artifacts/manifest.json` (written by the AOT exporter); this module
-//! parses it and also carries the paper's full-size configs for
-//! parameter accounting.
+//! Model geometry. Two sources of truth, guaranteed identical:
+//!
+//! - [`ModelConfig::builtin`] constructs the standard scales
+//!   (nano/micro/mini/small) directly in Rust — the native backend's
+//!   default, mirroring `python/compile/configs.py` field for field;
+//! - [`ModelConfig::from_manifest`] parses `artifacts/manifest.json`
+//!   (written by the AOT exporter) for the PJRT path.
 
 use crate::util::Json;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// LLaMA-style model geometry plus the canonical parameter layout.
 #[derive(Clone, Debug)]
@@ -28,8 +31,13 @@ pub struct ModelConfig {
     pub selected_blocks_with_head: Vec<String>,
     /// Static rank padding per 2-D block in the forward_slr artifact.
     pub rank_pad: std::collections::BTreeMap<String, usize>,
-    /// Entrypoint name -> artifact file name.
+    /// Entrypoint name -> artifact file name (PJRT path only; empty for
+    /// builtin configs).
     pub entrypoints: std::collections::BTreeMap<String, String>,
+    /// RoPE base frequency.
+    pub rope_theta: f64,
+    /// RMSNorm epsilon.
+    pub norm_eps: f64,
 }
 
 impl ModelConfig {
@@ -80,7 +88,100 @@ impl ModelConfig {
                 strings("selected_blocks_with_head").unwrap_or_default(),
             rank_pad,
             entrypoints,
+            rope_theta: j.get("rope_theta").map(|x| x.as_f64())
+                .transpose()?.unwrap_or(10000.0),
+            norm_eps: j.get("norm_eps").map(|x| x.as_f64())
+                .transpose()?.unwrap_or(1e-6),
         })
+    }
+
+    /// Construct a config from raw geometry — the Rust-native source of
+    /// truth, bit-identical to `python/compile/configs.ModelConfig`
+    /// (param_spec order, selected blocks, rank padding rule).
+    pub fn from_geometry(name: &str, vocab: usize, d_model: usize,
+                         n_layers: usize, n_heads: usize, d_ff: usize,
+                         seq_len: usize, batch: usize) -> Self {
+        assert!(d_model % n_heads == 0, "d_model must divide into heads");
+        let mut params: Vec<(String, Vec<usize>)> =
+            vec![("embed".to_string(), vec![vocab, d_model])];
+        for i in 0..n_layers {
+            let p = format!("layers.{i}.");
+            params.push((format!("{p}attn_norm"), vec![d_model]));
+            for w in ["wq", "wk", "wv", "wo"] {
+                params.push((format!("{p}{w}"), vec![d_model, d_model]));
+            }
+            params.push((format!("{p}mlp_norm"), vec![d_model]));
+            params.push((format!("{p}w_gate"), vec![d_ff, d_model]));
+            params.push((format!("{p}w_up"), vec![d_ff, d_model]));
+            params.push((format!("{p}w_down"), vec![d_model, d_ff]));
+        }
+        params.push(("final_norm".to_string(), vec![d_model]));
+        params.push(("lm_head".to_string(), vec![vocab, d_model]));
+
+        let mut selected_blocks = vec!["embed".to_string()];
+        for i in 0..n_layers {
+            for w in ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"] {
+                selected_blocks.push(format!("layers.{i}.{w}"));
+            }
+        }
+        let mut selected_blocks_with_head = selected_blocks.clone();
+        selected_blocks_with_head.push("lm_head".to_string());
+
+        // Mirror of configs.py rank_pad: 35% of min(n, m), rounded up to
+        // a multiple of 4, at least 4.
+        let pad = |n: usize, m: usize| -> usize {
+            let r = (n.min(m) as f64 * 0.35) as usize;
+            (r.div_ceil(4) * 4).max(4)
+        };
+        let mut rank_pad = std::collections::BTreeMap::new();
+        for name in &selected_blocks_with_head {
+            let shape = params.iter().find(|(n, _)| n == name)
+                .map(|(_, s)| s.clone()).unwrap();
+            rank_pad.insert(name.clone(), pad(shape[0], shape[1]));
+        }
+
+        ModelConfig {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            seq_len,
+            batch,
+            params,
+            slr_params: Vec::new(),
+            selected_blocks,
+            selected_blocks_with_head,
+            rank_pad,
+            entrypoints: std::collections::BTreeMap::new(),
+            rope_theta: 10000.0,
+            norm_eps: 1e-6,
+        }
+    }
+
+    /// Standard scale names available without artifacts.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["nano", "micro", "mini", "small"]
+    }
+
+    /// One of the standard scales — the CPU analogs of the paper's
+    /// 60M/130M/350M/1B models (same numbers as configs.py CONFIGS).
+    pub fn builtin(name: &str) -> Result<Self> {
+        let (vocab, d, layers, heads, ff) = match name {
+            "nano" => (256, 64, 2, 2, 176),
+            "micro" => (512, 128, 4, 4, 352),
+            "mini" => (1024, 192, 6, 6, 512),
+            "small" => (2048, 320, 8, 8, 864),
+            other => bail!("unknown builtin config `{other}` \
+                            (known: nano micro mini small)"),
+        };
+        Ok(Self::from_geometry(name, vocab, d, layers, heads, ff, 128, 8))
+    }
+
+    /// Head dimension d_model / n_heads.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
     }
 
     pub fn n_params(&self) -> usize {
@@ -175,5 +276,44 @@ mod tests {
     fn unknown_param_errors() {
         let cfg = ModelConfig::from_manifest("nano", &sample_json()).unwrap();
         assert!(cfg.shape_of("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_nano_matches_python_configs() {
+        // Mirror of configs.py CONFIGS["nano"].
+        let cfg = ModelConfig::builtin("nano").unwrap();
+        assert_eq!((cfg.vocab, cfg.d_model, cfg.n_layers, cfg.n_heads,
+                    cfg.d_ff, cfg.seq_len, cfg.batch),
+                   (256, 64, 2, 2, 176, 128, 8));
+        assert_eq!(cfg.d_head(), 32);
+        // param_spec mirror: embed + 9/layer + final_norm + lm_head.
+        assert_eq!(cfg.params.len(), 1 + 9 * 2 + 2);
+        assert_eq!(cfg.params[0].0, "embed");
+        assert_eq!(cfg.params[1].0, "layers.0.attn_norm");
+        assert_eq!(cfg.shape_of("layers.1.w_gate").unwrap(), &[176, 64]);
+        assert_eq!(cfg.shape_of("layers.1.w_down").unwrap(), &[64, 176]);
+        assert_eq!(cfg.params.last().unwrap().0, "lm_head");
+        // selected blocks: embed + 7 projections per layer.
+        assert_eq!(cfg.selected_blocks.len(), 1 + 7 * 2);
+        assert!(cfg.selected_blocks_with_head.contains(
+            &"lm_head".to_string()));
+        // rank_pad rule: max(4, ceil(0.35*min(n,m)) to multiple of 4).
+        // min dim 64 -> int(22.4)=22 -> 24.
+        assert_eq!(cfg.rank_pad["layers.0.wq"], 24);
+        assert_eq!(cfg.rank_pad["embed"], 24);
+        assert!(ModelConfig::builtin("bogus").is_err());
+    }
+
+    #[test]
+    fn builtin_param_counts() {
+        // n_params matches the closed form of the spec.
+        for name in ModelConfig::builtin_names() {
+            let cfg = ModelConfig::builtin(name).unwrap();
+            let per_layer = 2 * cfg.d_model + 4 * cfg.d_model * cfg.d_model
+                + 3 * cfg.d_ff * cfg.d_model;
+            let want = 2 * cfg.vocab * cfg.d_model + cfg.d_model
+                + cfg.n_layers * per_layer;
+            assert_eq!(cfg.n_params(), want, "{name}");
+        }
     }
 }

@@ -1,7 +1,8 @@
-//! The SALAAD trainer: Algorithm 1 as an event loop over the PJRT
-//! runtime, parameterized by [`Method`] to cover the Table 1 baselines.
+//! The SALAAD trainer: Algorithm 1 as an event loop over the pluggable
+//! [`Runtime`] backend (native or PJRT), parameterized by [`Method`] to
+//! cover the Table 1 baselines.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::scheduler::run_admm_phase;
 use super::state::{Method, PhaseRecord, TrainHistory};
@@ -116,16 +117,12 @@ impl<'a> Trainer<'a> {
     pub fn grad_step(&mut self) -> Result<f64> {
         let batch = self.timer.measure("data", || self.loader.next_batch());
 
-        // fwd_bwd through the AOT executable.
+        // Forward + backward through the active backend (which attaches
+        // its own error context naming the entrypoint).
         let t0 = std::time::Instant::now();
-        let exe = self.rt.load_entry(&self.cfg, "fwd_bwd")?;
-        let inputs = self.rt.pack_inputs(&self.cfg, &self.params, &batch,
-                                         self.cfg.batch)?;
-        let out = exe.run_tensors(&inputs).context("fwd_bwd failed")?;
+        let (loss, mut grads) =
+            self.rt.loss_and_grads(&self.cfg, &self.params, &batch)?;
         self.timer.add("grad_step", t0.elapsed());
-
-        let loss = out[0].data[0] as f64;
-        let mut grads: Vec<Tensor> = out[1..].to_vec();
 
         // SLR penalty gradient ρ(X − anchor) on selected blocks (Eq. 6).
         let mut pen_loss = 0.0;

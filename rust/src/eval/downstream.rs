@@ -31,10 +31,7 @@ fn choice_logprob(rt: &Runtime, cfg: &ModelConfig, params: &[Tensor],
     seq.extend(choice.iter().map(|x| *x as i32));
     seq.resize(t, 0);
 
-    let exe = rt.load_entry(cfg, "logits")?;
-    let inputs = rt.pack_inputs(cfg, params, &seq, 1)?;
-    let out = exe.run_tensors(&inputs)?;
-    let logits = &out[0]; // (1, T, vocab)
+    let logits = rt.forward_logits(cfg, params, &seq, 1)?; // (1, T, vocab)
     let v = cfg.vocab;
     let mut lp = 0.0f64;
     for (k, tok) in choice.iter().enumerate() {

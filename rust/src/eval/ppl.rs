@@ -1,24 +1,21 @@
-//! Perplexity evaluation through the `eval_loss` executable, which
+//! Perplexity evaluation through the backend's `eval_loss`, which
 //! returns (Σ NLL, token count) so pooling across batches is exact.
 
 use anyhow::Result;
 
 use crate::config::ModelConfig;
-use crate::runtime::literal::literal_scalar;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
 /// exp(Σ nll / Σ count) over the given evaluation batches.
 pub fn eval_ppl(rt: &Runtime, cfg: &ModelConfig, params: &[Tensor],
                 batches: &[Vec<i32>]) -> Result<f64> {
-    let exe = rt.load_entry(cfg, "eval_loss")?;
     let mut total = 0.0;
     let mut count = 0.0;
     for batch in batches {
-        let inputs = rt.pack_inputs(cfg, params, batch, cfg.batch)?;
-        let out = exe.run(&inputs)?;
-        total += literal_scalar(&out[0])?;
-        count += literal_scalar(&out[1])?;
+        let (sum, n) = rt.eval_loss(cfg, params, batch)?;
+        total += sum;
+        count += n;
     }
     Ok((total / count.max(1.0)).exp())
 }

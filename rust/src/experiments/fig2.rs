@@ -7,6 +7,7 @@ use anyhow::Result;
 
 use super::common::{emit, ExpOptions, Table};
 use crate::coordinator::{Method, Trainer};
+use crate::data::BatchLoader;
 use crate::runtime::Runtime;
 use crate::util::Json;
 
@@ -15,10 +16,13 @@ pub fn run(rt: &Runtime, opts: &ExpOptions) -> Result<()> {
     let worker_counts = [1usize, 2, 4, 8];
     let steps = opts.steps.min(60).max(20);
 
-    // Warm the executable cache so the first row doesn't pay the XLA
-    // compile cost.
-    rt.load_entry(&cfg, "fwd_bwd")?;
-    rt.load_entry(&cfg, "eval_loss")?;
+    // Warm the PJRT compile cache so the first row doesn't pay the XLA
+    // compile cost; the native backend has no one-time setup to warm.
+    if rt.backend_name() == "pjrt" {
+        let warm = BatchLoader::new(cfg.vocab, cfg.batch, cfg.seq_len,
+                                    "warm", opts.seed).next_batch();
+        rt.loss_and_grads(&cfg, &cfg.init_params(opts.seed), &warm)?;
+    }
 
     let mut t = Table::new(&["workers", "grad (s)", "admm busy (s)",
                              "admm wall (s)", "sync (s)", "save aux (s)",

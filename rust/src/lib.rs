@@ -1,23 +1,48 @@
 //! # SALAAD — Sparse And Low-Rank Adaptation via ADMM
 //!
 //! A full-system reproduction of *SALAAD: Sparse And Low-Rank Adaptation
-//! via ADMM for Large Language Model Inference* as a three-layer
-//! Rust + JAX + Pallas stack:
+//! via ADMM for Large Language Model Inference*: Algorithm 1's two-stage
+//! schedule, the block-wise I-controller, Rust-native SVD/RPCA/HPA,
+//! optimizers, data pipeline, elastic serving, and the paper's full
+//! experiment suite.
 //!
-//! - **Layer 3 (this crate)** — the training/deployment coordinator:
-//!   Algorithm 1's two-stage schedule, the block-wise I-controller,
-//!   Rust-native SVD/RPCA/HPA, optimizers, data pipeline, elastic
-//!   serving, and the paper's full experiment suite.
-//! - **Layer 2** — a JAX LLaMA-style model AOT-lowered to HLO text
-//!   (`python/compile/model.py`), loaded and executed here via PJRT.
-//! - **Layer 1** — Pallas kernels for the compute hot spots
-//!   (`python/compile/kernels/`), lowered into the same HLO.
+//! ## Backend architecture
 //!
-//! Python never runs on the training or serving path: after
-//! `make artifacts` the binary is self-contained.
+//! Model execution is a pluggable seam ([`runtime::Backend`]) with three
+//! operations — `forward_logits`, `loss_and_grads`, `eval_loss` — behind
+//! one [`runtime::Runtime`] facade that the trainer, evaluator, server
+//! and experiment drivers share:
+//!
+//! - [`runtime::NativeBackend`] (**default**) — a pure-Rust reference
+//!   executor for the LLaMA-style model (embedding, pre-norm RMSNorm,
+//!   rotary attention, SwiGLU MLP, untied head) with a hand-written
+//!   backward pass, built on [`tensor`]/[`linalg`] and the
+//!   thread-parallel GEMMs in `linalg::matmul`. Zero external
+//!   artifacts: a clean checkout trains, compresses and serves with
+//!   nothing but `cargo build`.
+//! - `runtime::PjrtBackend` (opt-in via the `xla` cargo feature) — a
+//!   JAX model AOT-lowered to HLO text (`python/compile/model.py`, with
+//!   Pallas kernels for the compute hot spots) loaded and executed via
+//!   PJRT. Python never runs on the training or serving path: after
+//!   `make artifacts` the binary is self-contained.
+//!
+//! Backend selection happens once, at [`runtime::Runtime`]
+//! construction: `SALAAD_BACKEND=native|xla` forces a choice, otherwise
+//! PJRT is used iff it is compiled in *and* an artifacts directory
+//! exists, with the native executor as the universal fallback. Both
+//! backends consume the same canonical parameter list
+//! ([`config::ModelConfig::params`]) and the same deterministic
+//! SplitMix64 initialization, so checkpoints and experiments are
+//! backend-portable.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
+
+// Lint configuration: the numeric APIs here deliberately take explicit
+// hyperparameter lists (mirroring the paper's notation) rather than
+// builder structs, and a few internal seams pass tuple-heavy types.
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
 
 pub mod util;
 pub mod tensor;

@@ -8,8 +8,9 @@
 //!   serve <scale>                 budgeted elastic serving demo
 //!   exp <id>                      regenerate a paper table/figure
 //!
-//! Python never runs here: everything executes against the AOT
-//! artifacts produced by `make artifacts`.
+//! Python never runs here: the default build executes the pure-Rust
+//! `NativeBackend`; `--features xla` additionally enables the AOT/PJRT
+//! path against artifacts produced by `make artifacts`.
 
 use anyhow::{bail, Context, Result};
 
@@ -70,9 +71,11 @@ fn dispatch(argv: &[String]) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     let rt = Runtime::from_env()?;
-    println!("platform: {} ({} devices)", rt.client.platform_name(),
-             rt.client.device_count());
-    println!("artifacts: {}", rt.dir.display());
+    println!("backend: {}", rt.describe());
+    match &rt.dir {
+        Some(dir) => println!("artifacts: {}", dir.display()),
+        None => println!("artifacts: none (builtin configs)"),
+    }
     for name in rt.config_names() {
         let cfg = rt.model_config(&name)?;
         println!(

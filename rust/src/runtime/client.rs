@@ -1,4 +1,11 @@
-//! PJRT client wrapper: artifact manifest, executable cache, execution.
+//! PJRT backend: artifact manifest, executable cache, execution.
+//!
+//! Only compiled with `--features xla`. Wiring (see the AOT exporter in
+//! `python/compile/aot.py`): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::cpu().compile` →
+//! `execute`. HLO *text* is the interchange format — jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -7,8 +14,9 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::literal::{literal_to_tensor, tensor_to_literal,
+use super::literal::{literal_scalar, literal_to_tensor, tensor_to_literal,
                      tokens_to_literal};
+use super::Backend;
 use crate::config::ModelConfig;
 use crate::tensor::Tensor;
 use crate::util::Json;
@@ -42,29 +50,23 @@ impl Executable {
     }
 }
 
-/// Artifact-directory-backed runtime: manifest + executable cache on one
-/// owner thread.
-pub struct Runtime {
+/// Artifact-directory-backed backend: manifest + executable cache on one
+/// owner thread (`PjRtClient` is `Rc`-backed, not `Send`).
+pub struct PjrtBackend {
     pub client: xla::PjRtClient,
     pub dir: PathBuf,
     pub manifest: Json,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
 
-impl Runtime {
+impl PjrtBackend {
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest = Json::parse_file(&dir.join("manifest.json"))
             .context("artifacts/manifest.json missing — run `make artifacts`")?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
-    }
-
-    /// Default artifacts dir: $SALAAD_ARTIFACTS or ./artifacts.
-    pub fn from_env() -> Result<Self> {
-        let dir = std::env::var("SALAAD_ARTIFACTS")
-            .unwrap_or_else(|_| "artifacts".to_string());
-        Runtime::new(dir)
+        Ok(PjrtBackend { client, dir, manifest,
+                         cache: RefCell::new(HashMap::new()) })
     }
 
     /// Model config for a named scale (nano/micro/mini/small).
@@ -148,5 +150,49 @@ impl Runtime {
 
     pub fn fixtures(&self) -> Result<Json> {
         Json::parse_file(&self.dir.join("fixtures.json"))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt ({}, {} devices, artifacts {})",
+                self.client.platform_name(), self.client.device_count(),
+                self.dir.display())
+    }
+
+    fn forward_logits(&self, cfg: &ModelConfig, params: &[Tensor],
+                      tokens: &[i32], rows: usize) -> Result<Tensor> {
+        let exe = self.load_entry(cfg, "logits")?;
+        let inputs = self.pack_inputs(cfg, params, tokens, rows)?;
+        let out = exe.run_tensors(&inputs)?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("logits entry returned no output"))
+    }
+
+    fn loss_and_grads(&self, cfg: &ModelConfig, params: &[Tensor],
+                      tokens: &[i32]) -> Result<(f64, Vec<Tensor>)> {
+        let exe = self.load_entry(cfg, "fwd_bwd")?;
+        let inputs = self.pack_inputs(cfg, params, tokens, cfg.batch)?;
+        let mut out = exe.run_tensors(&inputs).context("fwd_bwd failed")?;
+        if out.len() != 1 + cfg.params.len() {
+            bail!("fwd_bwd returned {} outputs, expected {}", out.len(),
+                  1 + cfg.params.len());
+        }
+        let loss = out[0].data[0] as f64;
+        let grads = out.split_off(1);
+        Ok((loss, grads))
+    }
+
+    fn eval_loss(&self, cfg: &ModelConfig, params: &[Tensor],
+                 tokens: &[i32]) -> Result<(f64, f64)> {
+        let exe = self.load_entry(cfg, "eval_loss")?;
+        let inputs = self.pack_inputs(cfg, params, tokens, cfg.batch)?;
+        let out = exe.run(&inputs)?;
+        Ok((literal_scalar(&out[0])?, literal_scalar(&out[1])?))
     }
 }

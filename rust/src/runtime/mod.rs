@@ -1,17 +1,214 @@
-//! PJRT runtime bridge: load AOT-compiled HLO text artifacts and execute
-//! them from the coordinator hot path.
+//! Pluggable model-execution runtime.
 //!
-//! Wiring (see /opt/xla-example/load_hlo for the reference pattern):
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::cpu().compile` → `execute`. HLO *text* is the
-//! interchange format — jax ≥ 0.5 emits protos with 64-bit instruction
-//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! A [`Backend`] abstracts the three operations the coordinator, the
+//! evaluator and the server need from a model executor:
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`), so a [`Runtime`] lives on
-//! one owner thread; the block-parallel ADMM phase is pure Rust and
-//! never touches PJRT.
+//! - `forward_logits` — dense forward to full logits (serving, probes),
+//! - `loss_and_grads` — training step: mean NLL + per-parameter grads,
+//! - `eval_loss` — (Σ NLL, token count) for exact perplexity pooling.
+//!
+//! Two implementations exist:
+//!
+//! - [`NativeBackend`] (default, always available): a pure-Rust
+//!   reference executor for the LLaMA-style model with a hand-written
+//!   backward pass, built on `tensor`/`linalg`. Zero external
+//!   artifacts, runs anywhere `cargo build` does.
+//! - `PjrtBackend` (behind the off-by-default `xla` cargo feature):
+//!   loads AOT-compiled HLO text artifacts produced by
+//!   `python/compile/` and executes them through PJRT. The
+//!   `Tensor` ⇄ `xla::Literal` marshalling seam lives in
+//!   [`literal`](self). `PjRtClient` is `Rc`-backed (not `Send`), so a
+//!   PJRT [`Runtime`] lives on one owner thread.
+//!
+//! [`Runtime`] owns one boxed backend plus the config registry and is
+//! what the rest of the crate passes around. Construction picks the
+//! backend: `SALAAD_BACKEND=native|xla` forces one; otherwise the PJRT
+//! path is chosen iff the `xla` feature is on *and* an artifacts
+//! directory is present, with the native executor as the fallback.
 
+pub mod native;
+
+#[cfg(feature = "xla")]
 pub mod literal;
+#[cfg(feature = "xla")]
 pub mod client;
 
-pub use client::{Executable, Runtime};
+pub use native::NativeBackend;
+
+#[cfg(feature = "xla")]
+pub use client::{Executable, PjrtBackend};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+
+/// Model-execution seam: everything the trainer/evaluator/server need.
+///
+/// `tokens` is a row-major `rows × cfg.seq_len` i32 buffer; `params`
+/// follows `cfg.params` order exactly.
+pub trait Backend {
+    /// Short identifier ("native", "pjrt-cpu").
+    fn name(&self) -> &'static str;
+
+    /// Human-readable description for `salaad info`.
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Dense forward: logits tensor of shape (rows, seq_len, vocab).
+    fn forward_logits(&self, cfg: &ModelConfig, params: &[Tensor],
+                      tokens: &[i32], rows: usize) -> Result<Tensor>;
+
+    /// Training step: (mean next-token NLL, gradients in param order).
+    fn loss_and_grads(&self, cfg: &ModelConfig, params: &[Tensor],
+                      tokens: &[i32]) -> Result<(f64, Vec<Tensor>)>;
+
+    /// Evaluation: (Σ NLL over next-token targets, target count).
+    fn eval_loss(&self, cfg: &ModelConfig, params: &[Tensor],
+                 tokens: &[i32]) -> Result<(f64, f64)>;
+}
+
+/// Backend + config registry: the object the rest of the crate holds.
+pub struct Runtime {
+    backend: Box<dyn Backend>,
+    configs: BTreeMap<String, ModelConfig>,
+    /// Artifacts directory when the PJRT backend is active.
+    pub dir: Option<PathBuf>,
+}
+
+impl Runtime {
+    /// Pure-Rust runtime over the builtin config registry. Never fails,
+    /// needs no artifacts.
+    pub fn native() -> Runtime {
+        let mut configs = BTreeMap::new();
+        for name in ModelConfig::builtin_names() {
+            configs.insert(name.to_string(),
+                           ModelConfig::builtin(name).unwrap());
+        }
+        Runtime {
+            backend: Box::new(NativeBackend::new()),
+            configs,
+            dir: None,
+        }
+    }
+
+    /// Artifact-directory-backed PJRT runtime (requires `--features
+    /// xla`). The manifest supplies the config registry.
+    #[cfg(feature = "xla")]
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let backend = PjrtBackend::new(artifacts_dir.as_ref())?;
+        let mut configs = BTreeMap::new();
+        for name in backend.config_names() {
+            configs.insert(name.clone(), backend.model_config(&name)?);
+        }
+        let dir = Some(backend.dir.clone());
+        Ok(Runtime { backend: Box::new(backend), configs, dir })
+    }
+
+    #[cfg(not(feature = "xla"))]
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        bail!("artifact runtime for {} requires building with \
+               `--features xla`; the default build uses the native \
+               backend (Runtime::native)",
+              artifacts_dir.as_ref().display());
+    }
+
+    /// Backend selection: `SALAAD_BACKEND` forces `native` or `xla`;
+    /// otherwise PJRT is used iff compiled in *and* artifacts exist
+    /// (`$SALAAD_ARTIFACTS` or `./artifacts`), native otherwise.
+    pub fn from_env() -> Result<Self> {
+        let artifacts = std::env::var("SALAAD_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        match std::env::var("SALAAD_BACKEND").as_deref() {
+            Ok("native") => return Ok(Runtime::native()),
+            Ok("xla") | Ok("pjrt") => return Runtime::new(&artifacts),
+            Ok(other) => bail!("unknown SALAAD_BACKEND `{other}` \
+                                (expected `native` or `xla`)"),
+            Err(_) => {}
+        }
+        if cfg!(feature = "xla")
+            && std::path::Path::new(&artifacts).join("manifest.json")
+                .exists()
+        {
+            return Runtime::new(&artifacts);
+        }
+        Ok(Runtime::native())
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn describe(&self) -> String {
+        self.backend.describe()
+    }
+
+    /// Model config for a named scale (nano/micro/mini/small).
+    pub fn model_config(&self, name: &str) -> Result<ModelConfig> {
+        self.configs
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!(
+                "config `{name}` not available (known: {:?})",
+                self.config_names()))
+    }
+
+    pub fn config_names(&self) -> Vec<String> {
+        self.configs.keys().cloned().collect()
+    }
+
+    /// Dense forward to (rows, seq_len, vocab) logits.
+    pub fn forward_logits(&self, cfg: &ModelConfig, params: &[Tensor],
+                          tokens: &[i32], rows: usize) -> Result<Tensor> {
+        self.backend.forward_logits(cfg, params, tokens, rows)
+    }
+
+    /// Training step: (mean NLL, grads in `cfg.params` order).
+    pub fn loss_and_grads(&self, cfg: &ModelConfig, params: &[Tensor],
+                          tokens: &[i32]) -> Result<(f64, Vec<Tensor>)> {
+        self.backend.loss_and_grads(cfg, params, tokens)
+    }
+
+    /// (Σ NLL, token count) for exact PPL pooling across batches.
+    pub fn eval_loss(&self, cfg: &ModelConfig, params: &[Tensor],
+                     tokens: &[i32]) -> Result<(f64, f64)> {
+        self.backend.eval_loss(cfg, params, tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_has_builtin_configs() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend_name(), "native");
+        assert!(rt.dir.is_none());
+        let names = rt.config_names();
+        for want in ["nano", "micro", "mini", "small"] {
+            assert!(names.iter().any(|n| n == want), "missing {want}");
+        }
+        let cfg = rt.model_config("nano").unwrap();
+        assert_eq!(cfg.d_model, 64);
+        assert!(rt.model_config("giant").is_err());
+    }
+
+    #[test]
+    fn from_env_defaults_to_native_without_artifacts() {
+        // No artifacts dir in the test environment and the xla feature
+        // is off by default, so from_env must fall back to native. An
+        // explicit SALAAD_BACKEND override invalidates the premise.
+        if cfg!(feature = "xla")
+            || std::env::var("SALAAD_BACKEND").is_ok()
+        {
+            return;
+        }
+        let rt = Runtime::from_env().unwrap();
+        assert_eq!(rt.backend_name(), "native");
+    }
+}

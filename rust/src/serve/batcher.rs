@@ -83,4 +83,50 @@ mod tests {
         let b = Batcher::new(4, Duration::from_millis(5));
         assert!(b.next_batch(&rx).is_none());
     }
+
+    #[test]
+    fn full_batch_returns_before_deadline() {
+        // With the batch already full, next_batch must not wait out a
+        // long deadline.
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = Batcher::new(4, Duration::from_secs(30));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(1),
+                "full batch waited for the deadline");
+        // Ids preserved in arrival order.
+        let ids: Vec<u64> = batch.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn disconnect_flushes_partial_batch() {
+        // Clients hanging up mid-collection must flush what arrived
+        // instead of erroring or waiting for the deadline.
+        let (tx, rx) = channel();
+        tx.send(req(0)).unwrap();
+        tx.send(req(1)).unwrap();
+        drop(tx);
+        let b = Batcher::new(8, Duration::from_secs(30));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        // The drained channel then reports closure.
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_to_one() {
+        let (tx, rx) = channel();
+        tx.send(req(7)).unwrap();
+        let b = Batcher::new(0, Duration::from_millis(5));
+        assert_eq!(b.max_batch, 1);
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
 }

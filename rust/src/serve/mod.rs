@@ -3,8 +3,9 @@
 //! A [`Server`] owns one HPA-compressed model variant per configured
 //! memory budget, batches incoming requests with a deadline-based
 //! dynamic batcher, and routes each request to the variant that fits its
-//! memory budget. Threading: PJRT is not `Send`, so the server runs on
-//! its owner thread and talks to clients over std::sync::mpsc channels
+//! memory budget. Threading: the PJRT backend is not `Send` (and the
+//! native backend parallelizes internally), so the server runs on its
+//! owner thread and talks to clients over std::sync::mpsc channels
 //! (the offline vendor set has no tokio; DESIGN.md §3).
 
 pub mod request;

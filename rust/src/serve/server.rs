@@ -118,11 +118,16 @@ impl<'a> Server<'a> {
     fn generate(&self, variant: &VariantSpec, prompt: &[u32],
                 max_new: usize) -> Result<Vec<u32>> {
         let t = self.cfg.seq_len;
-        let exe = self.rt.load_entry(&self.cfg, "logits")?;
         let mut seq: Vec<u32> = prompt.to_vec();
-        let keep = t.saturating_sub(max_new.max(1));
+        // Keep at least one conditioning position: a request asking for
+        // max_new >= seq_len must not truncate the prompt to nothing
+        // (last_pos below would underflow and kill the serving thread).
+        let keep = t.saturating_sub(max_new.max(1)).max(1);
         if seq.len() > keep {
             seq = seq[seq.len() - keep..].to_vec();
+        }
+        if seq.is_empty() {
+            seq.push(0); // empty prompt: condition on a pad token
         }
         let mut out = Vec::with_capacity(max_new);
         for _ in 0..max_new {
@@ -130,11 +135,10 @@ impl<'a> Server<'a> {
                 seq.iter().map(|x| *x as i32).collect();
             let last_pos = padded.len() - 1;
             padded.resize(t, 0);
-            let inputs =
-                self.rt.pack_inputs(&self.cfg, &variant.params, &padded, 1)?;
-            let logits = exe.run_tensors(&inputs)?;
+            let logits = self.rt.forward_logits(&self.cfg, &variant.params,
+                                                &padded, 1)?;
             let v = self.cfg.vocab;
-            let row = &logits[0].data[last_pos * v..(last_pos + 1) * v];
+            let row = &logits.data[last_pos * v..(last_pos + 1) * v];
             let next = row
                 .iter()
                 .enumerate()
@@ -151,7 +155,8 @@ impl<'a> Server<'a> {
     }
 
     /// Serve until the request channel closes. Runs on the caller's
-    /// thread (PJRT is not Send); clients live on other threads.
+    /// thread (the PJRT backend is not `Send`; the native backend
+    /// parallelizes internally); clients live on other threads.
     pub fn run(&mut self, rx: Receiver<Request>, tx: Sender<Response>)
                -> Result<()> {
         while let Some(batch) = self.batcher.next_batch(&rx) {

@@ -1,0 +1,73 @@
+//! Numerical reference tests for the linalg substrate: small
+//! hand-computed cases where every expected value is derived on paper,
+//! complementing the property tests inside `src/linalg/`.
+
+use salaad::linalg::{jacobi_svd, matmul, matmul_nt, matmul_tn,
+                     reconstruct};
+use salaad::tensor::Tensor;
+
+#[test]
+fn matmul_hand_computed_2x3_3x2() {
+    let a = Tensor::new(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+    let b = Tensor::new(vec![7., 8., 9., 10., 11., 12.], &[3, 2]);
+    let c = matmul(&a, &b);
+    assert_eq!(c.shape, vec![2, 2]);
+    // [1 2 3]·[7 9 11]^T-cols: row0 = (58, 64), row1 = (139, 154).
+    assert_eq!(c.data, vec![58., 64., 139., 154.]);
+}
+
+#[test]
+fn matmul_variants_hand_computed() {
+    let a = Tensor::new(vec![1., 2., 3., 4.], &[2, 2]);
+    let b = Tensor::new(vec![5., 6., 7., 8.], &[2, 2]);
+    // A·Bᵀ: row0 = (1·5+2·6, 1·7+2·8) = (17, 23); row1 = (39, 53).
+    assert_eq!(matmul_nt(&a, &b).data, vec![17., 23., 39., 53.]);
+    // Aᵀ·B: col-dot form: [[1·5+3·7, 1·6+3·8], [2·5+4·7, 2·6+4·8]].
+    assert_eq!(matmul_tn(&a, &b).data, vec![26., 30., 38., 44.]);
+}
+
+#[test]
+fn svd_known_2x2_spectrum() {
+    // A = [[3, 0], [4, 5]]: AᵀA = [[25, 20], [20, 25]], eigenvalues
+    // 45 and 5, so σ = (√45, √5).
+    let a = Tensor::new(vec![3., 0., 4., 5.], &[2, 2]);
+    let svd = jacobi_svd(&a);
+    assert!((svd.s[0] as f64 - 45f64.sqrt()).abs() < 1e-4,
+            "σ1 {}", svd.s[0]);
+    assert!((svd.s[1] as f64 - 5f64.sqrt()).abs() < 1e-4,
+            "σ2 {}", svd.s[1]);
+    // Frobenius identity: σ1² + σ2² = ‖A‖²_F = 9 + 16 + 25 = 50.
+    let ss: f64 = svd.s.iter().map(|x| (*x as f64).powi(2)).sum();
+    assert!((ss - 50.0).abs() < 1e-3);
+    // Exact reconstruction for a full SVD.
+    assert!(svd.reconstruct().dist_frob(&a) < 1e-4);
+}
+
+#[test]
+fn svd_rank_one_matrix() {
+    // [[2, 4], [1, 2]] = (2, 1)ᵀ · (1, 2): rank 1, σ1 = ‖A‖_F = 5.
+    let a = Tensor::new(vec![2., 4., 1., 2.], &[2, 2]);
+    let svd = jacobi_svd(&a);
+    assert!((svd.s[0] - 5.0).abs() < 1e-4, "σ1 {}", svd.s[0]);
+    assert!(svd.s[1].abs() < 1e-4, "σ2 {}", svd.s[1]);
+    assert_eq!(svd.rank(1e-4), 1);
+}
+
+#[test]
+fn svd_orthogonal_matrix_has_unit_spectrum() {
+    // A rotation matrix: both singular values exactly 1.
+    let (c, s) = (0.6f32, 0.8f32);
+    let a = Tensor::new(vec![c, -s, s, c], &[2, 2]);
+    let svd = jacobi_svd(&a);
+    for sv in &svd.s {
+        assert!((sv - 1.0).abs() < 1e-5, "spectrum {:?}", svd.s);
+    }
+}
+
+#[test]
+fn reconstruct_diag_scaling() {
+    // U = I₂, s = (3, 2), V = I₂ → U diag(s) Vᵀ = diag(3, 2).
+    let eye = Tensor::new(vec![1., 0., 0., 1.], &[2, 2]);
+    let rec = reconstruct(&eye, &[3.0, 2.0], &eye);
+    assert_eq!(rec.data, vec![3., 0., 0., 2.]);
+}
