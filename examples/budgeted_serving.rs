@@ -33,9 +33,12 @@ fn main() -> Result<()> {
         &[0.35, 0.65],
         ServerOptions { max_batch: 4, max_wait: Duration::from_millis(8),
                         kappa: 0.7 })?;
-    println!("deployed variants (param counts): {:?}",
-             server.variants.iter().map(|v| v.params_count)
-                 .collect::<Vec<_>>());
+    for v in &server.variants {
+        println!("deployed variant: {:>8} params, resident {:>8} B \
+                  ({} blocks kept factored; dense X̂ would be {} B)",
+                 v.params_count, v.resident_bytes(), v.n_factored(),
+                 v.dense_bytes());
+    }
 
     let tokenizer = Tokenizer::new(cfg.vocab, 0);
     let budgets: Vec<usize> =
@@ -48,13 +51,9 @@ fn main() -> Result<()> {
         for i in 0..12u64 {
             let prompt: Vec<u32> =
                 (0..10).map(|_| rng.next_below(vocab) as u32).collect();
-            req_tx.send(Request {
-                id: i,
-                prompt,
-                max_new_tokens: 5,
-                // Cycle through edge / mid / cloud budgets.
-                budget_params: budgets[(i as usize) % budgets.len()],
-            }).unwrap();
+            // Cycle through edge / mid / cloud budgets.
+            let budget = budgets[(i as usize) % budgets.len()];
+            req_tx.send(Request::new(i, prompt, 5, budget)).unwrap();
             std::thread::sleep(Duration::from_millis(3));
         }
     });
@@ -68,7 +67,7 @@ fn main() -> Result<()> {
                  tokenizer.decode(&r.tokens));
         lat.push(r.latency_ms);
     }
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(f64::total_cmp);
     println!("\nserved {} requests: p50 {:.1} ms, max {:.1} ms",
              lat.len(), lat[lat.len() / 2], lat.last().unwrap());
     println!("budgeted_serving OK");

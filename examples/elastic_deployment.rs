@@ -57,9 +57,7 @@ fn main() -> Result<()> {
     for frac in [0.0, 0.2, 0.4, 0.6, 0.8] {
         let eval_at = |tr: &Trainer, blocks: &[SlrBlock]|
                       -> Result<(usize, f64)> {
-            let pool = hpa::plan(blocks, 0.7, 0)?;
-            let budget = ((pool.c_l + pool.c_s) as f64 * frac) as usize;
-            let plan = hpa::plan(blocks, 0.7, budget)?;
+            let plan = hpa::plan_frac(blocks, 0.7, frac)?;
             let (trunc, _) = hpa::apply(blocks, &plan);
             let mut params = tr.params.clone();
             for (b, &idx) in trunc.iter().zip(&sal.block_param_idx) {

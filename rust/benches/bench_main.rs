@@ -9,7 +9,8 @@
 //!   backend         : fwd_bwd/eval/logits step latency per scale
 //!                     (table1/fig2/fig3 drivers) through the active
 //!                     Runtime backend (native by default)
-//!   serving         : greedy-decode token latency (the serving path)
+//!   serving         : logits latency dense vs factored (U,s,V,CSR-S),
+//!                     and greedy decode with vs without the KV cache
 //!
 //! Set SALAAD_BENCH_FILTER=<substr> to run a subset.
 
@@ -20,6 +21,7 @@ use salaad::coordinator::{run_admm_phase, Method, Trainer};
 use salaad::data::BatchLoader;
 use salaad::linalg::{jacobi_svd, matmul, matmul_nt, rand_svd};
 use salaad::runtime::Runtime;
+use salaad::serve::{Server, ServerOptions};
 use salaad::slr::prox::{soft_threshold_assign, svt};
 use salaad::slr::{hpa, rpca::rpca, SlrBlock};
 use salaad::tensor::Tensor;
@@ -199,6 +201,68 @@ fn main() {
                 std::hint::black_box(
                     rt.forward_logits(&cfg, &params, &one, 1).unwrap());
             });
+        }
+
+        // Factored serving path: dense-vs-factored logits and
+        // cached-vs-uncached greedy decode (the ROADMAP "factored
+        // serving" + "KV-cached incremental decoding" items; numbers
+        // recorded in EXPERIMENTS.md §Serving).
+        for scale in ["nano", "micro"] {
+            let cfg = rt.model_config(scale).unwrap();
+            let t = cfg.seq_len;
+            let mut blocks = Vec::new();
+            let mut idx = Vec::new();
+            for name in cfg.blocks(true, true) {
+                let shape = cfg.shape_of(&name).unwrap().to_vec();
+                blocks.push(SlrBlock::random(&name, shape[0], shape[1],
+                                             8, 0.05, 0));
+                idx.push(cfg.param_index(&name).unwrap());
+            }
+            let params = cfg.init_params(0);
+            let server = Server::new(&rt, cfg.clone(), &params, &blocks,
+                                     &idx, &[0.5],
+                                     ServerOptions::default())
+                .unwrap();
+            let variant = server.variants.first().unwrap();
+            eprintln!("{scale} compressed variant: resident {} B vs \
+                       dense {} B ({} factored blocks)",
+                      variant.resident_bytes(), variant.dense_bytes(),
+                      variant.n_factored());
+            let factored_one: Vec<i32> =
+                (0..t).map(|i| ((i * 31 + 5) % cfg.vocab) as i32)
+                    .collect();
+            b.bench(&format!("serve/logits_factored_1x{t}_{scale}"), || {
+                std::hint::black_box(
+                    rt.forward_logits_model(&cfg, &variant.params,
+                                            &factored_one, 1)
+                        .unwrap());
+            });
+            let prompt =
+                server.prepare_prompt(&[5, 4, 3, 2, 1, 0, 1, 2], 32);
+            b.bench(&format!("serve/decode32_uncached_{scale}"), || {
+                std::hint::black_box(
+                    server.generate_uncached(variant, &prompt, 32)
+                        .unwrap());
+            });
+            b.bench(&format!("serve/decode32_cached_{scale}"), || {
+                std::hint::black_box(
+                    server.generate_cached(variant,
+                                           &[prompt.clone()], &[32])
+                        .unwrap());
+            });
+            // Per-token decode cost must not grow with the total
+            // sequence length: emit per-position step times at two
+            // context depths for the O(T) claim.
+            for max_new in [8usize, 64] {
+                b.bench(&format!(
+                    "serve/decode{max_new}_cached_{scale}"), || {
+                    std::hint::black_box(
+                        server.generate_cached(variant,
+                                               &[prompt.clone()],
+                                               &[max_new])
+                            .unwrap());
+                });
+            }
         }
 
         // One short SALAAD training step sequence (fully end-to-end).

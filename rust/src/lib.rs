@@ -9,7 +9,11 @@
 //! ## Backend architecture
 //!
 //! Model execution is a pluggable seam ([`runtime::Backend`]) with three
-//! operations — `forward_logits`, `loss_and_grads`, `eval_loss` — behind
+//! training-side operations — `forward_logits`, `loss_and_grads`,
+//! `eval_loss` — plus a factored serving surface
+//! (`forward_logits_model`, `prefill`, `decode_step` over
+//! [`runtime::ModelParams`], where SLR-compressed blocks stay as
+//! (U, s, V) + CSR-S and decode is KV-cached) — behind
 //! one [`runtime::Runtime`] facade that the trainer, evaluator, server
 //! and experiment drivers share:
 //!

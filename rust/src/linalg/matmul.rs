@@ -61,8 +61,12 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// Dot product with 8 independent accumulators — breaks the reduction
 /// dependency chain so the compiler vectorizes (EXPERIMENTS.md §Perf).
+/// Public because the KV-cached attention path (`runtime::native`)
+/// computes per-query scores with the same accumulation order as
+/// `matmul_nt`, keeping incremental decode bit-consistent with the full
+/// forward.
 #[inline]
-fn dot8(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = [0.0f32; 8];
     let chunks = a.len() / 8;
     for c in 0..chunks {

@@ -17,7 +17,7 @@ pub mod qr;
 pub mod svd;
 pub mod rand_svd;
 
-pub use matmul::{matmul, matmul_nt, matmul_tn};
+pub use matmul::{dot8, matmul, matmul_nt, matmul_tn};
 pub use qr::qr_thin;
 pub use svd::{jacobi_svd, Svd};
 pub use rand_svd::rand_svd;

@@ -179,12 +179,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
                     "checkpoint has no SLR surrogate blocks");
     let kappa = args.f64_flag("kappa", 0.7)?;
     let frac = args.f64_flag("budget-frac", 0.3)?;
-    let pool = hpa::plan(&ck.blocks, kappa, 0)?;
-    let budget = ((pool.c_l + pool.c_s) as f64 * frac) as usize;
-    let plan = hpa::plan(&ck.blocks, kappa, budget)?;
+    let plan = hpa::plan_frac(&ck.blocks, kappa, frac)?;
     let (trunc, report) = hpa::apply(&ck.blocks, &plan);
-    println!("HPA: κ={kappa} budget={budget} → φ_L={:.3} φ_S={:.3}",
-             plan.phi_l, plan.phi_s);
+    println!("HPA: κ={kappa} budget={} → φ_L={:.3} φ_S={:.3}",
+             plan.budget, plan.phi_l, plan.phi_s);
     println!("surrogate params: {} → {} (removed {})",
              report.params_before, report.params_after, report.removed);
 
@@ -233,9 +231,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut server = Server::new(&rt, cfg.clone(), &tr.params, &tr.blocks,
                                  &tr.block_param_idx, &[0.3, 0.6],
                                  ServerOptions::default())?;
-    eprintln!("variants: {:?}",
-              server.variants.iter().map(|v| v.params_count)
-                  .collect::<Vec<_>>());
+    let mut any_factored = false;
+    for v in &server.variants {
+        eprintln!("variant {:>9} params: resident {:>9} B \
+                   (dense X̂ would be {:>9} B, {} factored blocks)",
+                  v.params_count, v.resident_bytes(), v.dense_bytes(),
+                  v.n_factored());
+        any_factored |= v.n_factored() > 0
+            && v.resident_bytes() < v.dense_bytes();
+    }
+    if rt.supports_incremental() {
+        anyhow::ensure!(any_factored,
+                        "no variant is served from factors — the \
+                         factored path regressed to dense \
+                         materialization");
+    } else {
+        eprintln!("backend `{}` has no factored execution; serving from \
+                   a memoized dense materialization", rt.backend_name());
+    }
     let budgets: Vec<usize> =
         server.variants.iter().map(|v| v.params_count).collect();
 
@@ -249,25 +262,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .map(|_| rng.next_below(vocab) as u32)
                 .collect();
             let budget = budgets[(i as usize) % budgets.len()];
-            req_tx.send(Request { id: i, prompt, max_new_tokens: 4,
-                                  budget_params: budget }).unwrap();
+            req_tx.send(Request::new(i, prompt, 4, budget)).unwrap();
         }
     });
     server.run(req_rx, resp_tx)?;
     producer.join().unwrap();
     let mut lat = Vec::new();
+    let mut n_resp = 0usize;
     for r in resp_rx.iter() {
         println!("req {:>3} served by {:>8}-param variant in {:.1} ms \
-                  (queued {:.1} ms): {:?}",
-                 r.id, r.served_params, r.latency_ms, r.queue_ms, r.tokens);
+                  (queued {:.1} ms){}: {:?}",
+                 r.id, r.served_params, r.latency_ms, r.queue_ms,
+                 if r.over_budget { " OVER BUDGET" } else { "" },
+                 r.tokens);
         lat.push(r.latency_ms);
+        n_resp += 1;
     }
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(f64::total_cmp);
     if !lat.is_empty() {
         let p95 = lat[((lat.len() * 95) / 100).min(lat.len() - 1)];
         println!("p50 {:.1} ms  p95 {p95:.1} ms  served {} reqs",
                  lat[lat.len() / 2], lat.len());
     }
+    // Smoke contract: every request round-trips to a response.
+    anyhow::ensure!(n_resp == n_requests,
+                    "served {n_resp}/{n_requests} requests");
+    println!("serve OK: {n_resp}/{n_requests} responses, factored \
+              variants resident below dense");
     Ok(())
 }
 

@@ -7,6 +7,15 @@
 //! - `loss_and_grads` — training step: mean NLL + per-parameter grads,
 //! - `eval_loss` — (Σ NLL, token count) for exact perplexity pooling.
 //!
+//! The serving path adds a factored-parameter surface on the same seam:
+//! [`ModelParams`] holds each parameter either dense or as SLR factors
+//! `(U, s, V)` + CSR residual ([`ParamValue`]), and
+//! `forward_logits_model` / `prefill` / `decode_step` execute it. The
+//! native backend evaluates factored linears as `x·V·diag(s)·Uᵀ + x·Sᵀ`
+//! and keeps a [`KvCache`] so greedy decode costs O(T) instead of
+//! O(T²); other backends inherit a densifying fallback (correct, no
+//! memory win) and report `supports_incremental() == false`.
+//!
 //! Two implementations exist:
 //!
 //! - [`NativeBackend`] (default, always available): a pure-Rust
@@ -33,7 +42,7 @@ pub mod literal;
 #[cfg(feature = "xla")]
 pub mod client;
 
-pub use native::NativeBackend;
+pub use native::{KvCache, NativeBackend};
 
 #[cfg(feature = "xla")]
 pub use client::{Executable, PjrtBackend};
@@ -44,7 +53,92 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use crate::config::ModelConfig;
+use crate::slr::FactoredLinear;
 use crate::tensor::Tensor;
+
+/// One model parameter as the serving runtime stores it: either a dense
+/// tensor or an SLR-compressed linear kept factored as (U, s, V) plus a
+/// CSR residual — never densified on the inference path.
+#[derive(Clone, Debug)]
+pub enum ParamValue {
+    Dense(Tensor),
+    Factored(FactoredLinear),
+}
+
+impl ParamValue {
+    /// Resident bytes of this parameter as stored.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            ParamValue::Dense(t) => 4 * t.numel(),
+            ParamValue::Factored(f) => f.bytes(),
+        }
+    }
+
+    /// Bytes a dense materialization of this parameter would occupy.
+    pub fn dense_bytes(&self) -> usize {
+        match self {
+            ParamValue::Dense(t) => 4 * t.numel(),
+            ParamValue::Factored(f) => 4 * f.n * f.m,
+        }
+    }
+
+    pub fn is_factored(&self) -> bool {
+        matches!(self, ParamValue::Factored(_))
+    }
+
+    /// Densify (clones dense tensors, reconstructs factored ones).
+    pub fn to_dense(&self) -> Tensor {
+        match self {
+            ParamValue::Dense(t) => t.clone(),
+            ParamValue::Factored(f) => f.to_dense(),
+        }
+    }
+}
+
+/// A full parameter set in `cfg.params` order, mixing dense and
+/// factored entries. This is what the server holds per variant and what
+/// factored-aware backends execute directly.
+#[derive(Clone, Debug, Default)]
+pub struct ModelParams {
+    pub values: Vec<ParamValue>,
+}
+
+impl ModelParams {
+    /// All-dense parameter set (the trivial embedding of the old API).
+    pub fn from_dense(params: &[Tensor]) -> Self {
+        ModelParams {
+            values: params.iter().cloned().map(ParamValue::Dense).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Densify every entry (fallback for backends without factored
+    /// execution, and the oracle in equivalence tests).
+    pub fn densify(&self) -> Vec<Tensor> {
+        self.values.iter().map(|v| v.to_dense()).collect()
+    }
+
+    /// Bytes resident with the current mixed representation.
+    pub fn resident_bytes(&self) -> usize {
+        self.values.iter().map(|v| v.resident_bytes()).sum()
+    }
+
+    /// Bytes a fully dense materialization would occupy.
+    pub fn dense_bytes(&self) -> usize {
+        self.values.iter().map(|v| v.dense_bytes()).sum()
+    }
+
+    pub fn n_factored(&self) -> usize {
+        self.values.iter().filter(|v| v.is_factored()).count()
+    }
+}
 
 /// Model-execution seam: everything the trainer/evaluator/server need.
 ///
@@ -70,6 +164,39 @@ pub trait Backend {
     /// Evaluation: (Σ NLL over next-token targets, target count).
     fn eval_loss(&self, cfg: &ModelConfig, params: &[Tensor],
                  tokens: &[i32]) -> Result<(f64, f64)>;
+
+    /// Forward over a mixed dense/factored parameter set. Backends
+    /// without factored execution fall back to densifying (correct, but
+    /// it forfeits the memory claim — the native backend overrides).
+    fn forward_logits_model(&self, cfg: &ModelConfig, params: &ModelParams,
+                            tokens: &[i32], rows: usize) -> Result<Tensor> {
+        self.forward_logits(cfg, &params.densify(), tokens, rows)
+    }
+
+    /// Whether `prefill`/`decode_step` are implemented.
+    fn supports_incremental(&self) -> bool {
+        false
+    }
+
+    /// Run the prompt once, returning logits for every prompt position
+    /// (`rows × t_prompt` flattened to `(rows·t_prompt, vocab)`) plus a
+    /// KV cache positioned after the prompt. `tokens` is row-major
+    /// `rows × t_prompt` with `t_prompt ≤ cfg.seq_len`.
+    fn prefill(&self, cfg: &ModelConfig, params: &ModelParams,
+               tokens: &[i32], rows: usize) -> Result<(Tensor, KvCache)> {
+        let _ = (cfg, params, tokens, rows);
+        bail!("backend `{}` does not support incremental decoding",
+              self.name())
+    }
+
+    /// Append one token per row and return `(rows, vocab)` logits for
+    /// the new positions, advancing the cache by one.
+    fn decode_step(&self, cfg: &ModelConfig, params: &ModelParams,
+                   cache: &mut KvCache, last: &[i32]) -> Result<Tensor> {
+        let _ = (cfg, params, cache, last);
+        bail!("backend `{}` does not support incremental decoding",
+              self.name())
+    }
 }
 
 /// Backend + config registry: the object the rest of the crate holds.
@@ -178,6 +305,32 @@ impl Runtime {
                      tokens: &[i32]) -> Result<(f64, f64)> {
         self.backend.eval_loss(cfg, params, tokens)
     }
+
+    /// Forward over a mixed dense/factored parameter set.
+    pub fn forward_logits_model(&self, cfg: &ModelConfig,
+                                params: &ModelParams, tokens: &[i32],
+                                rows: usize) -> Result<Tensor> {
+        self.backend.forward_logits_model(cfg, params, tokens, rows)
+    }
+
+    /// Whether the backend supports `prefill`/`decode_step`.
+    pub fn supports_incremental(&self) -> bool {
+        self.backend.supports_incremental()
+    }
+
+    /// One prompt pass returning per-position logits + a KV cache.
+    pub fn prefill(&self, cfg: &ModelConfig, params: &ModelParams,
+                   tokens: &[i32], rows: usize)
+                   -> Result<(Tensor, KvCache)> {
+        self.backend.prefill(cfg, params, tokens, rows)
+    }
+
+    /// One single-position decode step per row against the KV cache.
+    pub fn decode_step(&self, cfg: &ModelConfig, params: &ModelParams,
+                       cache: &mut KvCache, last: &[i32])
+                       -> Result<Tensor> {
+        self.backend.decode_step(cfg, params, cache, last)
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +349,34 @@ mod tests {
         let cfg = rt.model_config("nano").unwrap();
         assert_eq!(cfg.d_model, 64);
         assert!(rt.model_config("giant").is_err());
+    }
+
+    #[test]
+    fn model_params_accounting_and_densify() {
+        use crate::slr::SlrBlock;
+        let cfg = ModelConfig::from_geometry("tiny", 16, 8, 1, 2, 12, 6,
+                                             2);
+        let dense = cfg.init_params(0);
+        let mut mp = ModelParams::from_dense(&dense);
+        assert_eq!(mp.len(), cfg.params.len());
+        assert_eq!(mp.n_factored(), 0);
+        assert_eq!(mp.resident_bytes(), 4 * cfg.n_params());
+        assert_eq!(mp.resident_bytes(), mp.dense_bytes());
+
+        // Swap one projection for a compressed factored form.
+        let idx = cfg.param_index("layers.0.wq").unwrap();
+        let b = SlrBlock::random("layers.0.wq", 8, 8, 2, 0.1, 0);
+        mp.values[idx] = ParamValue::Factored(b.to_factored());
+        assert_eq!(mp.n_factored(), 1);
+        assert_eq!(mp.dense_bytes(), 4 * cfg.n_params());
+        // Densify reconstructs X̂ in place of the factors.
+        let back = mp.densify();
+        assert!(back[idx].dist_frob(&b.xhat()) < 1e-6);
+        for (i, t) in back.iter().enumerate() {
+            if i != idx {
+                assert_eq!(t, &dense[i]);
+            }
+        }
     }
 
     #[test]

@@ -16,9 +16,10 @@
 
 use anyhow::{bail, ensure, Result};
 
-use super::Backend;
+use super::{Backend, ModelParams, ParamValue};
 use crate::config::ModelConfig;
-use crate::linalg::{matmul, matmul_nt, matmul_tn};
+use crate::linalg::{dot8, matmul, matmul_nt, matmul_tn};
+use crate::slr::FactoredLinear;
 use crate::tensor::Tensor;
 use crate::util::parallel::{default_workers, parallel_map};
 
@@ -61,6 +62,39 @@ impl Backend for NativeBackend {
         let (logits, _) = forward(cfg, params, tokens, rows, false)?;
         let (sum, count, _) = nll(cfg, &logits, tokens, rows, false);
         Ok((sum, count as f64))
+    }
+
+    fn forward_logits_model(&self, cfg: &ModelConfig, params: &ModelParams,
+                            tokens: &[i32], rows: usize) -> Result<Tensor> {
+        let t = cfg.seq_len;
+        ensure!(rows > 0 && tokens.len() == rows * t,
+                "token buffer {} != rows {rows} × seq_len {t}",
+                tokens.len());
+        let mv = resolve_model(cfg, params)?;
+        let mut cache = KvCache::new(cfg, rows);
+        let logits = forward_model(cfg, &mv, &mut cache, tokens, rows)?;
+        logits.reshape(&[rows, t, cfg.vocab])
+    }
+
+    fn supports_incremental(&self) -> bool {
+        true
+    }
+
+    fn prefill(&self, cfg: &ModelConfig, params: &ModelParams,
+               tokens: &[i32], rows: usize) -> Result<(Tensor, KvCache)> {
+        let mv = resolve_model(cfg, params)?;
+        let mut cache = KvCache::new(cfg, rows);
+        let logits = forward_model(cfg, &mv, &mut cache, tokens, rows)?;
+        Ok((logits, cache))
+    }
+
+    fn decode_step(&self, cfg: &ModelConfig, params: &ModelParams,
+                   cache: &mut KvCache, last: &[i32]) -> Result<Tensor> {
+        ensure!(last.len() == cache.rows(),
+                "decode_step expects one token per row ({} != {})",
+                last.len(), cache.rows());
+        let mv = resolve_model(cfg, params)?;
+        forward_model(cfg, &mv, cache, last, last.len())
     }
 }
 
@@ -393,6 +427,368 @@ fn forward_resolved(cfg: &ModelConfig, pv: &ParamView, tokens: &[i32],
     Ok((logits, cache))
 }
 
+// -------------------------------------- factored + incremental serving
+
+/// KV cache for incremental decoding: per layer and per (row, head),
+/// the post-RoPE keys and raw values of every position seen so far.
+/// Rows advance in lockstep (one appended token per row per step), so a
+/// single `len` covers the whole batch. Capacity is `cfg.seq_len`.
+pub struct KvCache {
+    rows: usize,
+    len: usize,
+    cap: usize,
+    heads: usize,
+    /// `k[layer][row * heads + head]` is a (cap, hd) tensor of rotated
+    /// keys; `v` likewise holds values.
+    k: Vec<Vec<Tensor>>,
+    v: Vec<Vec<Tensor>>,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig, rows: usize) -> Self {
+        let (cap, heads, hd) = (cfg.seq_len, cfg.n_heads, cfg.d_head());
+        let (cos, sin) = rope_tables(cap, hd, cfg.rope_theta);
+        let alloc = || -> Vec<Vec<Tensor>> {
+            (0..cfg.n_layers)
+                .map(|_| (0..rows * heads)
+                    .map(|_| Tensor::zeros(&[cap, hd]))
+                    .collect())
+                .collect()
+        };
+        KvCache {
+            rows,
+            len: 0,
+            cap,
+            heads,
+            k: alloc(),
+            v: alloc(),
+            cos,
+            sin,
+        }
+    }
+
+    /// Positions filled so far (per row).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Resident bytes of the cached K/V tensors.
+    pub fn resident_bytes(&self) -> usize {
+        let per: usize = self.k.iter().flatten().map(|t| 4 * t.numel())
+            .sum();
+        2 * per
+    }
+}
+
+/// A linear layer as the serving path sees it: dense weight (y = x·Wᵀ)
+/// or SLR factors evaluated without densifying.
+enum LinOp<'a> {
+    Dense(&'a Tensor),
+    Factored(&'a FactoredLinear),
+}
+
+impl LinOp<'_> {
+    fn matmul_t(&self, x: &Tensor) -> Tensor {
+        match self {
+            LinOp::Dense(w) => matmul_nt(x, w),
+            LinOp::Factored(f) => f.matmul_t(x),
+        }
+    }
+
+    /// Dense row `i` (embedding lookup) written into `out`.
+    fn row_into(&self, i: usize, out: &mut [f32]) {
+        match self {
+            LinOp::Dense(w) => out.copy_from_slice(w.row(i)),
+            LinOp::Factored(f) => f.row_dense_into(i, out),
+        }
+    }
+}
+
+/// Name-resolved views into a mixed dense/factored parameter set.
+struct ModelView<'a> {
+    embed: LinOp<'a>,
+    layers: Vec<LayerView<'a>>,
+    final_norm: &'a Tensor,
+    lm_head: LinOp<'a>,
+}
+
+struct LayerView<'a> {
+    attn_norm: &'a Tensor,
+    wq: LinOp<'a>,
+    wk: LinOp<'a>,
+    wv: LinOp<'a>,
+    wo: LinOp<'a>,
+    mlp_norm: &'a Tensor,
+    w_gate: LinOp<'a>,
+    w_up: LinOp<'a>,
+    w_down: LinOp<'a>,
+}
+
+/// Resolve a mixed parameter set into a [`ModelView`] in one pass over
+/// `cfg.params` — no per-name `format!` allocations or O(P²) name
+/// scans, because this runs per `decode_step` on the serving hot path.
+fn resolve_model<'a>(cfg: &ModelConfig, params: &'a ModelParams)
+                     -> Result<ModelView<'a>> {
+    ensure!(params.len() == cfg.params.len(),
+            "expected {} params, got {}", cfg.params.len(), params.len());
+
+    #[derive(Default)]
+    struct Slots<'a> {
+        attn_norm: Option<&'a Tensor>,
+        wq: Option<LinOp<'a>>,
+        wk: Option<LinOp<'a>>,
+        wv: Option<LinOp<'a>>,
+        wo: Option<LinOp<'a>>,
+        mlp_norm: Option<&'a Tensor>,
+        w_gate: Option<LinOp<'a>>,
+        w_up: Option<LinOp<'a>>,
+        w_down: Option<LinOp<'a>>,
+    }
+    let mut embed = None;
+    let mut final_norm = None;
+    let mut lm_head = None;
+    let mut layers: Vec<Slots> =
+        (0..cfg.n_layers).map(|_| Slots::default()).collect();
+
+    for (pv, (name, shape)) in params.values.iter().zip(&cfg.params) {
+        let op = match pv {
+            ParamValue::Dense(t) => {
+                ensure!(t.shape == *shape,
+                        "param `{name}` shape {:?} != {:?}", t.shape,
+                        shape);
+                LinOp::Dense(t)
+            }
+            ParamValue::Factored(f) => {
+                ensure!(shape.len() == 2 && f.n == shape[0]
+                            && f.m == shape[1],
+                        "factored param `{name}` is {}x{}, expected {:?}",
+                        f.n, f.m, shape);
+                f.validate()?;
+                LinOp::Factored(f)
+            }
+        };
+        let norm_of = |op: LinOp<'a>| -> Result<&'a Tensor> {
+            match op {
+                LinOp::Dense(t) => Ok(t),
+                LinOp::Factored(_) => {
+                    bail!("norm scale `{name}` cannot be factored")
+                }
+            }
+        };
+        match name.as_str() {
+            "embed" => embed = Some(op),
+            "lm_head" => lm_head = Some(op),
+            "final_norm" => final_norm = Some(norm_of(op)?),
+            other => {
+                let parsed = other
+                    .strip_prefix("layers.")
+                    .and_then(|r| r.split_once('.'))
+                    .and_then(|(num, key)| {
+                        num.parse::<usize>().ok().map(|li| (li, key))
+                    });
+                let Some((li, key)) = parsed else {
+                    bail!("unexpected parameter `{other}`")
+                };
+                ensure!(li < cfg.n_layers,
+                        "parameter `{other}` beyond {} layers",
+                        cfg.n_layers);
+                let slot = &mut layers[li];
+                match key {
+                    "attn_norm" => slot.attn_norm = Some(norm_of(op)?),
+                    "wq" => slot.wq = Some(op),
+                    "wk" => slot.wk = Some(op),
+                    "wv" => slot.wv = Some(op),
+                    "wo" => slot.wo = Some(op),
+                    "mlp_norm" => slot.mlp_norm = Some(norm_of(op)?),
+                    "w_gate" => slot.w_gate = Some(op),
+                    "w_up" => slot.w_up = Some(op),
+                    "w_down" => slot.w_down = Some(op),
+                    _ => bail!("unexpected parameter `{other}`"),
+                }
+            }
+        }
+    }
+
+    let miss =
+        |what: String| anyhow::anyhow!("missing parameter `{what}`");
+    let mut out_layers = Vec::with_capacity(cfg.n_layers);
+    for (li, s) in layers.into_iter().enumerate() {
+        let need = |k: &str| miss(format!("layers.{li}.{k}"));
+        out_layers.push(LayerView {
+            attn_norm: s.attn_norm.ok_or_else(|| need("attn_norm"))?,
+            wq: s.wq.ok_or_else(|| need("wq"))?,
+            wk: s.wk.ok_or_else(|| need("wk"))?,
+            wv: s.wv.ok_or_else(|| need("wv"))?,
+            wo: s.wo.ok_or_else(|| need("wo"))?,
+            mlp_norm: s.mlp_norm.ok_or_else(|| need("mlp_norm"))?,
+            w_gate: s.w_gate.ok_or_else(|| need("w_gate"))?,
+            w_up: s.w_up.ok_or_else(|| need("w_up"))?,
+            w_down: s.w_down.ok_or_else(|| need("w_down"))?,
+        });
+    }
+    Ok(ModelView {
+        embed: embed.ok_or_else(|| miss("embed".into()))?,
+        layers: out_layers,
+        final_norm: final_norm.ok_or_else(|| miss("final_norm".into()))?,
+        lm_head: lm_head.ok_or_else(|| miss("lm_head".into()))?,
+    })
+}
+
+/// Rotate one head-vector by the RoPE angle of `pos` (the single-row
+/// form of [`rope_apply`], identical arithmetic).
+fn rope_row(src: &[f32], dst: &mut [f32], cos: &[f32], sin: &[f32],
+            pos: usize) {
+    let half = src.len() / 2;
+    for j in 0..half {
+        let (c, s) = (cos[pos * half + j], sin[pos * half + j]);
+        dst[j] = src[j] * c - src[j + half] * s;
+        dst[j + half] = src[j] * s + src[j + half] * c;
+    }
+}
+
+/// Incremental forward: append `t_new = tokens.len() / rows` positions
+/// per row to the cache and return flat `(rows·t_new, vocab)` logits
+/// for the new positions. With an empty cache and `t_new = seq_len`
+/// this reproduces the dense [`forward`] bit for bit (same primitives,
+/// same accumulation order); with `t_new = 1` it is the O(T) decode
+/// step. Queries at global position p attend keys 0..=p, so causality
+/// matches the training-path attention exactly.
+fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
+                 tokens: &[i32], rows: usize) -> Result<Tensor> {
+    let (d, heads) = (cfg.d_model, cfg.n_heads);
+    let hd = cfg.d_head();
+    ensure!(hd % 2 == 0, "d_head must be even for rotary embeddings");
+    ensure!(rows > 0 && rows == cache.rows(),
+            "cache built for {} rows, forward called with {rows}",
+            cache.rows());
+    ensure!(cache.heads == heads && cache.k.len() == cfg.n_layers
+                && cache.capacity() == cfg.seq_len,
+            "kv cache geometry does not match config `{}`", cfg.name);
+    ensure!(!tokens.is_empty() && tokens.len() % rows == 0,
+            "token buffer {} not divisible into {rows} rows",
+            tokens.len());
+    let t_new = tokens.len() / rows;
+    let p0 = cache.len();
+    ensure!(p0 + t_new <= cache.capacity(),
+            "kv cache overflow: {p0} + {t_new} > capacity {}",
+            cache.capacity());
+    for &tok in tokens {
+        ensure!(tok >= 0 && (tok as usize) < cfg.vocab,
+                "token {tok} out of vocab range 0..{}", cfg.vocab);
+    }
+    let n = rows * t_new;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // Embedding lookup (factored-aware).
+    let mut x = Tensor::zeros(&[n, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        mv.embed.row_into(tok as usize, x.row_mut(i));
+    }
+
+    for (li, lp) in mv.layers.iter().enumerate() {
+        let (xn1, _) = rmsnorm_fwd(&x, lp.attn_norm, cfg.norm_eps);
+        let q = lp.wq.matmul_t(&xn1);
+        let k = lp.wk.matmul_t(&xn1);
+        let v = lp.wv.matmul_t(&xn1);
+
+        // Append rotated K and raw V for the new positions.
+        for b in 0..rows {
+            for h in 0..heads {
+                let kc = &mut cache.k[li][b * heads + h];
+                let vc = &mut cache.v[li][b * heads + h];
+                for i in 0..t_new {
+                    let pos = p0 + i;
+                    let ksrc = &k.row(b * t_new + i)[h * hd..(h + 1) * hd];
+                    rope_row(ksrc, kc.row_mut(pos), &cache.cos,
+                             &cache.sin, pos);
+                    vc.row_mut(pos).copy_from_slice(
+                        &v.row(b * t_new + i)[h * hd..(h + 1) * hd]);
+                }
+            }
+        }
+
+        // Causal attention of the new queries over the cached keys.
+        let total = p0 + t_new;
+        let flops = 2 * rows * heads * t_new * total * hd * 2;
+        let workers = if flops < (1 << 22) { 1 } else { default_workers() };
+        let bh: Vec<usize> = (0..rows * heads).collect();
+        let cache_ref: &KvCache = cache;
+        let head_outs = parallel_map(&bh, workers, |&idx| {
+            let (b, h) = (idx / heads, idx % heads);
+            let kc = &cache_ref.k[li][b * heads + h];
+            let vc = &cache_ref.v[li][b * heads + h];
+            let mut o = Tensor::zeros(&[t_new, hd]);
+            let mut qrot = vec![0.0f32; hd];
+            let mut srow = vec![0.0f32; total];
+            for i in 0..t_new {
+                let pos = p0 + i;
+                let qsrc = &q.row(b * t_new + i)[h * hd..(h + 1) * hd];
+                rope_row(qsrc, &mut qrot, &cache_ref.cos, &cache_ref.sin,
+                         pos);
+                let s = &mut srow[..pos + 1];
+                for (j, sv) in s.iter_mut().enumerate() {
+                    *sv = dot8(&qrot, kc.row(j)) * scale;
+                }
+                let m = s.iter().cloned().fold(f32::NEG_INFINITY,
+                                               f32::max);
+                let mut z = 0.0f32;
+                for sv in s.iter_mut() {
+                    *sv = (*sv - m).exp();
+                    z += *sv;
+                }
+                for sv in s.iter_mut() {
+                    *sv /= z;
+                }
+                let orow = o.row_mut(i);
+                for (j, &pv) in s.iter().enumerate() {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    for (ov, vv) in orow.iter_mut().zip(vc.row(j)) {
+                        *ov += pv * *vv;
+                    }
+                }
+            }
+            o
+        });
+        let mut o = Tensor::zeros(&[n, d]);
+        for (idx, ob) in head_outs.iter().enumerate() {
+            head_scatter(&mut o, ob, idx / heads, idx % heads, t_new, hd);
+        }
+
+        let mut x_mid = lp.wo.matmul_t(&o);
+        x_mid.add_assign(&x);
+        let (xn2, _) = rmsnorm_fwd(&x_mid, lp.mlp_norm, cfg.norm_eps);
+        let gate_pre = lp.w_gate.matmul_t(&xn2);
+        let up = lp.w_up.matmul_t(&xn2);
+        let mut hidden = gate_pre;
+        for (hv, uv) in hidden.data.iter_mut().zip(&up.data) {
+            *hv = silu(*hv) * *uv;
+        }
+        let mut x_out = lp.w_down.matmul_t(&hidden);
+        x_out.add_assign(&x_mid);
+        x = x_out;
+    }
+    cache.len += t_new;
+
+    let (xnf, _) = rmsnorm_fwd(&x, mv.final_norm, cfg.norm_eps);
+    Ok(mv.lm_head.matmul_t(&xnf))
+}
+
 /// Next-token NLL over flat (rows·T, vocab) logits. Targets are
 /// `tokens[b, t+1]` predicted from position t; the last position of
 /// each row has no target. Returns (Σ NLL, target count, dL/dlogits
@@ -649,6 +1045,106 @@ mod tests {
         // Wrong parameter count.
         let toks = golden_tokens(cfg.vocab, cfg.seq_len);
         assert!(b.forward_logits(&cfg, &params[1..], &toks, 1).is_err());
+    }
+
+    #[test]
+    fn incremental_full_prefill_matches_dense_forward() {
+        // forward_model over an empty cache with t_new = seq_len must
+        // reproduce the dense forward (same primitives, same order).
+        let cfg = tiny2_cfg();
+        let params = cfg.init_params(2);
+        let tokens = golden_tokens(cfg.vocab, 2 * cfg.seq_len);
+        let b = NativeBackend::new();
+        let full = b.forward_logits(&cfg, &params, &tokens, 2).unwrap();
+        let mp = ModelParams::from_dense(&params);
+        let inc = b.forward_logits_model(&cfg, &mp, &tokens, 2).unwrap();
+        assert_eq!(inc.shape, full.shape);
+        assert!(full.dist_frob(&inc) < 1e-6,
+                "incremental diverged: {}", full.dist_frob(&inc));
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_full_rows() {
+        let cfg = tiny2_cfg();
+        let params = cfg.init_params(4);
+        let t = cfg.seq_len;
+        let tokens = golden_tokens(cfg.vocab, t);
+        let b = NativeBackend::new();
+        let full = b.forward_logits(&cfg, &params, &tokens, 1).unwrap();
+        let full = full.reshape(&[t, cfg.vocab]).unwrap();
+
+        let mp = ModelParams::from_dense(&params);
+        let plen = t / 2;
+        let (pre, mut cache) =
+            b.prefill(&cfg, &mp, &tokens[..plen], 1).unwrap();
+        assert_eq!(pre.shape, vec![plen, cfg.vocab]);
+        assert_eq!(cache.len(), plen);
+        for p in 0..plen {
+            let d: f32 = pre.row(p).iter().zip(full.row(p))
+                .map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(d < 1e-5, "prefill row {p} diff {d}");
+        }
+        for (p, &tok) in tokens.iter().enumerate().skip(plen) {
+            let step = b.decode_step(&cfg, &mp, &mut cache, &[tok])
+                .unwrap();
+            assert_eq!(step.shape, vec![1, cfg.vocab]);
+            let d: f32 = step.row(0).iter().zip(full.row(p))
+                .map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(d < 1e-5, "decode pos {p} diff {d}");
+        }
+        assert_eq!(cache.len(), t);
+        // The cache is full: one more step must fail cleanly.
+        assert!(b.decode_step(&cfg, &mp, &mut cache, &[0]).is_err());
+    }
+
+    #[test]
+    fn factored_params_match_densified_forward() {
+        use crate::slr::SlrBlock;
+        let cfg = tiny2_cfg();
+        let mut dense = cfg.init_params(6);
+        let mut mp = ModelParams::from_dense(&dense);
+        // Factor every selected 2-D block (embed + projections + head).
+        for name in cfg.blocks(true, true) {
+            let idx = cfg.param_index(&name).unwrap();
+            let shape = cfg.shape_of(&name).unwrap().to_vec();
+            let blk = SlrBlock::random(&name, shape[0], shape[1], 3, 0.1,
+                                       0);
+            dense[idx] = blk.xhat();
+            mp.values[idx] = ParamValue::Factored(blk.to_factored());
+        }
+        assert!(mp.n_factored() > 0);
+        let tokens = golden_tokens(cfg.vocab, cfg.seq_len);
+        let b = NativeBackend::new();
+        let want = b.forward_logits(&cfg, &dense, &tokens, 1).unwrap();
+        let got = b.forward_logits_model(&cfg, &mp, &tokens, 1).unwrap();
+        let d: f32 = want.data.iter().zip(&got.data)
+            .map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(d < 1e-4, "factored logits diverged by {d}");
+    }
+
+    #[test]
+    fn incremental_rejects_malformed_calls() {
+        let cfg = tiny_cfg();
+        let params = ModelParams::from_dense(&cfg.init_params(0));
+        let b = NativeBackend::new();
+        // Rows mismatch between cache and decode call.
+        let (_, mut cache) =
+            b.prefill(&cfg, &params, &[1, 2, 3], 1).unwrap();
+        assert!(b.decode_step(&cfg, &params, &mut cache, &[1, 2])
+            .is_err());
+        // Token out of range.
+        assert!(b.decode_step(&cfg, &params, &mut cache,
+                              &[cfg.vocab as i32]).is_err());
+        // Prefill longer than seq_len.
+        let long: Vec<i32> = vec![0; cfg.seq_len + 1];
+        assert!(b.prefill(&cfg, &params, &long, 1).is_err());
+        // Norm scales cannot be factored.
+        let mut bad = ModelParams::from_dense(&cfg.init_params(0));
+        let nidx = cfg.param_index("final_norm").unwrap();
+        let blk = crate::slr::SlrBlock::random("x", 4, 4, 2, 0.1, 0);
+        bad.values[nidx] = ParamValue::Factored(blk.to_factored());
+        assert!(b.forward_logits_model(&cfg, &bad,
+                                       &vec![0; cfg.seq_len], 1).is_err());
     }
 
     #[test]

@@ -18,14 +18,17 @@ impl Batcher {
 
     /// Block until at least one request is available, then keep
     /// collecting until the batch is full or the deadline passes.
-    /// Returns None when the channel is closed and drained.
+    /// Returns None when the channel is closed and drained. Queue
+    /// latency is *not* stamped here: each [`Request`] carries its
+    /// client-side `enqueued_at`, so waiting in the channel behind a
+    /// long-running batch counts toward `queue_ms`.
     pub fn next_batch(&self, rx: &Receiver<Request>)
-                      -> Option<Vec<(Request, Instant)>> {
+                      -> Option<Vec<Request>> {
         let first = match rx.recv() {
             Ok(r) => r,
             Err(_) => return None,
         };
-        let mut out = vec![(first, Instant::now())];
+        let mut out = vec![first];
         let deadline = Instant::now() + self.max_wait;
         while out.len() < self.max_batch {
             let now = Instant::now();
@@ -33,7 +36,7 @@ impl Batcher {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => out.push((r, Instant::now())),
+                Ok(r) => out.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -48,8 +51,7 @@ mod tests {
     use std::sync::mpsc::channel;
 
     fn req(id: u64) -> Request {
-        Request { id, prompt: vec![1, 2], max_new_tokens: 1,
-                  budget_params: 0 }
+        Request::new(id, vec![1, 2], 1, 0)
     }
 
     #[test]
@@ -99,7 +101,7 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(1),
                 "full batch waited for the deadline");
         // Ids preserved in arrival order.
-        let ids: Vec<u64> = batch.iter().map(|(r, _)| r.id).collect();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
     }
 
@@ -118,6 +120,23 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(1));
         // The drained channel then reports closure.
         assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn enqueue_stamp_predates_dequeue() {
+        // The queue clock starts at Request::new, not at dequeue: a
+        // request that sat in the channel shows its full wait.
+        let (tx, rx) = channel();
+        let r = req(0);
+        let stamp = r.enqueued_at;
+        tx.send(r).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        let b = Batcher::new(1, Duration::from_millis(1));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch[0].enqueued_at, stamp);
+        assert!(batch[0].enqueued_at.elapsed()
+                    >= Duration::from_millis(15),
+                "channel wait dropped from the queue clock");
     }
 
     #[test]

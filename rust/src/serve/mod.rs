@@ -3,7 +3,13 @@
 //! A [`Server`] owns one HPA-compressed model variant per configured
 //! memory budget, batches incoming requests with a deadline-based
 //! dynamic batcher, and routes each request to the variant that fits its
-//! memory budget. Threading: the PJRT backend is not `Send` (and the
+//! memory budget. Variants are stored *factored* — (U, s, V) plus a CSR
+//! residual per SLR block, via [`crate::runtime::ModelParams`] — so the
+//! paper's deployment memory claim holds in the resident process, not
+//! just on paper ([`VariantSpec::resident_bytes`]). Decoding is
+//! KV-cached: one prefill over the prompt, then O(T) single-position
+//! steps, with same-variant equal-length requests packed into one
+//! rows>1 prefill. Threading: the PJRT backend is not `Send` (and the
 //! native backend parallelizes internally), so the server runs on its
 //! owner thread and talks to clients over std::sync::mpsc channels
 //! (the offline vendor set has no tokio; DESIGN.md §3).
@@ -14,4 +20,4 @@ pub mod server;
 
 pub use request::{Request, Response};
 pub use batcher::Batcher;
-pub use server::{Server, ServerOptions, VariantSpec};
+pub use server::{argmax_logit, Server, ServerOptions, VariantSpec};

@@ -1,5 +1,7 @@
 //! Request/response types for the serving loop.
 
+use std::time::Instant;
+
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -9,6 +11,24 @@ pub struct Request {
     /// Memory budget in parameters for this request (selects the HPA
     /// variant); 0 = full surrogate.
     pub budget_params: usize,
+    /// Stamped at construction, i.e. client-side *before* the request
+    /// enters the channel — queue latency is measured from here, so
+    /// time spent waiting behind a long-running batch is visible
+    /// (stamping at batcher dequeue silently dropped it).
+    pub enqueued_at: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize,
+               budget_params: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            budget_params,
+            enqueued_at: Instant::now(),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -17,7 +37,13 @@ pub struct Response {
     pub tokens: Vec<u32>,
     /// Which variant served it (surrogate parameter count).
     pub served_params: usize,
+    /// True when the request's nonzero `budget_params` was below every
+    /// deployed variant and the smallest one served it anyway — the
+    /// client asked for a memory ceiling the server could not honor.
+    pub over_budget: bool,
+    /// Model-execution time of the batch group this request rode in.
     pub latency_ms: f64,
-    /// Queueing + batching delay component.
+    /// Queueing + batching delay from client-side enqueue to the start
+    /// of model execution.
     pub queue_ms: f64,
 }

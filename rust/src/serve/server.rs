@@ -1,26 +1,65 @@
-//! The elastic server: HPA-derived model variants + dynamic batching +
-//! budget-aware routing, with greedy decoding through the `logits`
-//! executable.
+//! The elastic server: HPA-derived model variants served *from factors*
+//! + dynamic batching + budget-aware routing, with KV-cached greedy
+//! decoding.
+//!
+//! Each variant keeps its SLR-compressed blocks as (U, s, V) factors
+//! plus a CSR residual ([`crate::runtime::ModelParams`]) — dense X̂ is
+//! never materialized when the factored form is smaller, which is what
+//! makes the paper's deployment memory claim measurable here
+//! ([`VariantSpec::resident_bytes`]). Decoding does one prefill over
+//! the prompt and then O(T) single-position steps against a
+//! [`crate::runtime::KvCache`]; same-variant requests with equal
+//! prompt lengths are packed into one rows>1 prefill.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::batcher::Batcher;
 use super::request::{Request, Response};
 use crate::config::ModelConfig;
-use crate::runtime::Runtime;
+use crate::runtime::{ModelParams, ParamValue, Runtime};
 use crate::slr::{hpa, SlrBlock};
 use crate::tensor::Tensor;
 
 /// One deployable model variant: a parameter budget and its HPA-derived
-/// weights (materialized once at startup — elastic deployment without
-/// retraining).
+/// weights, built once at startup — elastic deployment without
+/// retraining. Compressed blocks stay factored whenever that is smaller
+/// than dense.
 pub struct VariantSpec {
     /// Surrogate parameter count of this variant.
     pub params_count: usize,
-    pub params: Vec<Tensor>,
+    /// Mixed dense/factored parameter set in `cfg.params` order.
+    pub params: ModelParams,
+    /// Memoized dense materialization, populated only when the backend
+    /// has no factored execution (`supports_incremental() == false`,
+    /// i.e. the PJRT fallback): without it the per-token fallback loop
+    /// would rebuild X̂ from (U, s, V, CSR-S) on every forward. None on
+    /// the native backend, which serves from the factors directly.
+    dense_cache: Option<Vec<Tensor>>,
+}
+
+impl VariantSpec {
+    /// Bytes this variant actually occupies as stored (factors plus the
+    /// dense fallback copy when one had to be materialized).
+    pub fn resident_bytes(&self) -> usize {
+        self.params.resident_bytes()
+            + self.dense_cache.as_ref().map_or(0, |d| {
+                d.iter().map(|t| 4 * t.numel()).sum()
+            })
+    }
+
+    /// Bytes the seed-era dense X̂ materialization would occupy.
+    pub fn dense_bytes(&self) -> usize {
+        self.params.dense_bytes()
+    }
+
+    /// How many parameters are held factored.
+    pub fn n_factored(&self) -> usize {
+        self.params.n_factored()
+    }
 }
 
 pub struct ServerOptions {
@@ -40,41 +79,61 @@ impl Default for ServerOptions {
 pub struct Server<'a> {
     rt: &'a Runtime,
     cfg: ModelConfig,
-    /// Variants sorted by ascending parameter count.
+    /// Variants sorted by ascending parameter count, deduplicated.
     pub variants: Vec<VariantSpec>,
     batcher: Batcher,
     pub served: u64,
 }
 
+/// NaN-safe greedy argmax over one logit row. `total_cmp` gives a total
+/// order, so a NaN logit yields *some* index instead of the
+/// `partial_cmp(..).unwrap()` panic that used to kill the serving
+/// thread for every client.
+pub fn argmax_logit(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 impl<'a> Server<'a> {
     /// Build variants from a trained surrogate: one per requested budget
     /// (given as fractions of removable parameters) plus the full
-    /// surrogate.
+    /// surrogate. Variants with identical parameter counts (repeated or
+    /// near-equal fractions) are deduplicated.
     pub fn new(rt: &'a Runtime, cfg: ModelConfig, base_params: &[Tensor],
                blocks: &[SlrBlock], block_param_idx: &[usize],
                budget_fracs: &[f64], opts: ServerOptions) -> Result<Self> {
+        ensure!(blocks.len() == block_param_idx.len(),
+                "{} blocks vs {} param indices", blocks.len(),
+                block_param_idx.len());
         let mut variants = Vec::new();
-        let pool = hpa::plan(blocks, opts.kappa, 0)?;
-        let removable = pool.c_l + pool.c_s;
         let full_count = Self::count_with(cfg.n_params(), blocks,
                                           block_param_idx, blocks);
+        let make = |params_count: usize, params: ModelParams| {
+            // Backends without factored execution get a one-time dense
+            // materialization instead of re-densifying per token.
+            let dense_cache = (!rt.supports_incremental())
+                .then(|| params.densify());
+            VariantSpec { params_count, params, dense_cache }
+        };
         // Full surrogate variant.
-        variants.push(VariantSpec {
-            params_count: full_count,
-            params: Self::materialize(base_params, blocks, block_param_idx),
-        });
+        variants.push(make(full_count,
+                           Self::build_params(base_params, blocks,
+                                              block_param_idx)));
         for frac in budget_fracs {
-            let budget = (removable as f64 * frac.clamp(0.0, 0.95)) as usize;
-            let plan = hpa::plan(blocks, opts.kappa, budget)?;
+            let plan = hpa::plan_frac(blocks, opts.kappa,
+                                      frac.clamp(0.0, 0.95))?;
             let (trunc, _report) = hpa::apply(blocks, &plan);
-            variants.push(VariantSpec {
-                params_count: Self::count_with(cfg.n_params(), blocks,
-                                               block_param_idx, &trunc),
-                params: Self::materialize(base_params, &trunc,
-                                          block_param_idx),
-            });
+            variants.push(make(
+                Self::count_with(cfg.n_params(), blocks,
+                                 block_param_idx, &trunc),
+                Self::build_params(base_params, &trunc,
+                                   block_param_idx)));
         }
         variants.sort_by_key(|v| v.params_count);
+        variants.dedup_by(|a, b| a.params_count == b.params_count);
         Ok(Server {
             rt,
             cfg,
@@ -84,13 +143,22 @@ impl<'a> Server<'a> {
         })
     }
 
-    fn materialize(base: &[Tensor], blocks: &[SlrBlock], idx: &[usize])
-                   -> Vec<Tensor> {
-        let mut out = base.to_vec();
+    /// Per-parameter representation choice: keep the SLR block factored
+    /// when (U, s, V, CSR-S) is smaller than the dense X̂, densify
+    /// otherwise (e.g. near-full-rank blocks of the uncompressed
+    /// variant). Either way the result is what the backend executes.
+    fn build_params(base: &[Tensor], blocks: &[SlrBlock], idx: &[usize])
+                    -> ModelParams {
+        let mut mp = ModelParams::from_dense(base);
         for (b, &i) in blocks.iter().zip(idx) {
-            out[i] = b.xhat();
+            let f = b.to_factored();
+            mp.values[i] = if f.bytes() < 4 * b.n * b.m {
+                ParamValue::Factored(f)
+            } else {
+                ParamValue::Dense(b.xhat())
+            };
         }
-        out
+        mp
     }
 
     fn count_with(dense_total: usize, orig: &[SlrBlock], _idx: &[usize],
@@ -102,49 +170,127 @@ impl<'a> Server<'a> {
     }
 
     /// Pick the largest variant that fits the request's budget
-    /// (0 = unconstrained → largest available).
-    pub fn route(&self, budget_params: usize) -> &VariantSpec {
+    /// (0 = unconstrained → largest available). Returns the variant
+    /// index plus an over-budget flag: when the budget is below the
+    /// smallest variant, the smallest one serves anyway but the
+    /// response says so instead of silently over-serving.
+    pub fn route(&self, budget_params: usize) -> (usize, bool) {
         if budget_params == 0 {
-            return self.variants.last().unwrap();
+            return (self.variants.len() - 1, false);
         }
-        self.variants
+        match self.variants
             .iter()
-            .rev()
-            .find(|v| v.params_count <= budget_params)
-            .unwrap_or(&self.variants[0])
+            .rposition(|v| v.params_count <= budget_params)
+        {
+            Some(i) => (i, false),
+            None => (0, true),
+        }
     }
 
-    /// Greedy-decode continuation tokens for one prompt.
-    fn generate(&self, variant: &VariantSpec, prompt: &[u32],
-                max_new: usize) -> Result<Vec<u32>> {
+    /// Clamp a prompt the way `generate_*` expects it: keep at least
+    /// one conditioning position, at most `seq_len − max(1, max_new)`
+    /// of the prompt tail, and substitute a pad token for an empty
+    /// prompt.
+    pub fn prepare_prompt(&self, prompt: &[u32], max_new: usize)
+                          -> Vec<u32> {
         let t = self.cfg.seq_len;
-        let mut seq: Vec<u32> = prompt.to_vec();
-        // Keep at least one conditioning position: a request asking for
-        // max_new >= seq_len must not truncate the prompt to nothing
-        // (last_pos below would underflow and kill the serving thread).
         let keep = t.saturating_sub(max_new.max(1)).max(1);
-        if seq.len() > keep {
-            seq = seq[seq.len() - keep..].to_vec();
-        }
+        let mut seq: Vec<u32> = if prompt.len() > keep {
+            prompt[prompt.len() - keep..].to_vec()
+        } else {
+            prompt.to_vec()
+        };
         if seq.is_empty() {
             seq.push(0); // empty prompt: condition on a pad token
         }
+        seq
+    }
+
+    /// KV-cached greedy decode for a pack of same-length prompts (one
+    /// prefill at rows = prompts.len(), then one single-position step
+    /// per emitted token). Prompts must be pre-clamped with
+    /// [`Self::prepare_prompt`]. Emits exactly the tokens the
+    /// full-recompute path would.
+    pub fn generate_cached(&self, variant: &VariantSpec,
+                           prompts: &[Vec<u32>], max_new: &[usize])
+                           -> Result<Vec<Vec<u32>>> {
+        if prompts.is_empty() {
+            return Ok(Vec::new());
+        }
+        ensure!(prompts.len() == max_new.len(),
+                "{} prompts vs {} max_new entries", prompts.len(),
+                max_new.len());
+        let t = self.cfg.seq_len;
+        let plen = prompts[0].len();
+        ensure!(plen >= 1 && plen < t,
+                "prompt length {plen} outside 1..{t} (prepare_prompt?)");
+        ensure!(prompts.iter().all(|p| p.len() == plen),
+                "cached packs require equal prompt lengths");
+        let rows = prompts.len();
+        let tokens: Vec<i32> = prompts.iter().flatten()
+            .map(|&x| x as i32).collect();
+        let (logits, mut cache) =
+            self.rt.prefill(&self.cfg, &variant.params, &tokens, rows)?;
+        let v = self.cfg.vocab;
+        // Matches the full-recompute loop: min(max_new, t − plen)
+        // tokens per row; rows that want fewer are truncated at the
+        // end (their extra packed steps are discarded).
+        let steps = max_new.iter().copied().max().unwrap_or(0)
+            .min(t - plen);
+        let mut outs: Vec<Vec<u32>> =
+            (0..rows).map(|_| Vec::with_capacity(steps)).collect();
+        if steps == 0 {
+            return Ok(outs);
+        }
+        let mut last: Vec<i32> = Vec::with_capacity(rows);
+        for (b, out) in outs.iter_mut().enumerate() {
+            let row = &logits.data[(b * plen + plen - 1) * v
+                ..(b * plen + plen) * v];
+            let next = argmax_logit(row);
+            out.push(next as u32);
+            last.push(next as i32);
+        }
+        for _ in 1..steps {
+            let logits = self.rt.decode_step(&self.cfg, &variant.params,
+                                             &mut cache, &last)?;
+            for (b, out) in outs.iter_mut().enumerate() {
+                let next = argmax_logit(logits.row(b));
+                out.push(next as u32);
+                last[b] = next as i32;
+            }
+        }
+        for (out, &m) in outs.iter_mut().zip(max_new) {
+            out.truncate(m);
+        }
+        Ok(outs)
+    }
+
+    /// Full-recompute greedy decode (the seed serving loop): re-pads
+    /// the sequence to `seq_len` and runs a whole forward per emitted
+    /// token. Kept as the fallback for backends without incremental
+    /// decoding and as the equivalence oracle for the cached path.
+    pub fn generate_uncached(&self, variant: &VariantSpec, prompt: &[u32],
+                             max_new: usize) -> Result<Vec<u32>> {
+        let t = self.cfg.seq_len;
+        let mut seq: Vec<u32> = prompt.to_vec();
+        ensure!(!seq.is_empty() && seq.len() < t,
+                "prompt length {} outside 1..{t} (prepare_prompt?)",
+                seq.len());
         let mut out = Vec::with_capacity(max_new);
         for _ in 0..max_new {
             let mut padded: Vec<i32> =
                 seq.iter().map(|x| *x as i32).collect();
             let last_pos = padded.len() - 1;
             padded.resize(t, 0);
-            let logits = self.rt.forward_logits(&self.cfg, &variant.params,
-                                                &padded, 1)?;
+            let logits = match &variant.dense_cache {
+                Some(dense) => self.rt.forward_logits(&self.cfg, dense,
+                                                      &padded, 1)?,
+                None => self.rt.forward_logits_model(
+                    &self.cfg, &variant.params, &padded, 1)?,
+            };
             let v = self.cfg.vocab;
             let row = &logits.data[last_pos * v..(last_pos + 1) * v];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as u32)
-                .unwrap();
+            let next = argmax_logit(row) as u32;
             out.push(next);
             seq.push(next);
             if seq.len() >= t {
@@ -156,27 +302,272 @@ impl<'a> Server<'a> {
 
     /// Serve until the request channel closes. Runs on the caller's
     /// thread (the PJRT backend is not `Send`; the native backend
-    /// parallelizes internally); clients live on other threads.
+    /// parallelizes internally); clients live on other threads. Each
+    /// batch is grouped by (routed variant, prompt length) and every
+    /// group runs as one packed KV-cached decode; `latency_ms` is the
+    /// group's model time, `queue_ms` each request's wait from
+    /// client-side enqueue to the start of its group.
     pub fn run(&mut self, rx: Receiver<Request>, tx: Sender<Response>)
                -> Result<()> {
+        let incremental = self.rt.supports_incremental();
         while let Some(batch) = self.batcher.next_batch(&rx) {
-            for (req, enqueued) in batch {
-                let queue_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+            let mut prepped = Vec::with_capacity(batch.len());
+            let mut groups: BTreeMap<(usize, usize), Vec<usize>> =
+                BTreeMap::new();
+            for (i, req) in batch.iter().enumerate() {
+                let (vi, over) = self.route(req.budget_params);
+                let prompt = self.prepare_prompt(&req.prompt,
+                                                 req.max_new_tokens);
+                groups.entry((vi, prompt.len())).or_default().push(i);
+                prepped.push((vi, over, prompt));
+            }
+            for ((vi, _plen), idxs) in &groups {
+                let variant = &self.variants[*vi];
+                let queue_ms: Vec<f64> = idxs.iter()
+                    .map(|&i| batch[i].enqueued_at.elapsed()
+                        .as_secs_f64() * 1e3)
+                    .collect();
                 let t0 = Instant::now();
-                let variant = self.route(req.budget_params);
-                let served_params = variant.params_count;
-                let tokens = self.generate(variant, &req.prompt,
-                                           req.max_new_tokens)?;
-                self.served += 1;
-                let _ = tx.send(Response {
-                    id: req.id,
-                    tokens,
-                    served_params,
-                    latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                    queue_ms,
-                });
+                let tokens: Vec<Vec<u32>> = if incremental {
+                    let prompts: Vec<Vec<u32>> = idxs.iter()
+                        .map(|&i| prepped[i].2.clone()).collect();
+                    let max_new: Vec<usize> = idxs.iter()
+                        .map(|&i| batch[i].max_new_tokens).collect();
+                    self.generate_cached(variant, &prompts, &max_new)?
+                } else {
+                    idxs.iter()
+                        .map(|&i| self.generate_uncached(
+                            variant, &prepped[i].2,
+                            batch[i].max_new_tokens))
+                        .collect::<Result<_>>()?
+                };
+                let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+                for ((&i, toks), q) in
+                    idxs.iter().zip(tokens).zip(queue_ms)
+                {
+                    self.served += 1;
+                    let _ = tx.send(Response {
+                        id: batch[i].id,
+                        tokens: toks,
+                        served_params: variant.params_count,
+                        over_budget: prepped[i].1,
+                        latency_ms,
+                        queue_ms: q,
+                    });
+                }
             }
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig::from_geometry("tiny", 32, 8, 1, 2, 16, 24, 2)
+    }
+
+    /// Synthetic developed blocks over the selected projections so a
+    /// Server can be built without running training.
+    fn tiny_blocks(cfg: &ModelConfig) -> (Vec<SlrBlock>, Vec<usize>) {
+        let mut blocks = Vec::new();
+        let mut idx = Vec::new();
+        for name in cfg.blocks(true, false) {
+            let shape = cfg.shape_of(&name).unwrap().to_vec();
+            blocks.push(SlrBlock::random(&name, shape[0], shape[1], 3,
+                                         0.1, 0));
+            idx.push(cfg.param_index(&name).unwrap());
+        }
+        (blocks, idx)
+    }
+
+    fn tiny_server<'a>(rt: &'a Runtime, fracs: &[f64], max_batch: usize)
+                       -> Server<'a> {
+        let cfg = tiny_cfg();
+        let params = cfg.init_params(0);
+        let (blocks, idx) = tiny_blocks(&cfg);
+        Server::new(rt, cfg, &params, &blocks, &idx, fracs,
+                    ServerOptions {
+                        max_batch,
+                        max_wait: Duration::from_millis(2),
+                        kappa: 0.7,
+                    })
+            .unwrap()
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_and_correct() {
+        assert_eq!(argmax_logit(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax_logit(&[-1.0]), 0);
+        // A NaN logit must yield *an* index, not a panic.
+        let with_nan = [1.0, f32::NAN, 0.5];
+        assert!(argmax_logit(&with_nan) < with_nan.len());
+        assert!(argmax_logit(&[f32::NAN, f32::NAN]) < 2);
+    }
+
+    #[test]
+    fn nan_logits_do_not_kill_generation() {
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[], 4);
+        // Poison the head: every logit becomes NaN.
+        let hidx = server.cfg.param_index("lm_head").unwrap();
+        let shape = server.cfg.shape_of("lm_head").unwrap().to_vec();
+        server.variants[0].params.values[hidx] =
+            ParamValue::Dense(Tensor::full(&shape, f32::NAN));
+        let v = &server.variants[0];
+        let toks = server.generate_uncached(v, &[1, 2, 3], 4).unwrap();
+        assert_eq!(toks.len(), 4);
+        let packs = server
+            .generate_cached(v, &[vec![1, 2, 3]], &[4])
+            .unwrap();
+        assert_eq!(packs[0].len(), 4);
+    }
+
+    #[test]
+    fn route_dedupes_variants_and_flags_over_budget() {
+        let rt = Runtime::native();
+        // Repeated fractions would have produced duplicate variants.
+        let server = tiny_server(&rt, &[0.5, 0.5, 0.5], 4);
+        for w in server.variants.windows(2) {
+            assert!(w[0].params_count < w[1].params_count,
+                    "variants not strictly ascending: {} vs {}",
+                    w[0].params_count, w[1].params_count);
+        }
+        assert_eq!(server.variants.len(), 2,
+                   "repeated fracs must dedupe to full + one");
+        // Unconstrained → largest, in budget.
+        let (vi, over) = server.route(0);
+        assert_eq!(vi, server.variants.len() - 1);
+        assert!(!over);
+        // Huge budget → largest.
+        let (vi, over) = server.route(usize::MAX);
+        assert_eq!(vi, server.variants.len() - 1);
+        assert!(!over);
+        // Below the smallest variant → smallest, flagged.
+        let tiny_budget = server.variants[0].params_count - 1;
+        let (vi, over) = server.route(tiny_budget);
+        assert_eq!(vi, 0);
+        assert!(over, "over-budget fallback must be flagged");
+        // Exactly the smallest → smallest, not flagged.
+        let (vi, over) = server.route(server.variants[0].params_count);
+        assert_eq!(vi, 0);
+        assert!(!over);
+    }
+
+    #[test]
+    fn over_budget_flag_reaches_the_response() {
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[0.6], 4);
+        let below = server.variants[0].params_count - 1;
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        req_tx.send(Request::new(0, vec![1, 2], 2, below)).unwrap();
+        req_tx.send(Request::new(1, vec![1, 2], 2, 0)).unwrap();
+        drop(req_tx);
+        server.run(req_rx, resp_tx).unwrap();
+        let mut got: Vec<Response> = resp_rx.iter().collect();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 2);
+        assert!(got[0].over_budget);
+        assert_eq!(got[0].served_params,
+                   server.variants[0].params_count);
+        assert!(!got[1].over_budget);
+        assert_eq!(got[1].served_params,
+                   server.variants.last().unwrap().params_count);
+    }
+
+    #[test]
+    fn queue_ms_includes_wait_behind_slow_batch() {
+        // Regression for the dequeue-stamped queue clock: a request
+        // stuck in the channel behind a long-running batch must show
+        // that wait in queue_ms. With max_batch = 1 the second request
+        // waits out the whole first generation.
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[], 1);
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        req_tx.send(Request::new(0, vec![1, 2, 3], 20, 0)).unwrap();
+        req_tx.send(Request::new(1, vec![1, 2, 3], 1, 0)).unwrap();
+        drop(req_tx);
+        server.run(req_rx, resp_tx).unwrap();
+        let got: Vec<Response> = resp_rx.iter().collect();
+        assert_eq!(got.len(), 2);
+        let (r0, r1) = (&got[0], &got[1]);
+        assert_eq!((r0.id, r1.id), (0, 1));
+        // r1 was enqueued before r0 even started, so its queue time
+        // covers r0's whole model latency. The old dequeue stamp made
+        // this ~0 regardless of r0.
+        assert!(r1.queue_ms >= 0.9 * r0.latency_ms,
+                "queue_ms {} dropped the {}ms wait behind batch 0",
+                r1.queue_ms, r0.latency_ms);
+    }
+
+    #[test]
+    fn cached_and_uncached_decode_agree() {
+        let rt = Runtime::native();
+        let server = tiny_server(&rt, &[0.5], 4);
+        for variant in &server.variants {
+            let prompt = server.prepare_prompt(&[3, 1, 4, 1, 5], 8);
+            let un = server.generate_uncached(variant, &prompt, 8)
+                .unwrap();
+            let ca = server
+                .generate_cached(variant, &[prompt.clone()], &[8])
+                .unwrap();
+            assert_eq!(un, ca[0], "cached decode diverged");
+            assert_eq!(un.len(), 8);
+        }
+    }
+
+    #[test]
+    fn packed_rows_match_individual_decodes() {
+        let rt = Runtime::native();
+        let server = tiny_server(&rt, &[], 4);
+        let variant = &server.variants[0];
+        let p1 = server.prepare_prompt(&[1, 2, 3, 4], 6);
+        let p2 = server.prepare_prompt(&[9, 8, 7, 6], 6);
+        let packed = server
+            .generate_cached(variant, &[p1.clone(), p2.clone()], &[6, 3])
+            .unwrap();
+        let solo1 = server.generate_cached(variant, &[p1], &[6]).unwrap();
+        let solo2 = server.generate_cached(variant, &[p2], &[3]).unwrap();
+        assert_eq!(packed[0], solo1[0]);
+        assert_eq!(packed[1], solo2[0]);
+        assert_eq!(packed[1].len(), 3, "per-row max_new not honored");
+    }
+
+    #[test]
+    fn prepare_prompt_edges() {
+        let rt = Runtime::native();
+        let server = tiny_server(&rt, &[], 4);
+        let t = server.cfg.seq_len;
+        // Empty prompt → pad token.
+        assert_eq!(server.prepare_prompt(&[], 4), vec![0]);
+        // max_new ≥ seq_len keeps one conditioning position.
+        let long: Vec<u32> = (0..40).map(|i| i % 8).collect();
+        let p = server.prepare_prompt(&long, t + 5);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0], long[39]);
+        // Normal truncation keeps the tail.
+        let p = server.prepare_prompt(&long, 4);
+        assert_eq!(p.len(), t - 4);
+        assert_eq!(p.last(), long.last());
+        // max_new = 0 is treated as 1 for the clamp.
+        assert_eq!(server.prepare_prompt(&long, 0).len(), t - 1);
+    }
+
+    #[test]
+    fn compressed_variant_is_factored_and_smaller() {
+        let rt = Runtime::native();
+        let server = tiny_server(&rt, &[0.5], 4);
+        // The compressed variant keeps blocks factored and its resident
+        // footprint beats the dense X̂ materialization.
+        let small = &server.variants[0];
+        assert!(small.n_factored() > 0, "no factored blocks survived");
+        assert!(small.resident_bytes() < small.dense_bytes(),
+                "factored {}B not below dense {}B",
+                small.resident_bytes(), small.dense_bytes());
     }
 }

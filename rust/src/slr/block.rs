@@ -3,8 +3,10 @@
 //! block-local regularization state (α, β, ρ).
 
 use super::metrics::{density, effective_rank_ratio, slr_param_count};
+use super::sparse::{CsrMatrix, FactoredLinear};
 use crate::linalg::reconstruct;
 use crate::tensor::Tensor;
+use crate::util::Rng;
 
 /// Threshold below which an S entry counts as a structural zero.
 pub const S_EPS: f32 = 1e-12;
@@ -82,6 +84,43 @@ impl SlrBlock {
         let mut out = self.l_dense();
         out.add_assign(&self.sp);
         out
+    }
+
+    /// Deployment form: the (U, s, V) factors plus S converted to CSR —
+    /// what the server evaluates instead of densifying X̂.
+    pub fn to_factored(&self) -> FactoredLinear {
+        FactoredLinear::new(self.u.clone(), self.s.clone(), self.v.clone(),
+                            CsrMatrix::from_dense(&self.sp, S_EPS))
+    }
+
+    /// Deployed byte footprint of the factored form (f32 factors + CSR
+    /// residual) — the honest, measurable version of `param_count`.
+    pub fn resident_bytes(&self) -> usize {
+        self.to_factored().bytes()
+    }
+
+    /// Synthetic developed block: random descending spectrum and a
+    /// random sparse residual. Lets deployment paths (HPA, factored
+    /// serving, benches) be exercised without running training first.
+    pub fn random(name: &str, n: usize, m: usize, rank: usize,
+                  s_density: f64, seed: u64) -> Self {
+        let mut rng = Rng::named(name, seed);
+        let mut b = SlrBlock::new(name, n, m, 1e-2, 0.5, 0.5);
+        let rank = rank.min(n.min(m));
+        b.u = Tensor::randn(&[n, rank], &mut rng,
+                            1.0 / (n as f64).sqrt());
+        // Descending spectrum, as SVT leaves it.
+        b.s = (0..rank)
+            .map(|k| 0.5 * (rank - k) as f32 / rank.max(1) as f32 + 0.01)
+            .collect();
+        b.v = Tensor::randn(&[m, rank], &mut rng,
+                            1.0 / (m as f64).sqrt());
+        for x in b.sp.data.iter_mut() {
+            if rng.next_f64() < s_density {
+                *x = (rng.next_normal() * 0.02) as f32;
+            }
+        }
+        b
     }
 
     /// Effective rank ratio Γ_L^γ of the current L.
@@ -210,5 +249,27 @@ mod tests {
         b.sp = Tensor::randn(&[5, 5], &mut rng, 1.0);
         let x = b.xhat();
         assert!(b.recon_error(&x) < 1e-9);
+    }
+
+    #[test]
+    fn to_factored_round_trips_xhat() {
+        let b = SlrBlock::random("t", 12, 9, 3, 0.2, 0);
+        assert_eq!(b.rank(), 3);
+        let f = b.to_factored();
+        assert!(f.to_dense().dist_frob(&b.xhat()) < 1e-6);
+        assert_eq!(f.sp.nnz(), b.nnz());
+        assert_eq!(b.resident_bytes(), f.bytes());
+    }
+
+    #[test]
+    fn random_block_spectrum_is_descending() {
+        let b = SlrBlock::random("t", 16, 16, 5, 0.1, 1);
+        for w in b.s.windows(2) {
+            assert!(w[0] > w[1], "spectrum not descending: {:?}", b.s);
+        }
+        assert!(b.nnz() > 0, "expected a nonzero sparse residual");
+        // Rank is clamped to min(n, m).
+        let small = SlrBlock::random("t2", 4, 3, 99, 0.0, 0);
+        assert_eq!(small.rank(), 3);
     }
 }

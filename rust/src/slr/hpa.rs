@@ -71,6 +71,18 @@ pub fn plan(blocks: &[SlrBlock], kappa: f64, budget: usize)
     Ok(HpaPlan { kappa, budget, phi_l, phi_s, c_l, c_s })
 }
 
+/// Plan for removing a *fraction* of the removable pool: derives the
+/// absolute budget from the pool size (C_L + C_S), then plans as usual.
+/// This is the shape every deployment call site wants (server variants,
+/// `salaad compress --budget-frac`, the elastic sweep).
+pub fn plan_frac(blocks: &[SlrBlock], kappa: f64, frac: f64)
+                 -> Result<HpaPlan> {
+    let pool = plan(blocks, kappa, 0)?;
+    let budget =
+        ((pool.c_l + pool.c_s) as f64 * frac.clamp(0.0, 1.0)) as usize;
+    plan(blocks, kappa, budget)
+}
+
 /// Apply a plan, producing truncated copies of the blocks (the deployed
 /// model) plus accounting. Original blocks are untouched — one training
 /// run serves every budget (the paper's elastic-deployment claim).
@@ -274,6 +286,22 @@ mod tests {
         b.v = Tensor::randn(&[8, 4], &mut rng, 1.0);
         let (out, _) = truncate_block(&b, 0.5, 0.0);
         assert_eq!(out.s, vec![4.0, 3.0]);
+    }
+
+    #[test]
+    fn plan_frac_matches_manual_two_step() {
+        let mut rng = Rng::new(7);
+        let blocks = random_blocks(&mut rng, 3);
+        let pool = plan(&blocks, 0.7, 0).unwrap();
+        let budget = ((pool.c_l + pool.c_s) as f64 * 0.4) as usize;
+        let manual = plan(&blocks, 0.7, budget).unwrap();
+        let frac = plan_frac(&blocks, 0.7, 0.4).unwrap();
+        assert_eq!(frac.budget, manual.budget);
+        assert!((frac.phi_l - manual.phi_l).abs() < 1e-12);
+        assert!((frac.phi_s - manual.phi_s).abs() < 1e-12);
+        // Out-of-range fractions clamp instead of erroring.
+        assert!(plan_frac(&blocks, 0.7, 1.7).is_ok());
+        assert_eq!(plan_frac(&blocks, 0.7, -0.3).unwrap().budget, 0);
     }
 
     #[test]

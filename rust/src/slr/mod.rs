@@ -15,3 +15,4 @@ pub mod sparse;
 pub use block::SlrBlock;
 pub use controller::IController;
 pub use hpa::{HpaPlan, HpaReport};
+pub use sparse::{CsrMatrix, FactoredLinear};

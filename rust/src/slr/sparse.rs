@@ -1,12 +1,18 @@
-//! Compressed sparse row (CSR) storage for the S component.
+//! Compressed sparse row (CSR) storage for the S component, plus the
+//! deployable factored-linear representation built on it.
 //!
 //! The training path keeps S dense-stored for fast proximal updates;
 //! *deployment* converts to CSR, which is what actually realizes the
 //! paper's memory claim (nnz values + column indices + row offsets
 //! instead of n·m floats). `spmv`/`spmm_t` provide the factored
 //! inference path on the Rust side, mirroring the `slr_matmul` Pallas
-//! kernel's residual term.
+//! kernel's residual term. [`FactoredLinear`] bundles the low-rank
+//! factors with the CSR residual into the unit the serving runtime
+//! evaluates without ever densifying X̂ = L + S.
 
+use anyhow::{ensure, Result};
+
+use crate::linalg::{matmul, matmul_nt, reconstruct};
 use crate::tensor::Tensor;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -118,6 +124,119 @@ pub fn slr_block_bytes(n: usize, m: usize, rank: usize,
     4 * (n * rank + rank + m * rank) + csr.bytes()
 }
 
+/// A deployed SLR linear layer kept in factored form: Ŵ = U diag(s) Vᵀ
+/// + S with U (n×r), s (r), V (m×r) and S in CSR. This is the native
+/// analog of the `slr_matmul` Pallas kernel's parameter layout — the
+/// representation the server holds so the paper's memory claim is
+/// realized *at inference*, not just in accounting.
+#[derive(Clone, Debug)]
+pub struct FactoredLinear {
+    /// Output dimension (rows of Ŵ).
+    pub n: usize,
+    /// Input dimension (columns of Ŵ).
+    pub m: usize,
+    /// Left factor, n×r.
+    pub u: Tensor,
+    /// Singular values, length r.
+    pub s: Vec<f32>,
+    /// Right factor, m×r.
+    pub v: Tensor,
+    /// Sparse residual S, n×m.
+    pub sp: CsrMatrix,
+}
+
+impl FactoredLinear {
+    pub fn new(u: Tensor, s: Vec<f32>, v: Tensor, sp: CsrMatrix) -> Self {
+        let f = FactoredLinear {
+            n: u.nrows(),
+            m: v.nrows(),
+            u,
+            s,
+            v,
+            sp,
+        };
+        f.validate().expect("inconsistent factored linear");
+        f
+    }
+
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let r = self.rank();
+        ensure!(self.u.shape == [self.n, r],
+                "U shape {:?} != [{}, {r}]", self.u.shape, self.n);
+        ensure!(self.v.shape == [self.m, r],
+                "V shape {:?} != [{}, {r}]", self.v.shape, self.m);
+        ensure!(self.sp.n == self.n && self.sp.m == self.m,
+                "S is {}x{}, factors are {}x{}", self.sp.n, self.sp.m,
+                self.n, self.m);
+        Ok(())
+    }
+
+    /// Resident deployment footprint in bytes (factors + CSR residual).
+    pub fn bytes(&self) -> usize {
+        slr_block_bytes(self.n, self.m, self.rank(), &self.sp)
+    }
+
+    /// Y = X · Ŵᵀ for row-major X (t×m) → (t×n), evaluated as
+    /// x·V·diag(s)·Uᵀ + x·Sᵀ — never materializing Ŵ. Cost is
+    /// O(t·r·(n+m) + t·nnz) against the dense path's O(t·n·m).
+    pub fn matmul_t(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ncols(), self.m, "input dim {} != {}", x.ncols(),
+                   self.m);
+        if self.rank() == 0 {
+            return self.sp.spmm_t(x);
+        }
+        let r = self.rank();
+        let mut xv = matmul(x, &self.v); // (t, r)
+        for i in 0..xv.nrows() {
+            let row = xv.row_mut(i);
+            for (xj, sj) in row.iter_mut().zip(&self.s) {
+                *xj *= *sj;
+            }
+        }
+        let mut out = matmul_nt(&xv, &self.u); // (t, n)
+        out.add_assign(&self.sp.spmm_t(x));
+        out
+    }
+
+    /// Write dense row i of Ŵ into `out` (the factored embedding-lookup
+    /// path: U[i,:]·diag(s)·Vᵀ + S[i,:]).
+    pub fn row_dense_into(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.m);
+        out.fill(0.0);
+        let r = self.rank();
+        for k in 0..r {
+            let c = self.u.data[i * r + k] * self.s[k];
+            if c == 0.0 {
+                continue;
+            }
+            for (j, o) in out.iter_mut().enumerate() {
+                *o += c * self.v.data[j * r + k];
+            }
+        }
+        let (lo, hi) = (self.sp.indptr[i] as usize,
+                        self.sp.indptr[i + 1] as usize);
+        for k in lo..hi {
+            out[self.sp.indices[k] as usize] += self.sp.values[k];
+        }
+    }
+
+    /// Densified Ŵ = U diag(s) Vᵀ + S (tests and fallback paths only —
+    /// the serving hot path never calls this).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = if self.rank() == 0 {
+            Tensor::zeros(&[self.n, self.m])
+        } else {
+            reconstruct(&self.u, &self.s, &self.v)
+        };
+        out.add_assign(&self.sp.to_dense());
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +312,66 @@ mod tests {
         let csr = CsrMatrix::from_dense(&t, 0.0);
         assert_eq!(csr.nnz(), 0);
         assert_eq!(csr.spmv(&vec![1.0; 6]), vec![0.0; 4]);
+    }
+
+    fn random_factored(n: usize, m: usize, r: usize, rng: &mut Rng)
+                       -> FactoredLinear {
+        let u = Tensor::randn(&[n, r], rng, 0.3);
+        let s: Vec<f32> = (0..r).map(|k| (r - k) as f32 * 0.1).collect();
+        let v = Tensor::randn(&[m, r], rng, 0.3);
+        let sp = CsrMatrix::from_dense(&random_sparse(n, m, 0.1, rng), 0.0);
+        FactoredLinear::new(u, s, v, sp)
+    }
+
+    #[test]
+    fn factored_matmul_t_matches_densified() {
+        prop::check("factored_matmul_t", 12, |rng| {
+            let n = prop::dim(rng, 1, 20);
+            let m = prop::dim(rng, 1, 20);
+            let r = prop::dim(rng, 1, n.min(m));
+            let f = random_factored(n, m, r, rng);
+            let x = Tensor::randn(&[4, m], rng, 1.0);
+            let got = f.matmul_t(&x);
+            let want = crate::linalg::matmul_nt(&x, &f.to_dense());
+            assert!(got.dist_frob(&want) < 1e-4 * (1.0 + want.frob_norm()),
+                    "{n}x{m} r{r}: {}", got.dist_frob(&want));
+        });
+    }
+
+    #[test]
+    fn factored_row_lookup_matches_densified() {
+        let mut rng = Rng::new(7);
+        let f = random_factored(9, 13, 3, &mut rng);
+        let dense = f.to_dense();
+        let mut row = vec![0.0f32; 13];
+        for i in 0..9 {
+            f.row_dense_into(i, &mut row);
+            for (a, b) in row.iter().zip(dense.row(i)) {
+                assert!((a - b).abs() < 1e-5, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn factored_rank_zero_is_pure_sparse() {
+        let mut rng = Rng::new(8);
+        let sp = CsrMatrix::from_dense(&random_sparse(6, 5, 0.3, &mut rng),
+                                       0.0);
+        let f = FactoredLinear::new(Tensor::zeros(&[6, 0]), Vec::new(),
+                                    Tensor::zeros(&[5, 0]), sp.clone());
+        assert_eq!(f.to_dense(), sp.to_dense());
+        let x = Tensor::randn(&[3, 5], &mut rng, 1.0);
+        assert!(f.matmul_t(&x).dist_frob(&sp.spmm_t(&x)) < 1e-6);
+        assert_eq!(f.bytes(), sp.bytes());
+    }
+
+    #[test]
+    fn factored_bytes_beat_dense_when_compressed() {
+        let mut rng = Rng::new(9);
+        let f = random_factored(64, 64, 4, &mut rng);
+        assert_eq!(f.bytes(),
+                   4 * (64 * 4 + 4 + 64 * 4) + f.sp.bytes());
+        assert!(f.bytes() < 64 * 64 * 4,
+                "factored {} bytes vs dense {}", f.bytes(), 64 * 64 * 4);
     }
 }

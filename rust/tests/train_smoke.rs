@@ -142,22 +142,32 @@ fn serve_smoke() {
         &[0.3, 0.6],
         ServerOptions { max_batch: 4, max_wait: Duration::from_millis(5),
                         kappa: 0.7 }).unwrap();
-    assert_eq!(server.variants.len(), 3);
-    // Variants are param-count sorted and distinct-ish.
-    assert!(server.variants[0].params_count
-            <= server.variants[2].params_count);
+    // Variants are param-count sorted, deduplicated, strictly
+    // ascending; at most full + one per requested budget.
+    assert!(!server.variants.is_empty() && server.variants.len() <= 3);
+    for w in server.variants.windows(2) {
+        assert!(w[0].params_count < w[1].params_count);
+    }
+    // On factored-capable backends every variant's resident footprint
+    // is bounded by the dense X̂ materialization (build_params picks
+    // the cheaper representation per block); backends without factored
+    // execution additionally memoize a dense copy, so the bound does
+    // not apply there.
+    if rt.supports_incremental() {
+        for v in &server.variants {
+            assert!(v.resident_bytes() <= v.dense_bytes(),
+                    "variant {} resident {}B > dense {}B",
+                    v.params_count, v.resident_bytes(), v.dense_bytes());
+        }
+    }
 
     let (req_tx, req_rx) = std::sync::mpsc::channel();
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();
     let producer = std::thread::spawn(move || {
         for i in 0..6u64 {
+            let budget = if i % 2 == 0 { 0 } else { 1 };
             req_tx
-                .send(Request {
-                    id: i,
-                    prompt: vec![3, 1, 4, 1, 5],
-                    max_new_tokens: 3,
-                    budget_params: if i % 2 == 0 { 0 } else { 1 },
-                })
+                .send(Request::new(i, vec![3, 1, 4, 1, 5], 3, budget))
                 .unwrap();
         }
         // Dropping req_tx closes the channel; server run() returns.
@@ -170,10 +180,16 @@ fn serve_smoke() {
         assert_eq!(r.tokens.len(), 3);
         assert!(r.tokens.iter().all(|t| (*t as usize) < cfg.vocab));
         assert!(r.latency_ms > 0.0);
+        assert!(r.queue_ms >= 0.0);
     }
-    // Budget 1 param must route to the smallest variant.
+    // A 1-param budget is below every variant: the smallest serves it
+    // and the response is flagged over-budget.
     let small = server.variants[0].params_count;
     for r in responses.iter().filter(|r| r.id % 2 == 1) {
         assert_eq!(r.served_params, small);
+        assert!(r.over_budget, "over-budget fallback not flagged");
+    }
+    for r in responses.iter().filter(|r| r.id % 2 == 0) {
+        assert!(!r.over_budget);
     }
 }
