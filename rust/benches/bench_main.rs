@@ -6,11 +6,16 @@
 //!   L3 numeric core : jacobi/randomized SVD (the ε in Appendix C's
 //!                     ε·J/K cost model), prox ops, ADMM block update,
 //!                     HPA, RPCA, GEMMs, data loader
+//!   gemm            : tiled/microkernel GEMM variants vs an in-bench
+//!                     naive ikj reference (the pre-tiling algorithm),
+//!                     so one run shows the kernel speedup ratio
 //!   backend         : fwd_bwd/eval/logits step latency per scale
 //!                     (table1/fig2/fig3 drivers) through the active
 //!                     Runtime backend (native by default)
 //!   serving         : logits latency dense vs factored (U,s,V,CSR-S),
-//!                     and greedy decode with vs without the KV cache
+//!                     full-prompt prefill per scale (the fused
+//!                     streaming-softmax attention path), and greedy
+//!                     decode with vs without the KV cache
 //!
 //! Set SALAAD_BENCH_FILTER=<substr> to run a subset.
 
@@ -19,8 +24,8 @@ use std::time::Instant;
 use salaad::config::{SalaadConfig, TrainConfig};
 use salaad::coordinator::{run_admm_phase, Method, Trainer};
 use salaad::data::BatchLoader;
-use salaad::linalg::{jacobi_svd, matmul, matmul_nt, rand_svd};
-use salaad::runtime::Runtime;
+use salaad::linalg::{jacobi_svd, matmul, matmul_nt, matmul_tn, rand_svd};
+use salaad::runtime::{ModelParams, Runtime};
 use salaad::serve::{Server, ServerOptions};
 use salaad::slr::prox::{soft_threshold_assign, svt};
 use salaad::slr::{hpa, rpca::rpca, SlrBlock};
@@ -102,6 +107,60 @@ fn main() {
         });
         b.bench("linalg/matmul_nt_256", || {
             std::hint::black_box(matmul_nt(&a, &c));
+        });
+    }
+
+    // ---------------- GEMM microbenches ----------------
+    // Tiled kernels vs the naive single-thread ikj reference (the
+    // pre-tiling inner loop, zero-skip included) — one run yields the
+    // before/after kernel ratio recorded in EXPERIMENTS.md §GEMM.
+    fn naive_ikj(a: &Tensor, c: &Tensor) -> Tensor {
+        let (n, k) = (a.nrows(), a.ncols());
+        let m = c.ncols();
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..n {
+            let row = &mut out.data[i * m..(i + 1) * m];
+            for l in 0..k {
+                let av = a.data[i * k + l];
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, bv) in
+                    row.iter_mut().zip(&c.data[l * m..(l + 1) * m])
+                {
+                    *o += av * *bv;
+                }
+            }
+        }
+        out
+    }
+    for size in [128usize, 256, 512] {
+        let a = Tensor::randn(&[size, size], &mut rng, 1.0);
+        let c = Tensor::randn(&[size, size], &mut rng, 1.0);
+        b.bench(&format!("gemm/naive_ikj_{size}"), || {
+            std::hint::black_box(naive_ikj(&a, &c));
+        });
+        b.bench(&format!("gemm/matmul_{size}"), || {
+            std::hint::black_box(matmul(&a, &c));
+        });
+        b.bench(&format!("gemm/matmul_nt_{size}"), || {
+            std::hint::black_box(matmul_nt(&a, &c));
+        });
+        b.bench(&format!("gemm/matmul_tn_{size}"), || {
+            std::hint::black_box(matmul_tn(&a, &c));
+        });
+    }
+    {
+        // The serving shapes that dominate prefill: activations × a
+        // d×d projection, and activations × the lm_head.
+        let x = Tensor::randn(&[128, 192], &mut rng, 1.0);
+        let w = Tensor::randn(&[192, 192], &mut rng, 0.1);
+        let head = Tensor::randn(&[1024, 192], &mut rng, 0.1);
+        b.bench("gemm/proj_nt_128x192x192", || {
+            std::hint::black_box(matmul_nt(&x, &w));
+        });
+        b.bench("gemm/lmhead_nt_128x192x1024", || {
+            std::hint::black_box(matmul_nt(&x, &head));
         });
     }
     {
@@ -201,6 +260,24 @@ fn main() {
                 std::hint::black_box(
                     rt.forward_logits(&cfg, &params, &one, 1).unwrap());
             });
+            // Full-prompt prefill (fused streaming-softmax attention +
+            // KV-cache build) — the serving-side cost of admitting a
+            // request. Before/after numbers for the fused-attention
+            // PR are recorded in EXPERIMENTS.md §Prefill.
+            if rt.supports_incremental() {
+                let mp = ModelParams::from_dense(&params);
+                b.bench(&format!("serve/prefill_1x{}_{scale}",
+                                 cfg.seq_len), || {
+                    std::hint::black_box(
+                        rt.prefill(&cfg, &mp, &one, 1).unwrap());
+                });
+                let half: Vec<i32> = one[..cfg.seq_len / 2].to_vec();
+                b.bench(&format!("serve/prefill_1x{}_{scale}",
+                                 cfg.seq_len / 2), || {
+                    std::hint::black_box(
+                        rt.prefill(&cfg, &mp, &half, 1).unwrap());
+                });
+            }
         }
 
         // Factored serving path: dense-vs-factored logits and

@@ -1,15 +1,62 @@
-//! Blocked, thread-parallel f32 GEMM variants.
+//! Blocked/tiled, thread-parallel f32 GEMM variants with explicit
+//! 8-wide microkernels.
 //!
-//! Layout-aware inner loops (ikj order over row-major data) keep the
-//! compiler auto-vectorizing; rows of the output are sharded across
-//! scoped threads. This is deliberately simple — the heavy model math
-//! runs inside XLA; these GEMMs serve the SVD / RPCA / HPA path where
-//! matrices are at most (vocab × d_model).
+//! Three layout-aware variants cover every product the trainer, the
+//! SVD/RPCA/HPA stack and the serving runtime need:
+//!
+//! - [`matmul`] — `C = A·B`, tiled rank-1 updates ([`axpy8`] /
+//!   `axpy8x4`) over (column, k) blocks,
+//! - [`matmul_nt`] — `C = A·Bᵀ`, dot-product form over a B-row block
+//!   that stays cache-resident across output rows ([`dot8`] /
+//!   `dot8x2`),
+//! - [`matmul_tn`] — `C = Aᵀ·B`, the gradient-accumulation shape, tiled
+//!   like [`matmul`] with strided A reads.
+//!
+//! Output rows are sharded across scoped threads above a FLOP
+//! threshold.
+//!
+//! # Accumulation-order contract
+//!
+//! Reordering f32 sums changes results, and two test gates in this
+//! repo depend on GEMM results *bit for bit* (see
+//! [`dot8`]): every kernel here therefore commits to a fixed, shape-
+//! independent accumulation order per output element —
+//!
+//! - [`matmul_nt`]: element `(i, j)` is exactly `dot8(a.row(i),
+//!   b.row(j))` — eight independent lane accumulators over `k`, lanes
+//!   summed at the end, remainder appended last.
+//! - [`matmul`] / [`matmul_tn`]: element `(i, j)` accumulates its `k`
+//!   products one rounding step at a time in ascending-`k` order, as
+//!   the naive `ikj` loop would. Cache tiling only regroups *which*
+//!   elements are updated together, never the per-element order, and
+//!   the 4-step unrolled microkernel performs its four increments as
+//!   four sequential f32 additions.
+//!
+//! Since tiling is invisible to the per-element arithmetic, results are
+//! identical for every shape, including shapes that are not multiples
+//! of the tile sizes (pinned by the `tiled_edge_shapes_match_naive`
+//! test).
+//!
+//! There is deliberately **no** data-dependent `== 0.0` skip in these
+//! kernels: the seed version skipped zero `a` entries, which made GEMM
+//! latency input-dependent (and mispredicts on dense inputs — see
+//! EXPERIMENTS.md §Perf). Structurally sparse operands take the
+//! `slr::sparse` CSR path instead.
 
 use crate::tensor::Tensor;
 
 /// Threshold below which threading isn't worth the spawn cost.
 const PAR_FLOP_THRESHOLD: usize = 1 << 22;
+
+/// Output-column block: `out` / `B` row slices touched per tile pass.
+const MB: usize = 256;
+/// Inner-dimension (k) block: B-rows kept hot across an output-row
+/// sweep in [`matmul`] / [`matmul_tn`]. A `KC × MB` f32 tile is 128 KiB
+/// — L2-resident on every target we care about.
+const KC: usize = 128;
+/// B-row block for [`matmul_nt`]: `NB × k` operand rows reused across
+/// all output rows of a thread's chunk.
+const NB: usize = 32;
 
 fn workers_for(flops: usize) -> usize {
     if flops < PAR_FLOP_THRESHOLD {
@@ -20,40 +67,106 @@ fn workers_for(flops: usize) -> usize {
 }
 
 /// C = A (n×k) · B (k×m).
+///
+/// Tiled over (MB output columns × KC inner steps); each tile pass
+/// applies KC rank-1 updates to every output row of the thread's chunk
+/// while the B tile is cache-hot, via the unrolled [`axpy8`]-family
+/// microkernels. Per-element accumulation is ascending-`k` (see the
+/// module docs for the bit-consistency contract).
+///
+/// ```
+/// use salaad::linalg::matmul;
+/// use salaad::tensor::Tensor;
+/// let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+/// let eye = Tensor::new(vec![1.0, 0.0, 0.0, 1.0], &[2, 2]);
+/// assert_eq!(matmul(&a, &eye), a);
+/// ```
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = (a.nrows(), a.ncols());
     let (k2, m) = (b.nrows(), b.ncols());
     assert_eq!(k, k2, "matmul dims {:?} x {:?}", a.shape, b.shape);
     let mut out = Tensor::zeros(&[n, m]);
     let workers = workers_for(2 * n * k * m);
-    par_rows(&mut out.data, m, workers, |i, row| {
-        for l in 0..k {
-            let av = a.data[i * k + l];
-            if av == 0.0 {
-                continue;
+    par_row_chunks(&mut out.data, m, workers, |r0, chunk| {
+        let rows = chunk.len() / m;
+        let mut jb = 0;
+        while jb < m {
+            let je = (jb + MB).min(m);
+            let mut lb = 0;
+            while lb < k {
+                let le = (lb + KC).min(k);
+                for ri in 0..rows {
+                    let i = r0 + ri;
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let row = &mut chunk[ri * m + jb..ri * m + je];
+                    let mut l = lb;
+                    while l + 4 <= le {
+                        axpy8x4(
+                            row,
+                            [&b.data[l * m + jb..l * m + je],
+                             &b.data[(l + 1) * m + jb..(l + 1) * m + je],
+                             &b.data[(l + 2) * m + jb..(l + 2) * m + je],
+                             &b.data[(l + 3) * m + jb..(l + 3) * m + je]],
+                            [arow[l], arow[l + 1], arow[l + 2],
+                             arow[l + 3]],
+                        );
+                        l += 4;
+                    }
+                    while l < le {
+                        axpy8(row, &b.data[l * m + jb..l * m + je],
+                              arow[l]);
+                        l += 1;
+                    }
+                }
+                lb = le;
             }
-            let brow = &b.data[l * m..(l + 1) * m];
-            for (o, bv) in row.iter_mut().zip(brow) {
-                *o += av * *bv;
-            }
+            jb = je;
         }
     });
     out
 }
 
-/// C = A (n×k) · Bᵀ where B is (m×k). Dot-product friendly: both operand
-/// rows are contiguous.
+/// C = A (n×k) · Bᵀ where B is (m×k). Dot-product friendly: both
+/// operand rows are contiguous.
+///
+/// Blocked so an `NB × k` slab of B rows stays cache-resident while
+/// every output row of the thread's chunk sweeps over it; output rows
+/// are processed in pairs (`dot8x2`) to halve B bandwidth. Every
+/// element is exactly `dot8(a.row(i), b.row(j))` — the accumulation
+/// order the KV-cached attention path replays (see [`dot8`]).
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = (a.nrows(), a.ncols());
     let (m, k2) = (b.nrows(), b.ncols());
     assert_eq!(k, k2, "matmul_nt dims {:?} x {:?}", a.shape, b.shape);
     let mut out = Tensor::zeros(&[n, m]);
     let workers = workers_for(2 * n * k * m);
-    par_rows(&mut out.data, m, workers, |i, row| {
-        let arow = &a.data[i * k..(i + 1) * k];
-        for (j, o) in row.iter_mut().enumerate() {
-            let brow = &b.data[j * k..(j + 1) * k];
-            *o = dot8(arow, brow);
+    par_row_chunks(&mut out.data, m, workers, |r0, chunk| {
+        let rows = chunk.len() / m;
+        let mut jb = 0;
+        while jb < m {
+            let je = (jb + NB).min(m);
+            let mut ri = 0;
+            while ri + 2 <= rows {
+                let (row0, row1) =
+                    chunk[ri * m..(ri + 2) * m].split_at_mut(m);
+                let a0 = &a.data[(r0 + ri) * k..(r0 + ri + 1) * k];
+                let a1 = &a.data[(r0 + ri + 1) * k..(r0 + ri + 2) * k];
+                for j in jb..je {
+                    let brow = &b.data[j * k..(j + 1) * k];
+                    let (d0, d1) = dot8x2(a0, a1, brow);
+                    row0[j] = d0;
+                    row1[j] = d1;
+                }
+                ri += 2;
+            }
+            if ri < rows {
+                let arow = &a.data[(r0 + ri) * k..(r0 + ri + 1) * k];
+                let row = &mut chunk[ri * m..(ri + 1) * m];
+                for j in jb..je {
+                    row[j] = dot8(arow, &b.data[j * k..(j + 1) * k]);
+                }
+            }
+            jb = je;
         }
     });
     out
@@ -61,10 +174,15 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// Dot product with 8 independent accumulators — breaks the reduction
 /// dependency chain so the compiler vectorizes (EXPERIMENTS.md §Perf).
-/// Public because the KV-cached attention path (`runtime::native`)
-/// computes per-query scores with the same accumulation order as
-/// `matmul_nt`, keeping incremental decode bit-consistent with the full
-/// forward.
+///
+/// This function *is* the repo's accumulation-order contract for
+/// `x·Wᵀ`-shaped products: [`matmul_nt`] computes every output element
+/// with it, and the KV-cached attention path (`runtime::native`)
+/// computes per-query scores with it directly, which is what makes
+/// incremental decode bit-identical to the full forward. Change the
+/// lane count, the lane-summation order or the tail handling and the
+/// cached-decode equivalence gates in `rust/tests/serve_factored.rs`
+/// break — re-pin the goldens if you ever must.
 #[inline]
 pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = [0.0f32; 8];
@@ -82,48 +200,155 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     acc.iter().sum::<f32>() + tail
 }
 
+/// Two dot products sharing one streamed `b` row. Each result is
+/// bit-identical to the corresponding [`dot8`] call — the two lane
+/// accumulator banks are independent — while halving `b` bandwidth in
+/// the [`matmul_nt`] row-pair microkernel.
+#[inline]
+fn dot8x2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
+    let mut acc0 = [0.0f32; 8];
+    let mut acc1 = [0.0f32; 8];
+    let chunks = b.len() / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        for l in 0..8 {
+            acc0[l] += a0[base + l] * b[base + l];
+            acc1[l] += a1[base + l] * b[base + l];
+        }
+    }
+    let mut t0 = 0.0f32;
+    let mut t1 = 0.0f32;
+    for i in chunks * 8..b.len() {
+        t0 += a0[i] * b[i];
+        t1 += a1[i] * b[i];
+    }
+    (acc0.iter().sum::<f32>() + t0, acc1.iter().sum::<f32>() + t1)
+}
+
+/// dst += a · src, elementwise over equal-length slices, in 8-wide
+/// lane chunks plus a scalar tail. One rounding step per element —
+/// the building block of the ascending-`k` accumulation contract
+/// (module docs). Exported because the fused streaming-softmax
+/// attention in `runtime::native` accumulates `probs · V` with it,
+/// keeping the no-materialization path bit-identical to the
+/// materialized training path.
+#[inline]
+pub fn axpy8(dst: &mut [f32], src: &[f32], a: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    let chunks = dst.len() / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        for l in 0..8 {
+            dst[base + l] += a * src[base + l];
+        }
+    }
+    for i in chunks * 8..dst.len() {
+        dst[i] += a * src[i];
+    }
+}
+
+/// Four fused rank-1 update steps: dst += a0·b0 + a1·b1 + a2·b2 + a3·b3
+/// with each element receiving its four increments as four *sequential*
+/// f32 additions in ascending index order — bit-identical to four
+/// [`axpy8`] calls, but with one load/store of `dst` per 8-lane chunk
+/// instead of four.
+#[inline]
+fn axpy8x4(dst: &mut [f32], b: [&[f32]; 4], a: [f32; 4]) {
+    let chunks = dst.len() / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        for l in 0..8 {
+            let j = base + l;
+            let mut v = dst[j];
+            v += a[0] * b[0][j];
+            v += a[1] * b[1][j];
+            v += a[2] * b[2][j];
+            v += a[3] * b[3][j];
+            dst[j] = v;
+        }
+    }
+    for j in chunks * 8..dst.len() {
+        let mut v = dst[j];
+        v += a[0] * b[0][j];
+        v += a[1] * b[1][j];
+        v += a[2] * b[2][j];
+        v += a[3] * b[3][j];
+        dst[j] = v;
+    }
+}
+
 /// C = Aᵀ · B where A is (k×n), B is (k×m).
+///
+/// Same (MB × KC) tiling and microkernels as [`matmul`]; the only
+/// difference is that the per-step scalars come from a column of A
+/// (stride-n reads), which the KC block keeps within a small working
+/// set. Per-element accumulation is ascending-`k`.
 pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (k, n) = (a.nrows(), a.ncols());
     let (k2, m) = (b.nrows(), b.ncols());
     assert_eq!(k, k2, "matmul_tn dims {:?} x {:?}", a.shape, b.shape);
     let mut out = Tensor::zeros(&[n, m]);
     let workers = workers_for(2 * n * k * m);
-    par_rows(&mut out.data, m, workers, |i, row| {
-        for l in 0..k {
-            let av = a.data[l * n + i];
-            if av == 0.0 {
-                continue;
+    par_row_chunks(&mut out.data, m, workers, |r0, chunk| {
+        let rows = chunk.len() / m;
+        let mut jb = 0;
+        while jb < m {
+            let je = (jb + MB).min(m);
+            let mut lb = 0;
+            while lb < k {
+                let le = (lb + KC).min(k);
+                for ri in 0..rows {
+                    let i = r0 + ri;
+                    let row = &mut chunk[ri * m + jb..ri * m + je];
+                    let mut l = lb;
+                    while l + 4 <= le {
+                        axpy8x4(
+                            row,
+                            [&b.data[l * m + jb..l * m + je],
+                             &b.data[(l + 1) * m + jb..(l + 1) * m + je],
+                             &b.data[(l + 2) * m + jb..(l + 2) * m + je],
+                             &b.data[(l + 3) * m + jb..(l + 3) * m + je]],
+                            [a.data[l * n + i], a.data[(l + 1) * n + i],
+                             a.data[(l + 2) * n + i],
+                             a.data[(l + 3) * n + i]],
+                        );
+                        l += 4;
+                    }
+                    while l < le {
+                        axpy8(row, &b.data[l * m + jb..l * m + je],
+                              a.data[l * n + i]);
+                        l += 1;
+                    }
+                }
+                lb = le;
             }
-            let brow = &b.data[l * m..(l + 1) * m];
-            for (o, bv) in row.iter_mut().zip(brow) {
-                *o += av * *bv;
-            }
+            jb = je;
         }
     });
     out
 }
 
-/// Run `f(i, row_i)` over rows of a flat row-major buffer, sharded across
-/// `workers` scoped threads with disjoint row chunks.
-fn par_rows(data: &mut [f32], row_len: usize, workers: usize,
-            f: impl Fn(usize, &mut [f32]) + Sync) {
+/// Shard the rows of a flat row-major buffer into contiguous chunks,
+/// one per worker, and hand each worker its whole chunk at once
+/// (`f(first_row, rows)`) so kernels can tile *within* a chunk. The
+/// single-worker path runs `f(0, data)` inline with no spawn.
+fn par_row_chunks(data: &mut [f32], row_len: usize, workers: usize,
+                  f: impl Fn(usize, &mut [f32]) + Sync) {
     let n = if row_len == 0 { 0 } else { data.len() / row_len };
-    if workers <= 1 || n <= 1 {
-        for (i, row) in data.chunks_mut(row_len.max(1)).enumerate() {
-            f(i, row);
-        }
+    if n == 0 {
+        return;
+    }
+    if workers <= 1 || n == 1 {
+        f(0, data);
         return;
     }
     let chunk_rows = n.div_ceil(workers);
     std::thread::scope(|scope| {
-        for (c, chunk) in data.chunks_mut(chunk_rows * row_len).enumerate() {
+        for (c, chunk) in data.chunks_mut(chunk_rows * row_len)
+            .enumerate()
+        {
             let f = &f;
-            scope.spawn(move || {
-                for (r, row) in chunk.chunks_mut(row_len).enumerate() {
-                    f(c * chunk_rows + r, row);
-                }
-            });
+            scope.spawn(move || f(c * chunk_rows, chunk));
         }
     });
 }
@@ -199,5 +424,90 @@ mod tests {
         let c = matmul(&a, &b);
         let c0 = naive(&a, &b);
         assert!(c.dist_frob(&c0) < 1e-2);
+    }
+
+    /// The tiled kernels must agree with the f64 reference on shapes
+    /// that straddle every tile boundary: n/m/k below, at, and just
+    /// past MB/KC/NB multiples, odd row counts (the dot8x2 pair
+    /// remainder), and degenerate 1-sized dims.
+    #[test]
+    fn tiled_edge_shapes_match_naive() {
+        let mut rng = Rng::new(7);
+        let shapes: &[(usize, usize, usize)] = &[
+            (1, 1, 1),
+            (1, 5, 259),         // m just past MB
+            (3, 127, 2),         // k just below KC
+            (2, 128, 33),        // k == KC, m just past NB
+            (5, 129, 31),        // k just past KC, m just below NB
+            (7, 130, 257),       // k and m past block edges, odd rows
+            (9, 260, 129),       // two KC blocks + remainder
+            (33, 8, 256),        // m == MB exactly
+            (4, 3, 32),          // m == NB exactly, k < unroll width
+        ];
+        for &(n, k, m) in shapes {
+            let a = Tensor::randn(&[n, k], &mut rng, 1.0);
+            let b = Tensor::randn(&[k, m], &mut rng, 1.0);
+            let want = naive(&a, &b);
+            let tol = 1e-4 * (1.0 + want.frob_norm());
+            let c = matmul(&a, &b);
+            assert!(c.dist_frob(&want) < tol,
+                    "matmul {n}x{k}x{m}: {}", c.dist_frob(&want));
+            let c_nt = matmul_nt(&a, &b.transpose());
+            assert!(c_nt.dist_frob(&want) < tol,
+                    "matmul_nt {n}x{k}x{m}: {}", c_nt.dist_frob(&want));
+            let c_tn = matmul_tn(&a.transpose(), &b);
+            assert!(c_tn.dist_frob(&want) < tol,
+                    "matmul_tn {n}x{k}x{m}: {}", c_tn.dist_frob(&want));
+        }
+    }
+
+    /// Pins the accumulation-order contract: every `matmul_nt` output
+    /// element must be *bitwise* equal to a direct `dot8` call, and the
+    /// paired-row microkernel must not perturb it. The KV-cached decode
+    /// equivalence in `rust/tests/serve_factored.rs` rests on this.
+    #[test]
+    fn matmul_nt_elements_are_exactly_dot8() {
+        let mut rng = Rng::new(11);
+        for (n, k, m) in [(1usize, 9usize, 3usize), (5, 16, 40),
+                          (6, 33, 64), (4, 8, 1)] {
+            let a = Tensor::randn(&[n, k], &mut rng, 1.0);
+            let b = Tensor::randn(&[m, k], &mut rng, 1.0);
+            let c = matmul_nt(&a, &b);
+            for i in 0..n {
+                for j in 0..m {
+                    let want = dot8(a.row(i), b.row(j));
+                    assert!(c.at2(i, j).to_bits() == want.to_bits(),
+                            "({i},{j}) of {n}x{k}x{m}: {} != {want}",
+                            c.at2(i, j));
+                }
+            }
+        }
+    }
+
+    /// axpy8x4 must be bit-identical to four sequential axpy8 calls
+    /// (the unroll may not change per-element rounding order).
+    #[test]
+    fn axpy8x4_matches_sequential_axpy8() {
+        let mut rng = Rng::new(13);
+        for len in [1usize, 7, 8, 9, 24, 61] {
+            let srcs: Vec<Tensor> = (0..4)
+                .map(|_| Tensor::randn(&[1, len], &mut rng, 1.0))
+                .collect();
+            let coef = [0.7f32, -1.3, 0.0, 2.5];
+            let base = Tensor::randn(&[1, len], &mut rng, 1.0);
+            let mut fused = base.data.clone();
+            axpy8x4(&mut fused,
+                    [&srcs[0].data, &srcs[1].data, &srcs[2].data,
+                     &srcs[3].data],
+                    coef);
+            let mut seq = base.data.clone();
+            for (s, c) in srcs.iter().zip(coef) {
+                axpy8(&mut seq, &s.data, c);
+            }
+            for (f, s) in fused.iter().zip(&seq) {
+                assert!(f.to_bits() == s.to_bits(),
+                        "len {len}: {f} != {s}");
+            }
+        }
     }
 }

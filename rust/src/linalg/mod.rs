@@ -5,19 +5,23 @@
 //! second-stage optimization needs an SVD per selected block per update
 //! (the `ε` in the Appendix C cost model `ε·J/K`). We provide
 //!
-//! - [`matmul`]: blocked, thread-parallel f32 GEMM variants,
-//! - [`qr`]: modified Gram-Schmidt with reorthogonalization,
-//! - [`svd`]: one-sided Jacobi (exact, f64 accumulation),
-//! - [`rand_svd`]: randomized subspace SVD (the fast path used by the
-//!   coordinator when only the top of the spectrum is needed, with a
-//!   certified escape hatch back to Jacobi).
+//! - [`matmul`](mod@matmul): blocked/tiled, thread-parallel f32 GEMM
+//!   variants with explicit 8-wide microkernels and a documented
+//!   accumulation-order contract ([`dot8`]),
+//! - [`qr`](mod@qr): modified Gram-Schmidt with reorthogonalization,
+//! - [`svd`](mod@svd): one-sided Jacobi (exact, f64 accumulation),
+//! - [`rand_svd`](mod@rand_svd): randomized subspace SVD (the fast
+//!   path used by the coordinator when only the top of the spectrum is
+//!   needed, with a certified escape hatch back to Jacobi).
+
+#![warn(missing_docs)]
 
 pub mod matmul;
 pub mod qr;
 pub mod svd;
 pub mod rand_svd;
 
-pub use matmul::{dot8, matmul, matmul_nt, matmul_tn};
+pub use matmul::{axpy8, dot8, matmul, matmul_nt, matmul_tn};
 pub use qr::qr_thin;
 pub use svd::{jacobi_svd, Svd};
 pub use rand_svd::rand_svd;

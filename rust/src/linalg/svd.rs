@@ -13,8 +13,11 @@ use crate::tensor::Tensor;
 /// u (n×k), v (m×k), k = min(n, m).
 #[derive(Clone, Debug)]
 pub struct Svd {
+    /// Left singular vectors, n×k.
     pub u: Tensor,
+    /// Singular values, descending, length k.
     pub s: Vec<f32>,
+    /// Right singular vectors, m×k.
     pub v: Tensor,
 }
 
@@ -28,6 +31,7 @@ impl Svd {
         self.s.iter().filter(|x| **x > cut).count()
     }
 
+    /// Materialize `u · diag(s) · vᵀ`.
     pub fn reconstruct(&self) -> Tensor {
         super::reconstruct(&self.u, &self.s, &self.v)
     }

@@ -34,6 +34,28 @@
 //! backend: `SALAAD_BACKEND=native|xla` forces one; otherwise the PJRT
 //! path is chosen iff the `xla` feature is on *and* an artifacts
 //! directory is present, with the native executor as the fallback.
+//!
+//! The incremental serving flow on this seam (see ARCHITECTURE.md for
+//! the full picture):
+//!
+//! ```
+//! use salaad::runtime::{ModelParams, Runtime};
+//! let rt = Runtime::native();
+//! let cfg = rt.model_config("nano").unwrap();
+//! let params = ModelParams::from_dense(&cfg.init_params(0));
+//! // One prefill over the prompt → per-position logits + a KV cache…
+//! let prompt: Vec<i32> = (0..8).collect();
+//! let (logits, mut cache) =
+//!     rt.prefill(&cfg, &params, &prompt, 1).unwrap();
+//! assert_eq!(logits.shape, vec![8, cfg.vocab]);
+//! assert_eq!(cache.len(), 8);
+//! // …then O(context) single-position steps per emitted token.
+//! let step = rt.decode_step(&cfg, &params, &mut cache, &[3]).unwrap();
+//! assert_eq!(step.shape, vec![1, cfg.vocab]);
+//! assert_eq!(cache.len(), 9);
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod native;
 
@@ -61,7 +83,11 @@ use crate::tensor::Tensor;
 /// CSR residual — never densified on the inference path.
 #[derive(Clone, Debug)]
 pub enum ParamValue {
+    /// Plain dense tensor (norm scales, embeddings, uncompressed
+    /// blocks, or factored blocks whose factors would be larger).
     Dense(Tensor),
+    /// SLR-compressed linear kept as (U, s, V) + CSR-S; factored-aware
+    /// backends evaluate it without materializing X̂.
     Factored(FactoredLinear),
 }
 
@@ -82,6 +108,7 @@ impl ParamValue {
         }
     }
 
+    /// Whether this parameter is held in factored (U, s, V, CSR) form.
     pub fn is_factored(&self) -> bool {
         matches!(self, ParamValue::Factored(_))
     }
@@ -100,6 +127,7 @@ impl ParamValue {
 /// factored-aware backends execute directly.
 #[derive(Clone, Debug, Default)]
 pub struct ModelParams {
+    /// One entry per parameter, in `cfg.params` order.
     pub values: Vec<ParamValue>,
 }
 
@@ -111,10 +139,12 @@ impl ModelParams {
         }
     }
 
+    /// Number of parameters in the set.
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// True when the set holds no parameters.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
@@ -135,6 +165,7 @@ impl ModelParams {
         self.values.iter().map(|v| v.dense_bytes()).sum()
     }
 
+    /// How many parameters are held factored.
     pub fn n_factored(&self) -> usize {
         self.values.iter().filter(|v| v.is_factored()).count()
     }
@@ -236,6 +267,8 @@ impl Runtime {
         Ok(Runtime { backend: Box::new(backend), configs, dir })
     }
 
+    /// Stub for builds without the `xla` feature: always errors,
+    /// pointing at [`Runtime::native`].
     #[cfg(not(feature = "xla"))]
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         bail!("artifact runtime for {} requires building with \
@@ -266,10 +299,12 @@ impl Runtime {
         Ok(Runtime::native())
     }
 
+    /// Short identifier of the active backend ("native", "pjrt-cpu").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
+    /// Human-readable description of the active backend.
     pub fn describe(&self) -> String {
         self.backend.describe()
     }
@@ -284,6 +319,7 @@ impl Runtime {
                 self.config_names()))
     }
 
+    /// Names of every config the active backend can execute.
     pub fn config_names(&self) -> Vec<String> {
         self.configs.keys().cloned().collect()
     }

@@ -14,11 +14,14 @@
 //! an f64 reference implementation (see the golden tests below, which
 //! pin loss and per-parameter gradient norms for two geometries).
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
 use anyhow::{bail, ensure, Result};
 
 use super::{Backend, ModelParams, ParamValue};
 use crate::config::ModelConfig;
-use crate::linalg::{dot8, matmul, matmul_nt, matmul_tn};
+use crate::linalg::{axpy8, dot8, matmul, matmul_nt, matmul_tn};
 use crate::slr::FactoredLinear;
 use crate::tensor::Tensor;
 use crate::util::parallel::{default_workers, parallel_map};
@@ -28,6 +31,7 @@ use crate::util::parallel::{default_workers, parallel_map};
 pub struct NativeBackend;
 
 impl NativeBackend {
+    /// Construct the (stateless) native executor.
     pub fn new() -> Self {
         NativeBackend
     }
@@ -201,8 +205,21 @@ fn rmsnorm_bwd(dy: &Tensor, x: &Tensor, scale: &Tensor, rs: &[f32])
     (dx, dscale)
 }
 
-/// Rotary tables: (cos, sin), each seq_len × (hd/2) row-major.
-fn rope_tables(t: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+/// Rotary tables for one (positions, d_head, theta) geometry: cos and
+/// sin, each `len × (hd/2)` row-major. Entry `(pos, j)` depends only on
+/// its own indices, so a longer table's prefix is bitwise the shorter
+/// table — which is what lets [`rope_tables_cached`] serve any request
+/// with `t ≤ len` from one shared entry.
+struct RopeTables {
+    /// Number of positions (rows) the tables cover.
+    len: usize,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+/// Build rotary tables from scratch (cold-cache path of
+/// [`rope_tables_cached`]; hot paths never call this directly).
+fn build_rope_tables(t: usize, hd: usize, theta: f64) -> RopeTables {
     let half = hd / 2;
     let mut cos = vec![0.0f32; t * half];
     let mut sin = vec![0.0f32; t * half];
@@ -214,7 +231,40 @@ fn rope_tables(t: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
             sin[pos * half + j] = ang.sin() as f32;
         }
     }
-    (cos, sin)
+    RopeTables { len: t, cos, sin }
+}
+
+/// Process-wide rotary-table cache keyed by `(d_head, theta)`.
+///
+/// The seed executor rebuilt `seq_len × (hd/2)` trig tables on *every*
+/// forward call and every `KvCache` construction; tables only depend on
+/// the model geometry, so `forward_resolved`, `forward_model` and
+/// [`KvCache::new`] now share one immutable `Arc` per geometry. Entries
+/// grow monotonically: a request for more positions than the cached
+/// table holds rebuilds the entry at the larger size (the shorter
+/// prefix is bit-identical, so sharing never changes results). The
+/// map is bounded — distinct `(d_head, theta)` pairs number a handful
+/// per process — but is cleared defensively if it ever exceeds 64
+/// geometries.
+fn rope_tables_cached(t: usize, hd: usize, theta: f64)
+                      -> Arc<RopeTables> {
+    static CACHE: OnceLock<
+        Mutex<HashMap<(usize, u64), Arc<RopeTables>>>,
+    > = OnceLock::new();
+    let cache = CACHE.get_or_init(Default::default);
+    let key = (hd, theta.to_bits());
+    let mut map = cache.lock().unwrap();
+    if let Some(hit) = map.get(&key) {
+        if hit.len >= t {
+            return hit.clone();
+        }
+    }
+    if map.len() >= 64 {
+        map.clear();
+    }
+    let fresh = Arc::new(build_rope_tables(t, hd, theta));
+    map.insert(key, fresh.clone());
+    fresh
 }
 
 /// Rotate-half RoPE on a (T, hd) head block.
@@ -311,12 +361,18 @@ struct Cache {
     x_last: Tensor,
     xnf: Tensor,
     rf: Vec<f32>,
-    cos: Vec<f32>,
-    sin: Vec<f32>,
+    rope: Arc<RopeTables>,
 }
 
-/// Causal-softmax attention for one head: returns the full per-head
-/// state. `scale` is 1/√hd.
+/// Causal-softmax attention for one head with the probability matrix
+/// *materialized*: returns the full per-head state. `scale` is 1/√hd.
+///
+/// This is the **training-path** kernel only — the backward pass needs
+/// `probs` (t×t) to form `dS = P ∘ (dP − rowsum(dP ∘ P))`. Every
+/// no-grad path (inference `forward_resolved`, prefill, decode) uses
+/// the fused [`attn_stream_row`] instead, which allocates O(t) and is
+/// bit-identical to this kernel (the property test
+/// `fused_attention_matches_materialized_probs` pins the equivalence).
 fn attend(qr: Tensor, kr: Tensor, v: Tensor, scale: f32) -> HeadState {
     let t = qr.nrows();
     let mut scores = matmul_nt(&qr, &kr);
@@ -341,6 +397,59 @@ fn attend(qr: Tensor, kr: Tensor, v: Tensor, scale: f32) -> HeadState {
     }
     let o = matmul(&probs, &v);
     HeadState { qr, kr, v, probs, o }
+}
+
+/// Fused streaming-softmax attention for one query row — the no-grad
+/// attention kernel shared by the dense inference forward, prefill and
+/// KV-cached decode.
+///
+/// Streams over the `prefix` causally-visible keys with a running max
+/// (first pass: scores via [`dot8`] and the max in one sweep), then a
+/// running denominator (second pass: exponentials accumulate into `z`
+/// in key order), then accumulates `probs·V` into `orow` (which the
+/// caller provides zeroed) one key at a time via [`axpy8`] — flash-
+/// attention-style in memory profile: no (t×t) score or probability
+/// matrix ever exists, only the O(t) scratch `srow`.
+///
+/// # Bit-consistency contract
+///
+/// Each arithmetic step replays the materialized [`attend`] kernel
+/// exactly — `dot8·scale` scores (= a `matmul_nt` element), identical
+/// max/exp/normalize ordering, ascending-key O(1)-rounding-step
+/// accumulation (= a no-skip `matmul` element) — so fused inference,
+/// incremental decode and the training forward all produce identical
+/// activations, which is what keeps the `serve_factored.rs`
+/// token-identical gate and the eval-vs-train loss consistency test
+/// exact rather than approximate. A true single-pass online-rescaled
+/// softmax would give up that guarantee for no additional memory win,
+/// which is why the score pass and the exp pass stay separate.
+///
+/// `keys` rows must already be RoPE-rotated; rows `0..prefix` of
+/// `keys`/`vals` are read (extra capacity rows, e.g. a not-yet-full
+/// [`KvCache`], are ignored).
+fn attn_stream_row(qrot: &[f32], keys: &Tensor, vals: &Tensor,
+                   prefix: usize, scale: f32, srow: &mut [f32],
+                   orow: &mut [f32]) {
+    let s = &mut srow[..prefix];
+    let mut m = f32::NEG_INFINITY;
+    for (j, sv) in s.iter_mut().enumerate() {
+        *sv = dot8(qrot, keys.row(j)) * scale;
+        m = m.max(*sv);
+    }
+    let mut z = 0.0f32;
+    for sv in s.iter_mut() {
+        *sv = (*sv - m).exp();
+        z += *sv;
+    }
+    for sv in s.iter_mut() {
+        *sv /= z;
+    }
+    for (j, &pv) in s.iter().enumerate() {
+        if pv == 0.0 {
+            continue; // fully underflowed tail weight
+        }
+        axpy8(orow, vals.row(j), pv);
+    }
 }
 
 /// Dense forward; returns flat (rows·T, vocab) logits plus the backward
@@ -369,7 +478,8 @@ fn forward_resolved(cfg: &ModelConfig, pv: &ParamView, tokens: &[i32],
     }
     let n = rows * t;
     let scale = 1.0 / (hd as f32).sqrt();
-    let (cos, sin) = rope_tables(t, hd, cfg.rope_theta);
+    let rope = rope_tables_cached(t, hd, cfg.rope_theta);
+    let (cos, sin) = (&rope.cos, &rope.sin);
     let workers = default_workers();
 
     // Embedding lookup.
@@ -386,16 +496,45 @@ fn forward_resolved(cfg: &ModelConfig, pv: &ParamView, tokens: &[i32],
         let v = matmul_nt(&xn1, lp.wv);
 
         let bh: Vec<usize> = (0..rows * heads).collect();
-        let head_states = parallel_map(&bh, workers, |&i| {
-            let (b, h) = (i / heads, i % heads);
-            let qb = rope_apply(&head_block(&q, b, h, t, hd), &cos, &sin);
-            let kb = rope_apply(&head_block(&k, b, h, t, hd), &cos, &sin);
-            let vb = head_block(&v, b, h, t, hd);
-            attend(qb, kb, vb, scale)
-        });
         let mut o = Tensor::zeros(&[n, d]);
-        for (i, hs) in head_states.iter().enumerate() {
-            head_scatter(&mut o, &hs.o, i / heads, i % heads, t, hd);
+        let mut head_states = Vec::new();
+        if want_cache {
+            // Training: materialize per-head probabilities for the
+            // backward pass.
+            let states = parallel_map(&bh, workers, |&i| {
+                let (b, h) = (i / heads, i % heads);
+                let qb =
+                    rope_apply(&head_block(&q, b, h, t, hd), cos, sin);
+                let kb =
+                    rope_apply(&head_block(&k, b, h, t, hd), cos, sin);
+                let vb = head_block(&v, b, h, t, hd);
+                attend(qb, kb, vb, scale)
+            });
+            for (i, hs) in states.iter().enumerate() {
+                head_scatter(&mut o, &hs.o, i / heads, i % heads, t, hd);
+            }
+            head_states = states;
+        } else {
+            // Inference: fused streaming softmax — no (t×t) tensor is
+            // allocated anywhere on this path, only an O(t) score row.
+            let outs = parallel_map(&bh, workers, |&i| {
+                let (b, h) = (i / heads, i % heads);
+                let qb =
+                    rope_apply(&head_block(&q, b, h, t, hd), cos, sin);
+                let kb =
+                    rope_apply(&head_block(&k, b, h, t, hd), cos, sin);
+                let vb = head_block(&v, b, h, t, hd);
+                let mut ob = Tensor::zeros(&[t, hd]);
+                let mut srow = vec![0.0f32; t];
+                for p in 0..t {
+                    attn_stream_row(qb.row(p), &kb, &vb, p + 1, scale,
+                                    &mut srow, ob.row_mut(p));
+                }
+                ob
+            });
+            for (i, ob) in outs.iter().enumerate() {
+                head_scatter(&mut o, ob, i / heads, i % heads, t, hd);
+            }
         }
 
         let mut x_mid = matmul_nt(&o, lp.wo);
@@ -422,7 +561,7 @@ fn forward_resolved(cfg: &ModelConfig, pv: &ParamView, tokens: &[i32],
     let (xnf, rf) = rmsnorm_fwd(&x, pv.final_norm, cfg.norm_eps);
     let logits = matmul_nt(&xnf, pv.lm_head);
     let cache = want_cache.then_some(Cache {
-        layers: layer_caches, x_last: x, xnf, rf, cos, sin,
+        layers: layer_caches, x_last: x, xnf, rf, rope,
     });
     Ok((logits, cache))
 }
@@ -442,14 +581,18 @@ pub struct KvCache {
     /// keys; `v` likewise holds values.
     k: Vec<Vec<Tensor>>,
     v: Vec<Vec<Tensor>>,
-    cos: Vec<f32>,
-    sin: Vec<f32>,
+    /// Shared rotary tables (process-wide cache, not owned per cache).
+    rope: Arc<RopeTables>,
 }
 
 impl KvCache {
+    /// Empty cache for `rows` sequences of the geometry in `cfg`, with
+    /// capacity `cfg.seq_len` positions per row. Rotary tables come
+    /// from the process-wide per-geometry cache rather than being
+    /// recomputed per construction.
     pub fn new(cfg: &ModelConfig, rows: usize) -> Self {
         let (cap, heads, hd) = (cfg.seq_len, cfg.n_heads, cfg.d_head());
-        let (cos, sin) = rope_tables(cap, hd, cfg.rope_theta);
+        let rope = rope_tables_cached(cap, hd, cfg.rope_theta);
         let alloc = || -> Vec<Vec<Tensor>> {
             (0..cfg.n_layers)
                 .map(|_| (0..rows * heads)
@@ -464,8 +607,7 @@ impl KvCache {
             heads,
             k: alloc(),
             v: alloc(),
-            cos,
-            sin,
+            rope,
         }
     }
 
@@ -474,19 +616,24 @@ impl KvCache {
         self.len
     }
 
+    /// True when no positions have been appended yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Number of sequences this cache was built for.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Maximum positions per row (`cfg.seq_len` at construction).
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
-    /// Resident bytes of the cached K/V tensors.
+    /// Resident bytes of the cached K/V tensors (the shared rotary
+    /// tables are excluded: they are owned by the process-wide
+    /// per-geometry cache, not by any one `KvCache`).
     pub fn resident_bytes(&self) -> usize {
         let per: usize = self.k.iter().flatten().map(|t| 4 * t.numel())
             .sum();
@@ -713,15 +860,17 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
                 for i in 0..t_new {
                     let pos = p0 + i;
                     let ksrc = &k.row(b * t_new + i)[h * hd..(h + 1) * hd];
-                    rope_row(ksrc, kc.row_mut(pos), &cache.cos,
-                             &cache.sin, pos);
+                    rope_row(ksrc, kc.row_mut(pos), &cache.rope.cos,
+                             &cache.rope.sin, pos);
                     vc.row_mut(pos).copy_from_slice(
                         &v.row(b * t_new + i)[h * hd..(h + 1) * hd]);
                 }
             }
         }
 
-        // Causal attention of the new queries over the cached keys.
+        // Causal attention of the new queries over the cached keys —
+        // the fused streaming-softmax kernel, shared with the dense
+        // no-grad forward.
         let total = p0 + t_new;
         let flops = 2 * rows * heads * t_new * total * hd * 2;
         let workers = if flops < (1 << 22) { 1 } else { default_workers() };
@@ -737,31 +886,10 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
             for i in 0..t_new {
                 let pos = p0 + i;
                 let qsrc = &q.row(b * t_new + i)[h * hd..(h + 1) * hd];
-                rope_row(qsrc, &mut qrot, &cache_ref.cos, &cache_ref.sin,
-                         pos);
-                let s = &mut srow[..pos + 1];
-                for (j, sv) in s.iter_mut().enumerate() {
-                    *sv = dot8(&qrot, kc.row(j)) * scale;
-                }
-                let m = s.iter().cloned().fold(f32::NEG_INFINITY,
-                                               f32::max);
-                let mut z = 0.0f32;
-                for sv in s.iter_mut() {
-                    *sv = (*sv - m).exp();
-                    z += *sv;
-                }
-                for sv in s.iter_mut() {
-                    *sv /= z;
-                }
-                let orow = o.row_mut(i);
-                for (j, &pv) in s.iter().enumerate() {
-                    if pv == 0.0 {
-                        continue;
-                    }
-                    for (ov, vv) in orow.iter_mut().zip(vc.row(j)) {
-                        *ov += pv * *vv;
-                    }
-                }
+                rope_row(qsrc, &mut qrot, &cache_ref.rope.cos,
+                         &cache_ref.rope.sin, pos);
+                attn_stream_row(&qrot, kc, vc, pos + 1, scale,
+                                &mut srow, o.row_mut(i));
             }
             o
         });
@@ -904,8 +1032,8 @@ fn loss_and_grads(cfg: &ModelConfig, params: &[Tensor], tokens: &[i32],
             dqr.scale_assign(scale);
             let mut dkr = matmul_tn(&ds, &hs.qr);
             dkr.scale_assign(scale);
-            (rope_bwd(&dqr, &c.cos, &c.sin),
-             rope_bwd(&dkr, &c.cos, &c.sin), dv)
+            (rope_bwd(&dqr, &c.rope.cos, &c.rope.sin),
+             rope_bwd(&dkr, &c.rope.cos, &c.rope.sin), dv)
         });
         let n = rows * t;
         let d = cfg.d_model;
@@ -1152,12 +1280,87 @@ mod tests {
         // The backward rotation is the inverse of the forward one.
         let mut rng = Rng::new(9);
         let x = Tensor::randn(&[7, 8], &mut rng, 1.0);
-        let (cos, sin) = rope_tables(7, 8, 10000.0);
-        let y = rope_apply(&x, &cos, &sin);
-        let back = rope_bwd(&y, &cos, &sin);
+        let rt = build_rope_tables(7, 8, 10000.0);
+        let y = rope_apply(&x, &rt.cos, &rt.sin);
+        let back = rope_bwd(&y, &rt.cos, &rt.sin);
         assert!(back.dist_frob(&x) < 1e-5, "rope not orthogonal");
         // And it preserves norms (pure rotation).
         assert!((y.frob_norm() - x.frob_norm()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_cache_shares_and_grows_tables() {
+        // Same geometry → same Arc; longer request → rebuilt tables
+        // whose prefix is bit-identical (so sharing can never change
+        // results); different theta → distinct entry.
+        let a = rope_tables_cached(6, 8, 999.25);
+        let b = rope_tables_cached(4, 8, 999.25);
+        assert!(Arc::ptr_eq(&a, &b), "prefix request must share");
+        let c = rope_tables_cached(12, 8, 999.25);
+        assert!(c.len >= 12);
+        assert_eq!(&c.cos[..a.cos.len()], &a.cos[..]);
+        assert_eq!(&c.sin[..a.sin.len()], &a.sin[..]);
+        let d = rope_tables_cached(6, 8, 1000.5);
+        assert!(!Arc::ptr_eq(&c, &d));
+        // And the cached tables match a from-scratch build.
+        let fresh = build_rope_tables(12, 8, 999.25);
+        assert_eq!(fresh.cos, c.cos);
+        assert_eq!(fresh.sin, c.sin);
+    }
+
+    /// The fused streaming-softmax kernel must match the materialized-
+    /// probs reference within 1e-5 (it is in fact designed to be
+    /// bit-identical — see `attn_stream_row`'s contract) across random
+    /// (t, hd) head geometries.
+    #[test]
+    fn fused_attention_matches_materialized_probs() {
+        use crate::util::prop;
+        prop::check("fused_attn_row", 24, |rng| {
+            let t = prop::dim(rng, 1, 24);
+            let hd = 2 * prop::dim(rng, 1, 10);
+            let q = Tensor::randn(&[t, hd], rng, 1.0);
+            let k = Tensor::randn(&[t, hd], rng, 1.0);
+            let v = Tensor::randn(&[t, hd], rng, 1.0);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let hs = attend(q.clone(), k.clone(), v.clone(), scale);
+            let mut srow = vec![0.0f32; t];
+            let mut o = Tensor::zeros(&[t, hd]);
+            for p in 0..t {
+                attn_stream_row(q.row(p), &k, &v, p + 1, scale,
+                                &mut srow, o.row_mut(p));
+            }
+            let d: f32 = o.data.iter().zip(&hs.o.data)
+                .map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(d < 1e-5, "t={t} hd={hd}: fused diverged by {d}");
+        });
+    }
+
+    /// Full-model form of the same property across random (t, heads,
+    /// hd): the no-grad forward (fused attention) must match the
+    /// training forward (materialized probs) on the same tokens.
+    #[test]
+    fn fused_forward_matches_training_forward_logits() {
+        use crate::util::prop;
+        prop::check("fused_fwd_model", 6, |rng| {
+            let heads = prop::dim(rng, 1, 3);
+            let hd = 2 * prop::dim(rng, 1, 4);
+            let t = prop::dim(rng, 2, 10).max(2);
+            let cfg = ModelConfig::from_geometry(
+                "fusedprop", 24, heads * hd, 1, heads, 16, t, 1);
+            let params = cfg.init_params(rng.next_below(1u64 << 20));
+            let tokens: Vec<i32> = (0..t)
+                .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+                .collect();
+            let pv = resolve(&cfg, &params).unwrap();
+            let (fused, _) =
+                forward_resolved(&cfg, &pv, &tokens, 1, false).unwrap();
+            let (mat, _) =
+                forward_resolved(&cfg, &pv, &tokens, 1, true).unwrap();
+            let d: f32 = fused.data.iter().zip(&mat.data)
+                .map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(d < 1e-5,
+                    "heads={heads} hd={hd} t={t}: diverged by {d}");
+        });
     }
 
     #[test]

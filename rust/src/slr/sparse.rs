@@ -10,19 +10,41 @@
 //! factors with the CSR residual into the unit the serving runtime
 //! evaluates without ever densifying X̂ = L + S.
 
+#![warn(missing_docs)]
+
 use anyhow::{ensure, Result};
 
 use crate::linalg::{matmul, matmul_nt, reconstruct};
 use crate::tensor::Tensor;
 
+/// Compressed-sparse-row f32 matrix.
+///
+/// # Invariants
+///
+/// Constructed values (e.g. via [`CsrMatrix::from_dense`]) satisfy, and
+/// [`CsrMatrix::spmm_t`]/[`CsrMatrix::spmv`] assume without checking:
+///
+/// - `indptr.len() == n + 1`, `indptr[0] == 0`,
+///   `indptr[n] as usize == values.len()`, and `indptr` is
+///   non-decreasing — row `i`'s entries live at
+///   `indptr[i]..indptr[i+1]`;
+/// - `indices.len() == values.len()`, every index `< m`, and indices
+///   are strictly ascending *within* each row (so each (row, col)
+///   appears at most once and per-row accumulation order is
+///   well-defined);
+/// - stored values may be anything, including explicit zeros — only
+///   [`CsrMatrix::from_dense`] filters them.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMatrix {
+    /// Rows.
     pub n: usize,
+    /// Columns.
     pub m: usize,
     /// Row offsets, length n+1.
     pub indptr: Vec<u32>,
     /// Column indices, length nnz.
     pub indices: Vec<u32>,
+    /// Nonzero values, aligned with `indices`.
     pub values: Vec<f32>,
 }
 
@@ -46,10 +68,12 @@ impl CsrMatrix {
         CsrMatrix { n, m, indptr, indices, values }
     }
 
+    /// Stored entry count.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
 
+    /// Stored entries as a fraction of n·m (0.0 for empty shapes).
     pub fn density(&self) -> f64 {
         if self.n * self.m == 0 {
             return 0.0;
@@ -64,6 +88,7 @@ impl CsrMatrix {
             + self.indptr.len() * 4
     }
 
+    /// Materialize the dense (n×m) tensor (tests/fallbacks only).
     pub fn to_dense(&self) -> Tensor {
         let mut out = Tensor::zeros(&[self.n, self.m]);
         for i in 0..self.n {
@@ -95,6 +120,13 @@ impl CsrMatrix {
 
     /// Y = X · Sᵀ for row-major X (t×m) -> (t×n): the residual term of
     /// the factored linear layer, matching `slr_matmul`'s x·Sᵀ.
+    ///
+    /// Each output element accumulates its row's stored entries in
+    /// CSR order (ascending column index, one f32 rounding step per
+    /// entry); together with the struct-level invariants this makes
+    /// the product deterministic and independent of how the CSR was
+    /// produced. Cost is O(t·nnz) — the entire reason deployment
+    /// converts S out of dense storage.
     pub fn spmm_t(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.ncols(), self.m);
         let t = x.nrows();
@@ -146,6 +178,8 @@ pub struct FactoredLinear {
 }
 
 impl FactoredLinear {
+    /// Bundle factors + residual, panicking on inconsistent shapes
+    /// (use [`FactoredLinear::validate`] for a fallible check).
     pub fn new(u: Tensor, s: Vec<f32>, v: Tensor, sp: CsrMatrix) -> Self {
         let f = FactoredLinear {
             n: u.nrows(),
@@ -159,10 +193,12 @@ impl FactoredLinear {
         f
     }
 
+    /// Retained rank r (length of `s`).
     pub fn rank(&self) -> usize {
         self.s.len()
     }
 
+    /// Check factor/residual shape consistency.
     pub fn validate(&self) -> Result<()> {
         let r = self.rank();
         ensure!(self.u.shape == [self.n, r],
