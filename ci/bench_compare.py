@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Gate cargo-bench medians against a checked-in baseline.
+
+Usage:
+    bench_compare.py CURRENT.json BASELINE.json \
+        --max-regress 0.20 --gate serve/prefill_1x64 --gate gemm/
+
+Both files are the `reports/bench.json` shape the bench harness writes:
+{"<bench name>": {"median_ms": float, "mean_ms": float, "iters": int}}
+plus an optional "_meta" entry (ignored for comparison).
+
+A bench is *gated* when its name contains any --gate substring. The
+script exits 1 if any gated bench's median regressed by more than
+--max-regress (fractional, 0.20 = +20%) relative to the baseline.
+
+Baseline entries whose median_ms is null are *pending*: they gate
+nothing and are reported as such. That is the bootstrap path — the
+first real run's BENCH_PR4.json artifact, pasted over
+ci/bench_baseline.json, turns the gate on (EXPERIMENTS.md §Bench
+baseline records the protocol).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        sys.exit(f"{path}: expected a JSON object at top level")
+    return {k: v for k, v in data.items() if not k.startswith("_")}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="allowed fractional median regression "
+                         "(default 0.20 = +20%%)")
+    ap.add_argument("--gate", action="append", default=[],
+                    help="substring; matching benches are gated "
+                         "(repeatable). No --gate gates everything.")
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    base = load(args.baseline)
+
+    def gated(name):
+        return not args.gate or any(g in name for g in args.gate)
+
+    failures, pending, compared = [], [], 0
+    rows = []
+    for name in sorted(cur):
+        if not gated(name):
+            continue
+        cm = cur[name].get("median_ms")
+        bent = base.get(name) or {}
+        bm = bent.get("median_ms")
+        if cm is None:
+            continue
+        if bm is None:
+            pending.append(name)
+            rows.append((name, "—", f"{cm:.3f}", "pending baseline"))
+            continue
+        compared += 1
+        ratio = cm / bm if bm > 0 else float("inf")
+        verdict = "ok"
+        if ratio > 1.0 + args.max_regress:
+            verdict = f"REGRESSED {ratio:.2f}x"
+            failures.append((name, bm, cm, ratio))
+        rows.append((name, f"{bm:.3f}", f"{cm:.3f}", verdict))
+
+    missing = sorted(n for n in base
+                     if gated(n) and n not in cur
+                     and (base[n] or {}).get("median_ms") is not None)
+
+    w = max([len(r[0]) for r in rows] + [5])
+    print(f"{'bench':<{w}}  {'base ms':>10}  {'head ms':>10}  verdict")
+    for name, bm, cm, verdict in rows:
+        print(f"{name:<{w}}  {bm:>10}  {cm:>10}  {verdict}")
+    print(f"\n{compared} gated benches compared, {len(pending)} pending "
+          f"baseline, {len(failures)} regressed "
+          f"(threshold +{args.max_regress:.0%}).")
+    if missing:
+        print("baseline benches missing from this run (rename? filter?): "
+              + ", ".join(missing))
+
+    if failures:
+        print("\nFAIL: median regressions over threshold:")
+        for name, bm, cm, ratio in failures:
+            print(f"  {name}: {bm:.3f} ms -> {cm:.3f} ms ({ratio:.2f}x)")
+        sys.exit(1)
+    if compared == 0 and pending:
+        print("\nNo recorded baseline yet — gate is informational until "
+              "ci/bench_baseline.json is filled from a BENCH_PR4.json "
+              "artifact (EXPERIMENTS.md §Bench baseline).")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

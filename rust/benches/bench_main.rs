@@ -17,7 +17,10 @@
 //!                     streaming-softmax attention path), and greedy
 //!                     decode with vs without the KV cache
 //!
-//! Set SALAAD_BENCH_FILTER=<substr> to run a subset.
+//! Set SALAAD_BENCH_FILTER=<substr>[|<substr>…] to run a subset; each
+//! '|'-separated alternative is matched as a substring (e.g.
+//! `SALAAD_BENCH_FILTER='serve|gemm|prefill'` — the CI bench job's
+//! filter).
 
 use std::time::Instant;
 
@@ -25,7 +28,7 @@ use salaad::config::{SalaadConfig, TrainConfig};
 use salaad::coordinator::{run_admm_phase, Method, Trainer};
 use salaad::data::BatchLoader;
 use salaad::linalg::{jacobi_svd, matmul, matmul_nt, matmul_tn, rand_svd};
-use salaad::runtime::{ModelParams, Runtime};
+use salaad::runtime::{ModelParams, PackedPrompts, Runtime};
 use salaad::serve::{Server, ServerOptions};
 use salaad::slr::prox::{soft_threshold_assign, svt};
 use salaad::slr::{hpa, rpca::rpca, SlrBlock};
@@ -49,7 +52,8 @@ impl Bench {
     /// count so each bench takes ~0.4-1s. Records median + mean.
     fn bench(&mut self, name: &str, mut f: impl FnMut()) {
         if let Some(filt) = &self.filter {
-            if !name.contains(filt.as_str()) {
+            // '|'-separated alternatives, each a substring match.
+            if !filt.split('|').any(|alt| name.contains(alt)) {
                 return;
             }
         }
@@ -72,6 +76,10 @@ impl Bench {
         self.results.push((name.to_string(), median, mean, iters));
     }
 
+    /// Write `reports/bench.md` (human table) and `reports/bench.json`
+    /// (machine-readable: name → {median_ms, mean_ms, iters} — what
+    /// the CI bench-regression job uploads as `BENCH_PR4.json` and
+    /// diffs against `ci/bench_baseline.json`).
     fn report(&self) {
         let mut out = String::from("| bench | median ms | mean ms | iters |\n\
                                     |---|---|---|---|\n");
@@ -81,6 +89,15 @@ impl Bench {
         }
         let _ = std::fs::create_dir_all("reports");
         let _ = std::fs::write("reports/bench.md", out);
+        let mut j = salaad::util::Json::obj();
+        for (n, med, mean, it) in &self.results {
+            let mut e = salaad::util::Json::obj();
+            e.set("median_ms", salaad::util::Json::Num(med * 1e3));
+            e.set("mean_ms", salaad::util::Json::Num(mean * 1e3));
+            e.set("iters", salaad::util::Json::Num(*it as f64));
+            j.set(n, e);
+        }
+        let _ = j.write_file(std::path::Path::new("reports/bench.json"));
     }
 }
 
@@ -266,17 +283,48 @@ fn main() {
             // PR are recorded in EXPERIMENTS.md §Prefill.
             if rt.supports_incremental() {
                 let mp = ModelParams::from_dense(&params);
+                let full = PackedPrompts::equal(&one, 1).unwrap();
                 b.bench(&format!("serve/prefill_1x{}_{scale}",
                                  cfg.seq_len), || {
                     std::hint::black_box(
-                        rt.prefill(&cfg, &mp, &one, 1).unwrap());
+                        rt.prefill(&cfg, &mp, &full).unwrap());
                 });
-                let half: Vec<i32> = one[..cfg.seq_len / 2].to_vec();
+                let half = PackedPrompts::equal(
+                    &one[..cfg.seq_len / 2], 1).unwrap();
                 b.bench(&format!("serve/prefill_1x{}_{scale}",
                                  cfg.seq_len / 2), || {
                     std::hint::black_box(
-                        rt.prefill(&cfg, &mp, &half, 1).unwrap());
+                        rt.prefill(&cfg, &mp, &half).unwrap());
                 });
+                // Ragged packing: one left-padded rows=4 prefill over
+                // mixed prompt lengths vs the 4 solo prefills the
+                // per-length grouping used to run (nano only — the
+                // ratio, not the scale, is the point).
+                if scale == "nano" {
+                    let t = cfg.seq_len;
+                    let mixed: Vec<Vec<i32>> =
+                        [t / 8, t / 4, t / 2, t - 1]
+                            .into_iter()
+                            .map(|l| (0..l)
+                                .map(|i| ((i * 13 + 3) % cfg.vocab)
+                                    as i32)
+                                .collect())
+                            .collect();
+                    let pack = PackedPrompts::pack(&mixed).unwrap();
+                    b.bench("serve/prefill_ragged_pack4_nano", || {
+                        std::hint::black_box(
+                            rt.prefill(&cfg, &mp, &pack).unwrap());
+                    });
+                    let solos: Vec<PackedPrompts> = mixed.iter()
+                        .map(|p| PackedPrompts::equal(p, 1).unwrap())
+                        .collect();
+                    b.bench("serve/prefill_solo4_nano", || {
+                        for s in &solos {
+                            std::hint::black_box(
+                                rt.prefill(&cfg, &mp, s).unwrap());
+                        }
+                    });
+                }
             }
         }
 

@@ -32,7 +32,7 @@ USAGE:
                [--rho-const X] [--out DIR] [--quiet] [--include-head]
   salaad eval <ckpt-dir> [--downstream]
   salaad compress <ckpt-dir> [--budget-frac F] [--kappa K] [--out DIR]
-  salaad serve <scale> [--steps N] [--requests N]
+  salaad serve <scale> [--steps N] [--requests N] [--mixed-lens]
   salaad exp <id|all> [--scale S] [--steps N] [--seed N] [--out DIR]
              [--no-cache] [--verbose]
 
@@ -220,6 +220,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = rt.model_config(scale)?;
     let steps = args.usize_flag("steps", 60)?;
     let n_requests = args.usize_flag("requests", 16)?;
+    // --mixed-lens: submit deliberately mixed prompt lengths and
+    // hard-fail unless they packed into one ragged group per variant
+    // (the CI smoke for the left-pad packed prefill).
+    let mixed_lens = args.has("mixed-lens");
 
     eprintln!("training a quick SALAAD model for the demo ({steps} steps)…");
     let tcfg = TrainConfig { steps, eval_every: 0, ..Default::default() };
@@ -258,15 +262,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let producer = std::thread::spawn(move || {
         let mut rng = salaad::util::Rng::new(42);
         for i in 0..n_requests as u64 {
-            let prompt: Vec<u32> = (0..12)
+            // Mixed-lens traffic varies the prompt length so requests
+            // routed to the same variant land in one ragged pack;
+            // plain traffic keeps the original fixed length.
+            let plen = if mixed_lens {
+                4 + (i as usize * 5) % 23
+            } else {
+                12
+            };
+            let prompt: Vec<u32> = (0..plen)
                 .map(|_| rng.next_below(vocab) as u32)
                 .collect();
             let budget = budgets[(i as usize) % budgets.len()];
             req_tx.send(Request::new(i, prompt, 4, budget)).unwrap();
         }
     });
-    server.run(req_rx, resp_tx)?;
+    // Drain the producer before serving: every request is already in
+    // the channel when the batcher starts, so batch composition (and
+    // the --mixed-lens packing assertion below) is deterministic
+    // instead of racing the 10 ms batch deadline on a loaded box.
     producer.join().unwrap();
+    server.run(req_rx, resp_tx)?;
     let mut lat = Vec::new();
     let mut n_resp = 0usize;
     for r in resp_rx.iter() {
@@ -284,9 +300,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("p50 {:.1} ms  p95 {p95:.1} ms  served {} reqs",
                  lat[lat.len() / 2], lat.len());
     }
+    let s = server.stats;
+    println!("packing: {} batches, {} groups ({:.2} groups/batch), \
+              {} packed rows, {} mixed-length groups",
+             s.batches, s.groups, s.groups_per_batch(), s.packed_rows,
+             s.mixed_len_groups);
     // Smoke contract: every request round-trips to a response.
     anyhow::ensure!(n_resp == n_requests,
                     "served {n_resp}/{n_requests} requests");
+    // Groups are keyed by routed variant only, so a batch can never
+    // fan out into more groups than deployed variants.
+    anyhow::ensure!(s.groups <= s.batches * server.variants.len() as u64,
+                    "{} groups from {} batches exceeds one group per \
+                     variant ({} variants)",
+                    s.groups, s.batches, server.variants.len());
+    if mixed_lens && rt.supports_incremental() {
+        // The mixed-length smoke only proves something if requests
+        // actually shared ragged packs: hard-fail otherwise.
+        anyhow::ensure!(
+            s.packed_rows >= 2 && s.mixed_len_groups >= 1,
+            "mixed-length requests did not pack: {} packed rows, {} \
+             mixed-length groups ({} groups over {} batches) — the \
+             ragged prefill path regressed to per-length grouping",
+            s.packed_rows, s.mixed_len_groups, s.groups, s.batches);
+        println!("mixed-lens OK: lengths packed into {} group(s) per \
+                  batch across {} variant(s)",
+                 s.groups_per_batch().ceil() as u64,
+                 server.variants.len());
+    }
     println!("serve OK: {n_resp}/{n_requests} responses, factored \
               variants resident below dense");
     Ok(())

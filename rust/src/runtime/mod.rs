@@ -36,23 +36,33 @@
 //! directory is present, with the native executor as the fallback.
 //!
 //! The incremental serving flow on this seam (see ARCHITECTURE.md for
-//! the full picture):
+//! the full picture). Prompts enter as a [`PackedPrompts`] batch —
+//! mixed-length prompts are left-padded to the longest row and run as
+//! *one* ragged prefill whose per-row lengths drive the attention mask
+//! and rope offsets, so packing never changes emitted tokens:
 //!
 //! ```
-//! use salaad::runtime::{ModelParams, Runtime};
+//! use salaad::runtime::{ModelParams, PackedPrompts, Runtime};
 //! let rt = Runtime::native();
 //! let cfg = rt.model_config("nano").unwrap();
 //! let params = ModelParams::from_dense(&cfg.init_params(0));
 //! // One prefill over the prompt → per-position logits + a KV cache…
 //! let prompt: Vec<i32> = (0..8).collect();
-//! let (logits, mut cache) =
-//!     rt.prefill(&cfg, &params, &prompt, 1).unwrap();
+//! let pack = PackedPrompts::equal(&prompt, 1).unwrap();
+//! let (logits, mut cache) = rt.prefill(&cfg, &params, &pack).unwrap();
 //! assert_eq!(logits.shape, vec![8, cfg.vocab]);
 //! assert_eq!(cache.len(), 8);
 //! // …then O(context) single-position steps per emitted token.
 //! let step = rt.decode_step(&cfg, &params, &mut cache, &[3]).unwrap();
 //! assert_eq!(step.shape, vec![1, cfg.vocab]);
 //! assert_eq!(cache.len(), 9);
+//! // Two prompts of different lengths still make a single pack.
+//! let ragged =
+//!     PackedPrompts::pack(&[vec![1, 2, 3], vec![7]]).unwrap();
+//! assert_eq!((ragged.rows(), ragged.max_len()), (2, 3));
+//! let (logits, cache) = rt.prefill(&cfg, &params, &ragged).unwrap();
+//! assert_eq!(logits.shape, vec![2 * 3, cfg.vocab]);
+//! assert_eq!(cache.row_lens(), &[3, 1][..]);
 //! ```
 
 #![warn(missing_docs)]
@@ -72,11 +82,113 @@ pub use client::{Executable, PjrtBackend};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::config::ModelConfig;
 use crate::slr::FactoredLinear;
 use crate::tensor::Tensor;
+
+/// A batch of prompts packed for one `rows ≥ 1` prefill, left-padded to
+/// the longest row.
+///
+/// `tokens` is row-major `rows × max_len`; row `b` holds
+/// `max_len − row_lens[b]` pad slots (token 0 — never embedded, never
+/// attended, never cached) followed by its real prompt. Left padding
+/// puts every row's *last* prompt token in the final column, so the
+/// next-token logit of row `b` always sits at flat logits row
+/// `b·max_len + max_len − 1` regardless of its length.
+///
+/// Ragged execution is masked, not approximate: each row's rope
+/// positions are offset by its pad count (every row sees positions
+/// `0..row_lens[b]`), pad columns are excluded from the attention
+/// window and the KV cache, and the per-row arithmetic replays a solo
+/// run of the same prompt operation for operation — packed output is
+/// **bit-identical** to running each row alone (see
+/// `runtime::native`'s ragged tests).
+#[derive(Clone, Debug)]
+pub struct PackedPrompts {
+    /// Row-major `rows × max_len` token buffer, left-padded with 0.
+    pub tokens: Vec<i32>,
+    /// True prompt length per row (`1 ..= max_len`).
+    pub row_lens: Vec<usize>,
+}
+
+impl PackedPrompts {
+    /// Equal-length pack — the pre-ragged `prefill` calling convention
+    /// (`tokens` row-major `rows × (tokens.len()/rows)`, no pad slots).
+    pub fn equal(tokens: &[i32], rows: usize) -> Result<Self> {
+        ensure!(rows > 0 && !tokens.is_empty()
+                    && tokens.len() % rows == 0,
+                "token buffer {} not divisible into {rows} equal rows",
+                tokens.len());
+        let t = tokens.len() / rows;
+        Ok(PackedPrompts { tokens: tokens.to_vec(),
+                           row_lens: vec![t; rows] })
+    }
+
+    /// Left-pad a mixed-length batch to its longest prompt. Rows must
+    /// be non-empty (the server substitutes a pad token for an empty
+    /// prompt before packing — see `Server::prepare_prompt`).
+    pub fn pack<P: AsRef<[i32]>>(prompts: &[P]) -> Result<Self> {
+        ensure!(!prompts.is_empty(), "cannot pack zero prompts");
+        let row_lens: Vec<usize> =
+            prompts.iter().map(|p| p.as_ref().len()).collect();
+        for (b, &l) in row_lens.iter().enumerate() {
+            ensure!(l > 0, "prompt row {b} is empty");
+        }
+        let max_len = row_lens.iter().copied().max().unwrap();
+        let mut tokens = vec![0i32; prompts.len() * max_len];
+        for (b, p) in prompts.iter().enumerate() {
+            let p = p.as_ref();
+            let off = max_len - p.len();
+            tokens[b * max_len + off..(b + 1) * max_len]
+                .copy_from_slice(p);
+        }
+        Ok(PackedPrompts { tokens, row_lens })
+    }
+
+    /// Number of packed rows.
+    pub fn rows(&self) -> usize {
+        self.row_lens.len()
+    }
+
+    /// Padded width of the pack (the longest row's length).
+    pub fn max_len(&self) -> usize {
+        match self.row_lens.len() {
+            0 => 0,
+            rows => self.tokens.len() / rows,
+        }
+    }
+
+    /// Pad slots at the head of row `b`. Saturating so a hand-built
+    /// pack that fails [`Self::validate`] (a row length exceeding the
+    /// buffer width) reads as 0 pads instead of underflowing.
+    pub fn pad_of(&self, b: usize) -> usize {
+        self.max_len().saturating_sub(self.row_lens[b])
+    }
+
+    /// True when at least one row is shorter than the widest.
+    pub fn is_ragged(&self) -> bool {
+        let m = self.max_len();
+        self.row_lens.iter().any(|&l| l != m)
+    }
+
+    /// Structural invariants; backends call this before executing.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.row_lens.is_empty(), "pack has no rows");
+        let rows = self.row_lens.len();
+        ensure!(!self.tokens.is_empty()
+                    && self.tokens.len() % rows == 0,
+                "token buffer {} not divisible into {rows} rows",
+                self.tokens.len());
+        let t = self.tokens.len() / rows;
+        for (b, &l) in self.row_lens.iter().enumerate() {
+            ensure!((1..=t).contains(&l),
+                    "row {b} length {l} outside 1..={t}");
+        }
+        Ok(())
+    }
+}
 
 /// One model parameter as the serving runtime stores it: either a dense
 /// tensor or an SLR-compressed linear kept factored as (U, s, V) plus a
@@ -209,19 +321,27 @@ pub trait Backend {
         false
     }
 
-    /// Run the prompt once, returning logits for every prompt position
-    /// (`rows × t_prompt` flattened to `(rows·t_prompt, vocab)`) plus a
-    /// KV cache positioned after the prompt. `tokens` is row-major
-    /// `rows × t_prompt` with `t_prompt ≤ cfg.seq_len`.
+    /// Run a (possibly ragged) packed prompt batch once, returning
+    /// logits for every buffer position (`rows × max_len` flattened to
+    /// `(rows·max_len, vocab)`; pad positions are all-zero rows) plus a
+    /// KV cache positioned after each row's true prompt. Row lengths
+    /// may differ ([`PackedPrompts`]); `max_len ≤ cfg.seq_len` and
+    /// every row's generation headroom matches a solo run of that
+    /// prompt.
     fn prefill(&self, cfg: &ModelConfig, params: &ModelParams,
-               tokens: &[i32], rows: usize) -> Result<(Tensor, KvCache)> {
-        let _ = (cfg, params, tokens, rows);
+               prompts: &PackedPrompts) -> Result<(Tensor, KvCache)> {
+        let _ = (cfg, params, prompts);
         bail!("backend `{}` does not support incremental decoding",
               self.name())
     }
 
     /// Append one token per row and return `(rows, vocab)` logits for
-    /// the new positions, advancing the cache by one.
+    /// the new positions, advancing each row's cache length by one.
+    /// A negative token marks its row *finished*: nothing is appended,
+    /// the row stops attending (no per-row attention work is done) and
+    /// its logits row comes back all-zero — this is how a ragged pack
+    /// keeps decoding rows with generation budget left after shorter
+    /// rows are done. At least one row must still be active.
     fn decode_step(&self, cfg: &ModelConfig, params: &ModelParams,
                    cache: &mut KvCache, last: &[i32]) -> Result<Tensor> {
         let _ = (cfg, params, cache, last);
@@ -354,14 +474,16 @@ impl Runtime {
         self.backend.supports_incremental()
     }
 
-    /// One prompt pass returning per-position logits + a KV cache.
+    /// One packed (possibly ragged) prompt pass returning per-position
+    /// logits + a KV cache. See [`Backend::prefill`].
     pub fn prefill(&self, cfg: &ModelConfig, params: &ModelParams,
-                   tokens: &[i32], rows: usize)
+                   prompts: &PackedPrompts)
                    -> Result<(Tensor, KvCache)> {
-        self.backend.prefill(cfg, params, tokens, rows)
+        self.backend.prefill(cfg, params, prompts)
     }
 
-    /// One single-position decode step per row against the KV cache.
+    /// One single-position decode step per row against the KV cache
+    /// (negative token = finished row). See [`Backend::decode_step`].
     pub fn decode_step(&self, cfg: &ModelConfig, params: &ModelParams,
                        cache: &mut KvCache, last: &[i32])
                        -> Result<Tensor> {
@@ -413,6 +535,35 @@ mod tests {
                 assert_eq!(t, &dense[i]);
             }
         }
+    }
+
+    #[test]
+    fn packed_prompts_layout_and_validation() {
+        // Equal-length constructor: the pre-ragged convention.
+        let eq = PackedPrompts::equal(&[1, 2, 3, 4, 5, 6], 2).unwrap();
+        assert_eq!((eq.rows(), eq.max_len()), (2, 3));
+        assert!(!eq.is_ragged());
+        assert_eq!(eq.row_lens, vec![3, 3]);
+        assert_eq!(eq.pad_of(0), 0);
+        assert!(eq.validate().is_ok());
+        assert!(PackedPrompts::equal(&[1, 2, 3], 2).is_err());
+        assert!(PackedPrompts::equal(&[], 1).is_err());
+
+        // Ragged pack: left-padded with 0, last column always real.
+        let pk = PackedPrompts::pack(&[vec![7, 8, 9], vec![5]]).unwrap();
+        assert!(pk.is_ragged());
+        assert_eq!(pk.tokens, vec![7, 8, 9, 0, 0, 5]);
+        assert_eq!(pk.row_lens, vec![3, 1]);
+        assert_eq!((pk.pad_of(0), pk.pad_of(1)), (0, 2));
+        assert!(pk.validate().is_ok());
+        assert!(PackedPrompts::pack::<Vec<i32>>(&[]).is_err());
+        assert!(PackedPrompts::pack(&[vec![1], vec![]]).is_err());
+
+        // validate() rejects hand-built inconsistent packs.
+        let bad = PackedPrompts { tokens: vec![1, 2], row_lens: vec![3] };
+        assert!(bad.validate().is_err());
+        let bad = PackedPrompts { tokens: vec![1, 2], row_lens: vec![0, 1] };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -15,11 +15,12 @@
 //! pin loss and per-parameter gradient norms for two geometries).
 
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, ensure, Result};
 
-use super::{Backend, ModelParams, ParamValue};
+use super::{Backend, ModelParams, PackedPrompts, ParamValue};
 use crate::config::ModelConfig;
 use crate::linalg::{axpy8, dot8, matmul, matmul_nt, matmul_tn};
 use crate::slr::FactoredLinear;
@@ -76,7 +77,8 @@ impl Backend for NativeBackend {
                 tokens.len());
         let mv = resolve_model(cfg, params)?;
         let mut cache = KvCache::new(cfg, rows);
-        let logits = forward_model(cfg, &mv, &mut cache, tokens, rows)?;
+        let logits =
+            forward_model(cfg, &mv, &mut cache, tokens, rows, None)?;
         logits.reshape(&[rows, t, cfg.vocab])
     }
 
@@ -85,10 +87,13 @@ impl Backend for NativeBackend {
     }
 
     fn prefill(&self, cfg: &ModelConfig, params: &ModelParams,
-               tokens: &[i32], rows: usize) -> Result<(Tensor, KvCache)> {
+               prompts: &PackedPrompts) -> Result<(Tensor, KvCache)> {
+        prompts.validate()?;
+        let rows = prompts.rows();
         let mv = resolve_model(cfg, params)?;
         let mut cache = KvCache::new(cfg, rows);
-        let logits = forward_model(cfg, &mv, &mut cache, tokens, rows)?;
+        let logits = forward_model(cfg, &mv, &mut cache, &prompts.tokens,
+                                   rows, Some(prompts.row_lens.as_slice()))?;
         Ok((logits, cache))
     }
 
@@ -97,8 +102,15 @@ impl Backend for NativeBackend {
         ensure!(last.len() == cache.rows(),
                 "decode_step expects one token per row ({} != {})",
                 last.len(), cache.rows());
+        // Negative tokens mark finished rows: no append, no attention,
+        // all-zero logits row (see `Backend::decode_step`).
+        let active: Vec<usize> =
+            last.iter().map(|&tok| usize::from(tok >= 0)).collect();
+        ensure!(active.iter().any(|&a| a == 1),
+                "decode_step called with every row finished");
         let mv = resolve_model(cfg, params)?;
-        forward_model(cfg, &mv, cache, last, last.len())
+        forward_model(cfg, &mv, cache, last, last.len(),
+                      Some(active.as_slice()))
     }
 }
 
@@ -403,13 +415,27 @@ fn attend(qr: Tensor, kr: Tensor, v: Tensor, scale: f32) -> HeadState {
 /// attention kernel shared by the dense inference forward, prefill and
 /// KV-cached decode.
 ///
-/// Streams over the `prefix` causally-visible keys with a running max
+/// Streams over the causally-visible key `window` with a running max
 /// (first pass: scores via [`dot8`] and the max in one sweep), then a
 /// running denominator (second pass: exponentials accumulate into `z`
 /// in key order), then accumulates `probs·V` into `orow` (which the
 /// caller provides zeroed) one key at a time via [`axpy8`] — flash-
 /// attention-style in memory profile: no (t×t) score or probability
 /// matrix ever exists, only the O(t) scratch `srow`.
+///
+/// # Per-row causal window
+///
+/// `window.start` is the window's first key row: keys before it are
+/// *never read* (not merely weighted zero). It exists for ragged
+/// packed prefill, where a row's keys can sit at a pad offset inside a
+/// shared left-padded buffer; because the softmax and the `axpy8`
+/// accumulation run only over the unmasked suffix, the arithmetic is
+/// the same rounding-step sequence a solo run performs over keys
+/// `0..window.len()` — packed ≡ solo **bit-exact**, pinned by
+/// `windowed_attention_matches_shifted_keys`. The shipped [`KvCache`]
+/// compacts pad slots out at append time (a row's keys always start at
+/// cache row 0), so its callers pass windows starting at 0; a nonzero
+/// start is the seam for attending a padded buffer in place.
 ///
 /// # Bit-consistency contract
 ///
@@ -424,16 +450,17 @@ fn attend(qr: Tensor, kr: Tensor, v: Tensor, scale: f32) -> HeadState {
 /// softmax would give up that guarantee for no additional memory win,
 /// which is why the score pass and the exp pass stay separate.
 ///
-/// `keys` rows must already be RoPE-rotated; rows `0..prefix` of
+/// `keys` rows must already be RoPE-rotated; only the `window` rows of
 /// `keys`/`vals` are read (extra capacity rows, e.g. a not-yet-full
 /// [`KvCache`], are ignored).
 fn attn_stream_row(qrot: &[f32], keys: &Tensor, vals: &Tensor,
-                   prefix: usize, scale: f32, srow: &mut [f32],
-                   orow: &mut [f32]) {
-    let s = &mut srow[..prefix];
+                   window: Range<usize>, scale: f32,
+                   srow: &mut [f32], orow: &mut [f32]) {
+    let start = window.start;
+    let s = &mut srow[..window.end - start];
     let mut m = f32::NEG_INFINITY;
     for (j, sv) in s.iter_mut().enumerate() {
-        *sv = dot8(qrot, keys.row(j)) * scale;
+        *sv = dot8(qrot, keys.row(start + j)) * scale;
         m = m.max(*sv);
     }
     let mut z = 0.0f32;
@@ -448,7 +475,7 @@ fn attn_stream_row(qrot: &[f32], keys: &Tensor, vals: &Tensor,
         if pv == 0.0 {
             continue; // fully underflowed tail weight
         }
-        axpy8(orow, vals.row(j), pv);
+        axpy8(orow, vals.row(start + j), pv);
     }
 }
 
@@ -527,8 +554,8 @@ fn forward_resolved(cfg: &ModelConfig, pv: &ParamView, tokens: &[i32],
                 let mut ob = Tensor::zeros(&[t, hd]);
                 let mut srow = vec![0.0f32; t];
                 for p in 0..t {
-                    attn_stream_row(qb.row(p), &kb, &vb, p + 1, scale,
-                                    &mut srow, ob.row_mut(p));
+                    attn_stream_row(qb.row(p), &kb, &vb, 0..p + 1,
+                                    scale, &mut srow, ob.row_mut(p));
                 }
                 ob
             });
@@ -570,11 +597,22 @@ fn forward_resolved(cfg: &ModelConfig, pv: &ParamView, tokens: &[i32],
 
 /// KV cache for incremental decoding: per layer and per (row, head),
 /// the post-RoPE keys and raw values of every position seen so far.
-/// Rows advance in lockstep (one appended token per row per step), so a
-/// single `len` covers the whole batch. Capacity is `cfg.seq_len`.
+/// Each row advances independently (`lens`) so a ragged packed prefill
+/// leaves every row positioned after its *true* prompt length, and a
+/// finished row can sit still while its packmates keep decoding.
+/// Capacity is `cfg.seq_len` per row.
+///
+/// The cache layout is always *compacted*: row `b`'s keys occupy cache
+/// rows `0..lens[b]` with the rope angle of their true positions, even
+/// when the tokens arrived left-padded inside a wider buffer — pad
+/// slots are skipped at append time, never stored, never attended. A
+/// row of a ragged pack therefore has the same cache bytes, the same
+/// remaining capacity and the same attention reads as a solo run of
+/// that prompt.
 pub struct KvCache {
     rows: usize,
-    len: usize,
+    /// Positions filled so far, per row.
+    lens: Vec<usize>,
     cap: usize,
     heads: usize,
     /// `k[layer][row * heads + head]` is a (cap, hd) tensor of rotated
@@ -602,7 +640,7 @@ impl KvCache {
         };
         KvCache {
             rows,
-            len: 0,
+            lens: vec![0; rows],
             cap,
             heads,
             k: alloc(),
@@ -611,14 +649,26 @@ impl KvCache {
         }
     }
 
-    /// Positions filled so far (per row).
+    /// Positions filled so far by the furthest-advanced row. Rows of an
+    /// equal-length pack advance in lockstep, so this is *the* length
+    /// there; ragged packs differ per row — see [`Self::row_len`].
     pub fn len(&self) -> usize {
-        self.len
+        self.lens.iter().copied().max().unwrap_or(0)
     }
 
-    /// True when no positions have been appended yet.
+    /// Positions filled so far by row `b`.
+    pub fn row_len(&self, b: usize) -> usize {
+        self.lens[b]
+    }
+
+    /// Per-row filled lengths.
+    pub fn row_lens(&self) -> &[usize] {
+        &self.lens
+    }
+
+    /// True when no positions have been appended to any row yet.
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.lens.iter().all(|&l| l == 0)
     }
 
     /// Number of sequences this cache was built for.
@@ -807,15 +857,29 @@ fn rope_row(src: &[f32], dst: &mut [f32], cos: &[f32], sin: &[f32],
     }
 }
 
-/// Incremental forward: append `t_new = tokens.len() / rows` positions
-/// per row to the cache and return flat `(rows·t_new, vocab)` logits
-/// for the new positions. With an empty cache and `t_new = seq_len`
-/// this reproduces the dense [`forward`] bit for bit (same primitives,
-/// same accumulation order); with `t_new = 1` it is the O(T) decode
-/// step. Queries at global position p attend keys 0..=p, so causality
-/// matches the training-path attention exactly.
+/// Incremental forward: append up to `t_new = tokens.len() / rows` new
+/// positions per row to the cache and return flat `(rows·t_new, vocab)`
+/// logits for the new buffer positions. With an empty cache, equal row
+/// lengths and `t_new = seq_len` this reproduces the dense [`forward`]
+/// bit for bit (same primitives, same accumulation order); with
+/// `t_new = 1` it is the O(T) decode step.
+///
+/// `new_lens` makes the call *ragged*: `new_lens[b]` is the number of
+/// real tokens for row `b`, right-aligned in its `t_new`-wide slice
+/// (the `t_new − new_lens[b]` leading slots are left-pad, skipped
+/// everywhere: not embedded, not attended as queries, and never
+/// appended to the cache — their logits rows come back all-zero).
+/// `None` means every slot is real. Per row, real buffer column
+/// `off_b + j` lands at the row's true position `row_len(b) + j` with
+/// the rope angle of that true position, and its query attends cache
+/// keys `0..=pos` — exactly the operation sequence of a solo run of
+/// that row, which is why packed and solo decode are bit-identical
+/// (`ragged_prefill_is_bit_identical_to_solo` pins this). A row with
+/// `new_lens[b] = 0` is skipped entirely (how finished rows of a pack
+/// stop attending while the rest keep decoding).
 fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
-                 tokens: &[i32], rows: usize) -> Result<Tensor> {
+                 tokens: &[i32], rows: usize,
+                 new_lens: Option<&[usize]>) -> Result<Tensor> {
     let (d, heads) = (cfg.d_model, cfg.n_heads);
     let hd = cfg.d_head();
     ensure!(hd % 2 == 0, "d_head must be even for rotary embeddings");
@@ -829,21 +893,45 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
             "token buffer {} not divisible into {rows} rows",
             tokens.len());
     let t_new = tokens.len() / rows;
-    let p0 = cache.len();
-    ensure!(p0 + t_new <= cache.capacity(),
-            "kv cache overflow: {p0} + {t_new} > capacity {}",
-            cache.capacity());
-    for &tok in tokens {
-        ensure!(tok >= 0 && (tok as usize) < cfg.vocab,
-                "token {tok} out of vocab range 0..{}", cfg.vocab);
+    let full;
+    let new_lens: &[usize] = match new_lens {
+        Some(l) => l,
+        None => {
+            full = vec![t_new; rows];
+            &full
+        }
+    };
+    ensure!(new_lens.len() == rows,
+            "{} row lengths for {rows} rows", new_lens.len());
+    for (b, &l) in new_lens.iter().enumerate() {
+        ensure!(l <= t_new,
+                "row {b}: {l} new tokens exceed buffer width {t_new}");
+        ensure!(cache.lens[b] + l <= cache.capacity(),
+                "kv cache overflow on row {b}: {} + {l} > capacity {}",
+                cache.lens[b], cache.capacity());
+    }
+    // Validate the real token slots only — pad slots are never read.
+    for b in 0..rows {
+        let off = t_new - new_lens[b];
+        for &tok in &tokens[b * t_new + off..(b + 1) * t_new] {
+            ensure!(tok >= 0 && (tok as usize) < cfg.vocab,
+                    "token {tok} out of vocab range 0..{}", cfg.vocab);
+        }
     }
     let n = rows * t_new;
     let scale = 1.0 / (hd as f32).sqrt();
 
-    // Embedding lookup (factored-aware).
+    // Embedding lookup (factored-aware). Pad slots stay zero; zero
+    // rows propagate to zero rows through every per-position op
+    // (RMSNorm, the linears, SwiGLU), so pads cost GEMM cycles but
+    // never touch a real position's values.
     let mut x = Tensor::zeros(&[n, d]);
-    for (i, &tok) in tokens.iter().enumerate() {
-        mv.embed.row_into(tok as usize, x.row_mut(i));
+    for b in 0..rows {
+        let off = t_new - new_lens[b];
+        for i in off..t_new {
+            let tok = tokens[b * t_new + i] as usize;
+            mv.embed.row_into(tok, x.row_mut(b * t_new + i));
+        }
     }
 
     for (li, lp) in mv.layers.iter().enumerate() {
@@ -852,13 +940,17 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
         let k = lp.wk.matmul_t(&xn1);
         let v = lp.wv.matmul_t(&xn1);
 
-        // Append rotated K and raw V for the new positions.
+        // Append rotated K and raw V for the new *real* positions.
+        // Writes compact the left-pad away: buffer column `off + j` of
+        // row b lands at cache row `lens[b] + j` — the row's true
+        // position — with the rope angle of that true position.
         for b in 0..rows {
+            let off = t_new - new_lens[b];
             for h in 0..heads {
                 let kc = &mut cache.k[li][b * heads + h];
                 let vc = &mut cache.v[li][b * heads + h];
-                for i in 0..t_new {
-                    let pos = p0 + i;
+                for i in off..t_new {
+                    let pos = cache.lens[b] + (i - off);
                     let ksrc = &k.row(b * t_new + i)[h * hd..(h + 1) * hd];
                     rope_row(ksrc, kc.row_mut(pos), &cache.rope.cos,
                              &cache.rope.sin, pos);
@@ -870,31 +962,43 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
 
         // Causal attention of the new queries over the cached keys —
         // the fused streaming-softmax kernel, shared with the dense
-        // no-grad forward.
-        let total = p0 + t_new;
-        let flops = 2 * rows * heads * t_new * total * hd * 2;
+        // no-grad forward. Pad columns are skipped as queries, and the
+        // compacted cache holds no pad keys, so masked slots are never
+        // read on either side of the dot product.
+        let max_total = (0..rows)
+            .map(|b| cache.lens[b] + new_lens[b])
+            .max()
+            .unwrap_or(0);
+        let flops = 2 * rows * heads * t_new * max_total * hd * 2;
         let workers = if flops < (1 << 22) { 1 } else { default_workers() };
-        let bh: Vec<usize> = (0..rows * heads).collect();
+        // Finished/all-pad rows (new_lens = 0) schedule no head tasks
+        // at all — a mostly-drained ragged decode pack costs only its
+        // active rows.
+        let bh: Vec<usize> = (0..rows * heads)
+            .filter(|&idx| new_lens[idx / heads] > 0)
+            .collect();
         let cache_ref: &KvCache = cache;
         let head_outs = parallel_map(&bh, workers, |&idx| {
             let (b, h) = (idx / heads, idx % heads);
+            let off = t_new - new_lens[b];
             let kc = &cache_ref.k[li][b * heads + h];
             let vc = &cache_ref.v[li][b * heads + h];
             let mut o = Tensor::zeros(&[t_new, hd]);
             let mut qrot = vec![0.0f32; hd];
-            let mut srow = vec![0.0f32; total];
-            for i in 0..t_new {
-                let pos = p0 + i;
+            let mut srow =
+                vec![0.0f32; cache_ref.lens[b] + new_lens[b]];
+            for i in off..t_new {
+                let pos = cache_ref.lens[b] + (i - off);
                 let qsrc = &q.row(b * t_new + i)[h * hd..(h + 1) * hd];
                 rope_row(qsrc, &mut qrot, &cache_ref.rope.cos,
                          &cache_ref.rope.sin, pos);
-                attn_stream_row(&qrot, kc, vc, pos + 1, scale,
+                attn_stream_row(&qrot, kc, vc, 0..pos + 1, scale,
                                 &mut srow, o.row_mut(i));
             }
             o
         });
         let mut o = Tensor::zeros(&[n, d]);
-        for (idx, ob) in head_outs.iter().enumerate() {
+        for (&idx, ob) in bh.iter().zip(&head_outs) {
             head_scatter(&mut o, ob, idx / heads, idx % heads, t_new, hd);
         }
 
@@ -911,7 +1015,9 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
         x_out.add_assign(&x_mid);
         x = x_out;
     }
-    cache.len += t_new;
+    for (len, &l) in cache.lens.iter_mut().zip(new_lens) {
+        *len += l;
+    }
 
     let (xnf, _) = rmsnorm_fwd(&x, mv.final_norm, cfg.norm_eps);
     Ok(mv.lm_head.matmul_t(&xnf))
@@ -1203,8 +1309,8 @@ mod tests {
 
         let mp = ModelParams::from_dense(&params);
         let plen = t / 2;
-        let (pre, mut cache) =
-            b.prefill(&cfg, &mp, &tokens[..plen], 1).unwrap();
+        let pack = PackedPrompts::equal(&tokens[..plen], 1).unwrap();
+        let (pre, mut cache) = b.prefill(&cfg, &mp, &pack).unwrap();
         assert_eq!(pre.shape, vec![plen, cfg.vocab]);
         assert_eq!(cache.len(), plen);
         for p in 0..plen {
@@ -1250,22 +1356,133 @@ mod tests {
         assert!(d < 1e-4, "factored logits diverged by {d}");
     }
 
+    /// The per-row causal window: attending keys `start..end` of a
+    /// padded buffer must be **bit-identical** to attending the same
+    /// keys compacted to `0..(end−start)` — the kernel-level form of
+    /// the ragged-packing guarantee (pad columns shift indices, never
+    /// arithmetic).
+    #[test]
+    fn windowed_attention_matches_shifted_keys() {
+        use crate::util::prop;
+        prop::check("attn_window_start", 24, |rng| {
+            let t = prop::dim(rng, 1, 20);
+            let off = prop::dim(rng, 0, 6);
+            let hd = 2 * prop::dim(rng, 1, 8);
+            let q = Tensor::randn(&[1, hd], rng, 1.0);
+            let k = Tensor::randn(&[t, hd], rng, 1.0);
+            let v = Tensor::randn(&[t, hd], rng, 1.0);
+            // Shift K/V down by `off` junk rows.
+            let mut kp = Tensor::randn(&[off + t, hd], rng, 10.0);
+            let mut vp = Tensor::randn(&[off + t, hd], rng, 10.0);
+            for p in 0..t {
+                kp.row_mut(off + p).copy_from_slice(k.row(p));
+                vp.row_mut(off + p).copy_from_slice(v.row(p));
+            }
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut srow = vec![0.0f32; off + t];
+            let mut want = vec![0.0f32; hd];
+            attn_stream_row(q.row(0), &k, &v, 0..t, scale, &mut srow,
+                            &mut want);
+            let mut got = vec![0.0f32; hd];
+            attn_stream_row(q.row(0), &kp, &vp, off..off + t, scale,
+                            &mut srow, &mut got);
+            assert_eq!(want, got,
+                       "t={t} off={off} hd={hd}: window start changed \
+                        the arithmetic");
+        });
+    }
+
+    /// A ragged left-padded pack must reproduce each row's solo prefill
+    /// bit for bit: logits at every real position, the compacted cache
+    /// contents, and the decode steps that follow — including a
+    /// finished row going idle mid-pack.
+    #[test]
+    fn ragged_prefill_is_bit_identical_to_solo() {
+        let cfg = tiny2_cfg();
+        let t = cfg.seq_len;
+        let mp = ModelParams::from_dense(&cfg.init_params(7));
+        let b = NativeBackend::new();
+        let prompts: Vec<Vec<i32>> = vec![
+            golden_tokens(cfg.vocab, t - 1),        // longest: no pads
+            vec![5],                                // all pads but one
+            golden_tokens(cfg.vocab, t / 2),
+        ];
+        let pack = PackedPrompts::pack(&prompts).unwrap();
+        assert!(pack.is_ragged());
+        let t_max = pack.max_len();
+        assert_eq!(t_max, t - 1);
+        let (packed, mut pcache) = b.prefill(&cfg, &mp, &pack).unwrap();
+        assert_eq!(packed.shape, vec![3 * t_max, cfg.vocab]);
+
+        let mut solo_caches = Vec::new();
+        for (r, p) in prompts.iter().enumerate() {
+            let solo_pack = PackedPrompts::equal(p, 1).unwrap();
+            let (solo, scache) =
+                b.prefill(&cfg, &mp, &solo_pack).unwrap();
+            let off = t_max - p.len();
+            for i in 0..p.len() {
+                assert_eq!(packed.row(r * t_max + off + i), solo.row(i),
+                           "row {r} position {i}: packed logits not \
+                            bit-identical to solo");
+            }
+            // Pad positions are all-zero logits rows.
+            for i in 0..off {
+                assert!(packed.row(r * t_max + i).iter()
+                            .all(|&x| x == 0.0),
+                        "row {r} pad position {i} has nonzero logits");
+            }
+            assert_eq!(pcache.row_len(r), p.len());
+            solo_caches.push(scache);
+        }
+        assert_eq!(pcache.len(), t - 1);
+
+        // Decode: row 1 finishes after one step (negative sentinel) —
+        // rows 0 and 2 must keep matching their solo runs exactly.
+        let step = b.decode_step(&cfg, &mp, &mut pcache, &[1, 2, 3])
+            .unwrap();
+        for (r, &tok) in [1i32, 2, 3].iter().enumerate() {
+            let solo = b.decode_step(&cfg, &mp, &mut solo_caches[r],
+                                     &[tok]).unwrap();
+            assert_eq!(step.row(r), solo.row(0),
+                       "decode row {r} diverged from solo");
+        }
+        // Row 0 is at capacity now; rows 1 (finished) and 2 continue.
+        let before = pcache.row_len(1);
+        let step2 = b.decode_step(&cfg, &mp, &mut pcache, &[-1, -1, 4])
+            .unwrap();
+        assert_eq!(pcache.row_len(1), before,
+                   "finished row advanced its cache");
+        assert!(step2.row(0).iter().all(|&x| x == 0.0)
+                    && step2.row(1).iter().all(|&x| x == 0.0),
+                "finished rows must return all-zero logits");
+        let solo2 = b.decode_step(&cfg, &mp, &mut solo_caches[2], &[4])
+            .unwrap();
+        assert_eq!(step2.row(2), solo2.row(0),
+                   "active row diverged beside finished packmates");
+    }
+
     #[test]
     fn incremental_rejects_malformed_calls() {
         let cfg = tiny_cfg();
         let params = ModelParams::from_dense(&cfg.init_params(0));
         let b = NativeBackend::new();
         // Rows mismatch between cache and decode call.
-        let (_, mut cache) =
-            b.prefill(&cfg, &params, &[1, 2, 3], 1).unwrap();
+        let pack = PackedPrompts::equal(&[1, 2, 3], 1).unwrap();
+        let (_, mut cache) = b.prefill(&cfg, &params, &pack).unwrap();
         assert!(b.decode_step(&cfg, &params, &mut cache, &[1, 2])
             .is_err());
         // Token out of range.
         assert!(b.decode_step(&cfg, &params, &mut cache,
                               &[cfg.vocab as i32]).is_err());
+        // Every row finished is a caller bug, not a no-op.
+        assert!(b.decode_step(&cfg, &params, &mut cache, &[-1]).is_err());
         // Prefill longer than seq_len.
         let long: Vec<i32> = vec![0; cfg.seq_len + 1];
-        assert!(b.prefill(&cfg, &params, &long, 1).is_err());
+        let long_pack = PackedPrompts::equal(&long, 1).unwrap();
+        assert!(b.prefill(&cfg, &params, &long_pack).is_err());
+        // A hand-built pack whose row_lens exceed the buffer width.
+        let bad = PackedPrompts { tokens: vec![1, 2], row_lens: vec![3] };
+        assert!(b.prefill(&cfg, &params, &bad).is_err());
         // Norm scales cannot be factored.
         let mut bad = ModelParams::from_dense(&cfg.init_params(0));
         let nidx = cfg.param_index("final_norm").unwrap();
@@ -1326,7 +1543,7 @@ mod tests {
             let mut srow = vec![0.0f32; t];
             let mut o = Tensor::zeros(&[t, hd]);
             for p in 0..t {
-                attn_stream_row(q.row(p), &k, &v, p + 1, scale,
+                attn_stream_row(q.row(p), &k, &v, 0..p + 1, scale,
                                 &mut srow, o.row_mut(p));
             }
             let d: f32 = o.data.iter().zip(&hs.o.data)

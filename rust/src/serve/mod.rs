@@ -8,8 +8,11 @@
 //! paper's deployment memory claim holds in the resident process, not
 //! just on paper ([`VariantSpec::resident_bytes`]). Decoding is
 //! KV-cached: one prefill over the prompt, then O(T) single-position
-//! steps, with same-variant equal-length requests packed into one
-//! rows>1 prefill. Threading: the PJRT backend is not `Send` (and the
+//! steps, with *all* same-variant requests — mixed prompt lengths
+//! included — packed into one ragged rows>1 prefill (left-pad +
+//! mask; see [`crate::runtime::PackedPrompts`]), bit-identical to
+//! decoding each request alone. [`ServeStats`] reports how batches
+//! actually packed. Threading: the PJRT backend is not `Send` (and the
 //! native backend parallelizes internally), so the server runs on its
 //! owner thread and talks to clients over std::sync::mpsc channels
 //! (the offline vendor set has no tokio; DESIGN.md §3).
@@ -20,4 +23,5 @@ pub mod server;
 
 pub use request::{Request, Response};
 pub use batcher::Batcher;
-pub use server::{argmax_logit, Server, ServerOptions, VariantSpec};
+pub use server::{argmax_logit, Server, ServerOptions, ServeStats,
+                 VariantSpec};

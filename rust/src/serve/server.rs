@@ -8,8 +8,13 @@
 //! makes the paper's deployment memory claim measurable here
 //! ([`VariantSpec::resident_bytes`]). Decoding does one prefill over
 //! the prompt and then O(T) single-position steps against a
-//! [`crate::runtime::KvCache`]; same-variant requests with equal
-//! prompt lengths are packed into one rows>1 prefill.
+//! [`crate::runtime::KvCache`]. Same-variant requests pack into one
+//! ragged rows>1 prefill *regardless of prompt length*: prompts are
+//! left-padded to the group's longest row and the runtime masks pads
+//! out ([`crate::runtime::PackedPrompts`]), so a mixed-length batch
+//! costs one prefill per routed variant instead of one per (variant,
+//! length) pair — with output tokens identical to solo decoding
+//! ([`ServeStats`] counts how much packing actually happened).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
@@ -20,7 +25,7 @@ use anyhow::{ensure, Result};
 use super::batcher::Batcher;
 use super::request::{Request, Response};
 use crate::config::ModelConfig;
-use crate::runtime::{ModelParams, ParamValue, Runtime};
+use crate::runtime::{ModelParams, PackedPrompts, ParamValue, Runtime};
 use crate::slr::{hpa, SlrBlock};
 use crate::tensor::Tensor;
 
@@ -76,6 +81,41 @@ impl Default for ServerOptions {
     }
 }
 
+/// Packing counters the serving loop accumulates across its lifetime —
+/// the observable form of "mixed-length batches pack". Reproducible
+/// run to run: batches are grouped by routed variant index only and
+/// groups execute in ascending variant order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Non-empty batches pulled from the batcher.
+    pub batches: u64,
+    /// Variant groups executed (one packed decode each). A batch makes
+    /// exactly one group per *distinct routed variant* — prompt
+    /// lengths no longer split groups.
+    pub groups: u64,
+    /// Requests that shared a rows>1 packed prefill.
+    pub packed_rows: u64,
+    /// Groups that packed ≥2 distinct prompt lengths into one ragged
+    /// prefill (0 on backends without incremental decoding, which
+    /// serve requests one by one).
+    pub mixed_len_groups: u64,
+}
+
+impl ServeStats {
+    /// Mean groups per batch: 1.0 means every batch fused into a
+    /// single prefill+decode; at most `variants.len()` by
+    /// construction. The seed grouping keyed by (variant, prompt
+    /// length), so this could reach the batch size under mixed-length
+    /// traffic.
+    pub fn groups_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.groups as f64 / self.batches as f64
+        }
+    }
+}
+
 pub struct Server<'a> {
     rt: &'a Runtime,
     cfg: ModelConfig,
@@ -83,6 +123,8 @@ pub struct Server<'a> {
     pub variants: Vec<VariantSpec>,
     batcher: Batcher,
     pub served: u64,
+    /// Packing counters across every batch this server has run.
+    pub stats: ServeStats,
 }
 
 /// NaN-safe greedy argmax over one logit row. `total_cmp` gives a total
@@ -140,6 +182,7 @@ impl<'a> Server<'a> {
             variants,
             batcher: Batcher::new(opts.max_batch, opts.max_wait),
             served: 0,
+            stats: ServeStats::default(),
         })
     }
 
@@ -206,11 +249,18 @@ impl<'a> Server<'a> {
         seq
     }
 
-    /// KV-cached greedy decode for a pack of same-length prompts (one
-    /// prefill at rows = prompts.len(), then one single-position step
-    /// per emitted token). Prompts must be pre-clamped with
-    /// [`Self::prepare_prompt`]. Emits exactly the tokens the
-    /// full-recompute path would.
+    /// KV-cached greedy decode for a pack of prompts of *any* length
+    /// mix: one ragged left-padded prefill at rows = prompts.len()
+    /// ([`PackedPrompts::pack`]), then one single-position step per
+    /// emitted token, with rows that exhaust their budget going idle
+    /// (negative sentinel) while longer-budget rows keep decoding.
+    /// Prompts must be pre-clamped with [`Self::prepare_prompt`].
+    ///
+    /// Each row emits exactly `min(max_new, seq_len − prompt_len)`
+    /// tokens — the same budget, and bit-for-bit the same tokens, as a
+    /// solo run of that prompt (the runtime masks pads out of
+    /// attention, offsets rope per row and compacts the KV cache, so
+    /// packing is invisible to the output).
     pub fn generate_cached(&self, variant: &VariantSpec,
                            prompts: &[Vec<u32>], max_new: &[usize])
                            -> Result<Vec<Vec<u32>>> {
@@ -221,46 +271,58 @@ impl<'a> Server<'a> {
                 "{} prompts vs {} max_new entries", prompts.len(),
                 max_new.len());
         let t = self.cfg.seq_len;
-        let plen = prompts[0].len();
-        ensure!(plen >= 1 && plen < t,
-                "prompt length {plen} outside 1..{t} (prepare_prompt?)");
-        ensure!(prompts.iter().all(|p| p.len() == plen),
-                "cached packs require equal prompt lengths");
+        for p in prompts {
+            ensure!(!p.is_empty() && p.len() < t,
+                    "prompt length {} outside 1..{t} (prepare_prompt?)",
+                    p.len());
+        }
         let rows = prompts.len();
-        let tokens: Vec<i32> = prompts.iter().flatten()
-            .map(|&x| x as i32).collect();
+        let as_i32: Vec<Vec<i32>> = prompts.iter()
+            .map(|p| p.iter().map(|&x| x as i32).collect())
+            .collect();
+        let pack = PackedPrompts::pack(&as_i32)?;
+        let t_max = pack.max_len();
         let (logits, mut cache) =
-            self.rt.prefill(&self.cfg, &variant.params, &tokens, rows)?;
+            self.rt.prefill(&self.cfg, &variant.params, &pack)?;
         let v = self.cfg.vocab;
-        // Matches the full-recompute loop: min(max_new, t − plen)
-        // tokens per row; rows that want fewer are truncated at the
-        // end (their extra packed steps are discarded).
-        let steps = max_new.iter().copied().max().unwrap_or(0)
-            .min(t - plen);
-        let mut outs: Vec<Vec<u32>> =
-            (0..rows).map(|_| Vec::with_capacity(steps)).collect();
+        // Per-row budget — identical to a solo decode of that prompt.
+        let allowed: Vec<usize> = prompts.iter().zip(max_new)
+            .map(|(p, &m)| m.min(t - p.len()))
+            .collect();
+        let steps = allowed.iter().copied().max().unwrap_or(0);
+        let mut outs: Vec<Vec<u32>> = allowed.iter()
+            .map(|&a| Vec::with_capacity(a))
+            .collect();
         if steps == 0 {
             return Ok(outs);
         }
+        // Left padding puts every row's last prompt token in the final
+        // buffer column, so the next-token logit sits at the same flat
+        // offset for every row regardless of prompt length.
         let mut last: Vec<i32> = Vec::with_capacity(rows);
         for (b, out) in outs.iter_mut().enumerate() {
-            let row = &logits.data[(b * plen + plen - 1) * v
-                ..(b * plen + plen) * v];
+            if allowed[b] == 0 {
+                last.push(-1); // max_new = 0: nothing to emit
+                continue;
+            }
+            let row = &logits.data[(b * t_max + t_max - 1) * v
+                ..(b * t_max + t_max) * v];
             let next = argmax_logit(row);
             out.push(next as u32);
-            last.push(next as i32);
+            last.push(if allowed[b] > 1 { next as i32 } else { -1 });
         }
         for _ in 1..steps {
             let logits = self.rt.decode_step(&self.cfg, &variant.params,
                                              &mut cache, &last)?;
             for (b, out) in outs.iter_mut().enumerate() {
+                if last[b] < 0 {
+                    continue; // finished row: idle in the pack
+                }
                 let next = argmax_logit(logits.row(b));
                 out.push(next as u32);
-                last[b] = next as i32;
+                last[b] =
+                    if out.len() < allowed[b] { next as i32 } else { -1 };
             }
-        }
-        for (out, &m) in outs.iter_mut().zip(max_new) {
-            out.truncate(m);
         }
         Ok(outs)
     }
@@ -303,26 +365,40 @@ impl<'a> Server<'a> {
     /// Serve until the request channel closes. Runs on the caller's
     /// thread (the PJRT backend is not `Send`; the native backend
     /// parallelizes internally); clients live on other threads. Each
-    /// batch is grouped by (routed variant, prompt length) and every
-    /// group runs as one packed KV-cached decode; `latency_ms` is the
-    /// group's model time, `queue_ms` each request's wait from
+    /// batch is grouped by routed variant *only* — prompt lengths mix
+    /// freely inside a group thanks to the ragged left-padded prefill
+    /// — and groups run in ascending variant order (deterministic, so
+    /// serve stats and response interleaving reproduce across runs).
+    /// Every group runs as one packed KV-cached decode; `latency_ms`
+    /// is the group's model time, `queue_ms` each request's wait from
     /// client-side enqueue to the start of its group.
     pub fn run(&mut self, rx: Receiver<Request>, tx: Sender<Response>)
                -> Result<()> {
         let incremental = self.rt.supports_incremental();
         while let Some(batch) = self.batcher.next_batch(&rx) {
             let mut prepped = Vec::with_capacity(batch.len());
-            let mut groups: BTreeMap<(usize, usize), Vec<usize>> =
-                BTreeMap::new();
+            let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
             for (i, req) in batch.iter().enumerate() {
                 let (vi, over) = self.route(req.budget_params);
                 let prompt = self.prepare_prompt(&req.prompt,
                                                  req.max_new_tokens);
-                groups.entry((vi, prompt.len())).or_default().push(i);
+                groups.entry(vi).or_default().push(i);
                 prepped.push((vi, over, prompt));
             }
-            for ((vi, _plen), idxs) in &groups {
+            self.stats.batches += 1;
+            for (vi, idxs) in &groups {
                 let variant = &self.variants[*vi];
+                self.stats.groups += 1;
+                if incremental && idxs.len() > 1 {
+                    self.stats.packed_rows += idxs.len() as u64;
+                    let mut lens: Vec<usize> = idxs.iter()
+                        .map(|&i| prepped[i].2.len()).collect();
+                    lens.sort_unstable();
+                    lens.dedup();
+                    if lens.len() > 1 {
+                        self.stats.mixed_len_groups += 1;
+                    }
+                }
                 let queue_ms: Vec<f64> = idxs.iter()
                     .map(|&i| batch[i].enqueued_at.elapsed()
                         .as_secs_f64() * 1e3)
@@ -536,6 +612,61 @@ mod tests {
         assert_eq!(packed[0], solo1[0]);
         assert_eq!(packed[1], solo2[0]);
         assert_eq!(packed[1].len(), 3, "per-row max_new not honored");
+    }
+
+    #[test]
+    fn ragged_pack_matches_individual_decodes() {
+        let rt = Runtime::native();
+        let server = tiny_server(&rt, &[], 8);
+        let variant = &server.variants[0];
+        let long: Vec<u32> = (0..19).map(|i| i % 8).collect();
+        let prompts: Vec<Vec<u32>> = vec![
+            server.prepare_prompt(&[], 4),       // empty → pad token
+            server.prepare_prompt(&[7], 3),      // all pads but one
+            server.prepare_prompt(&long, 4),     // longest row
+            server.prepare_prompt(&[3, 1, 4, 1, 5], 2),
+            server.prepare_prompt(&[2, 2], 0),   // max_new = 0 row
+        ];
+        let max_new = [4usize, 3, 4, 2, 0];
+        let packed = server
+            .generate_cached(variant, &prompts, &max_new)
+            .unwrap();
+        for (b, p) in prompts.iter().enumerate() {
+            let solo = server
+                .generate_cached(variant, &[p.clone()], &[max_new[b]])
+                .unwrap();
+            assert_eq!(packed[b], solo[0],
+                       "row {b} diverged in the ragged pack");
+            assert_eq!(packed[b].len(), max_new[b],
+                       "row {b} emitted the wrong token count");
+        }
+    }
+
+    #[test]
+    fn mixed_length_batch_packs_into_one_group_per_variant() {
+        // The seed server keyed groups by (variant, prompt length), so
+        // this batch would have fragmented into 4 groups of rows=1.
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[], 8);
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        for (i, plen) in [2usize, 5, 9, 13].into_iter().enumerate() {
+            let prompt: Vec<u32> = (0..plen as u32).map(|x| x % 8)
+                .collect();
+            req_tx.send(Request::new(i as u64, prompt, 2, 0)).unwrap();
+        }
+        drop(req_tx);
+        server.run(req_rx, resp_tx).unwrap();
+        let got: Vec<Response> = resp_rx.iter().collect();
+        assert_eq!(got.len(), 4);
+        let s = server.stats;
+        assert_eq!(s.batches, 1,
+                   "4 pre-queued requests must drain as one batch");
+        assert_eq!(s.groups, 1,
+                   "one variant → one group; lengths must not split it");
+        assert!((s.groups_per_batch() - 1.0).abs() < 1e-12);
+        assert_eq!(s.packed_rows, 4);
+        assert_eq!(s.mixed_len_groups, 1);
     }
 
     #[test]
