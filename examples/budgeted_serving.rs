@@ -33,12 +33,18 @@ fn main() -> Result<()> {
         &[0.35, 0.65],
         ServerOptions { max_batch: 4, max_wait: Duration::from_millis(8),
                         kappa: 0.7 })?;
+    // Every budget is a zero-copy view over one shared factor store —
+    // carving one more on the live server costs O(blocks) integers.
+    server.admit_budget(0.5)?;
     for v in &server.variants {
-        println!("deployed variant: {:>8} params, resident {:>8} B \
-                  ({} blocks kept factored; dense X̂ would be {} B)",
-                 v.params_count, v.resident_bytes(), v.n_factored(),
-                 v.dense_bytes());
+        println!("deployed variant: {:>8} params, marginal {:>6} B \
+                  ({} factored views; a standalone copy would be {} B)",
+                 v.params_count, v.marginal_bytes(), v.n_factored(),
+                 v.materialized_bytes());
     }
+    println!("shared across all {} variants: {} B (master stores + \
+              dense params)",
+             server.variants.len(), server.stats.shared_bytes);
 
     let tokenizer = Tokenizer::new(cfg.vocab, 0);
     let budgets: Vec<usize> =

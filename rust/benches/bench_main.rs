@@ -344,9 +344,9 @@ fn main() {
                 idx.push(cfg.param_index(&name).unwrap());
             }
             let params = cfg.init_params(0);
-            let server = Server::new(&rt, cfg.clone(), &params, &blocks,
-                                     &idx, &[0.5],
-                                     ServerOptions::default())
+            let mut server = Server::new(&rt, cfg.clone(), &params,
+                                         &blocks, &idx, &[0.5],
+                                         ServerOptions::default())
                 .unwrap();
             let variant = server.variants.first().unwrap();
             eprintln!("{scale} compressed variant: resident {} B vs \
@@ -388,6 +388,22 @@ fn main() {
                             .unwrap());
                 });
             }
+            // Runtime elasticity: carving a fresh budget on a live
+            // server (HPA plan over master shapes + O(blocks) view
+            // construction, no weight copies) then retiring it. The
+            // fraction cycles so each iteration admits a genuinely
+            // new capacity point rather than hitting the dedup path.
+            let mut step = 0u64;
+            b.bench(&format!("serve/admit_budget_{scale}"), || {
+                step += 1;
+                let frac = 0.05 + 0.85 * ((step % 97) as f64 / 97.0);
+                let before = server.variants.len();
+                let vi = server.admit_budget(frac).unwrap();
+                if server.variants.len() > before {
+                    server.retire(vi).unwrap();
+                }
+                std::hint::black_box(server.variants.len());
+            });
         }
 
         // One short SALAAD training step sequence (fully end-to-end).

@@ -33,6 +33,7 @@ USAGE:
   salaad eval <ckpt-dir> [--downstream]
   salaad compress <ckpt-dir> [--budget-frac F] [--kappa K] [--out DIR]
   salaad serve <scale> [--steps N] [--requests N] [--mixed-lens]
+               [--admit F1,F2,...] [--spectrum]
   salaad exp <id|all> [--scale S] [--steps N] [--seed N] [--out DIR]
              [--no-cache] [--verbose]
 
@@ -214,7 +215,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use salaad::serve::{Request, Server, ServerOptions};
+    use salaad::serve::{Request, Server, ServerOptions,
+                        BUILTIN_BUDGET_FRACS};
     let scale = args.positional_at(0).context("serve <scale>")?;
     let rt = Runtime::from_env()?;
     let cfg = rt.model_config(scale)?;
@@ -224,6 +226,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // hard-fail unless they packed into one ragged group per variant
     // (the CI smoke for the left-pad packed prefill).
     let mixed_lens = args.has("mixed-lens");
+    // --spectrum: admit a whole spectrum of budgets on the live server
+    // and hard-fail unless each added variant's marginal bytes stay
+    // below 10% of the master factor store (the CI smoke for the
+    // zero-copy nested-variant path).
+    let spectrum = args.has("spectrum");
+    // --admit F1,F2,…: extra budget fractions carved at runtime.
+    let admit_fracs: Vec<f64> = match args.flag("admit") {
+        Some(list) => list.split(',')
+            .map(|s| s.trim().parse::<f64>()
+                .map_err(|_| anyhow::anyhow!(
+                    "--admit expects comma-separated fractions, got \
+                     `{s}`")))
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
 
     eprintln!("training a quick SALAAD model for the demo ({steps} steps)…");
     let tcfg = TrainConfig { steps, eval_every: 0, ..Default::default() };
@@ -233,28 +250,85 @@ fn cmd_serve(args: &Args) -> Result<()> {
     tr.run()?;
 
     let mut server = Server::new(&rt, cfg.clone(), &tr.params, &tr.blocks,
-                                 &tr.block_param_idx, &[0.3, 0.6],
+                                 &tr.block_param_idx,
+                                 BUILTIN_BUDGET_FRACS,
                                  ServerOptions::default())?;
-    let mut any_factored = false;
+    // Runtime elasticity: carve additional budgets on the live server
+    // — O(blocks) each, no weight copies, no rebuild.
+    let spectrum_fracs: Vec<f64> = if spectrum {
+        vec![0.15, 0.45, 0.75, 0.9]
+    } else {
+        Vec::new()
+    };
+    let master_bytes = server.master_store_bytes();
+    for &frac in admit_fracs.iter().chain(&spectrum_fracs) {
+        let before = server.variants.len();
+        let vi = server.admit_budget(frac)?;
+        let v = &server.variants[vi];
+        let added = server.variants.len() > before;
+        eprintln!("admit {frac:.2}: {} {:>9}-param variant \
+                   (marginal {:>6} B)",
+                  if added { "carved" } else { "snapped to" },
+                  v.params_count, v.marginal_bytes());
+        if spectrum && added {
+            anyhow::ensure!(
+                v.marginal_bytes() * 10 < master_bytes,
+                "admitted variant costs {} B marginal — not below 10% \
+                 of the {master_bytes} B master store; the zero-copy \
+                 path regressed to materialization",
+                v.marginal_bytes());
+        }
+    }
+    if spectrum {
+        anyhow::ensure!(server.variants.len() >= 3,
+                        "--spectrum expected ≥3 admitted budgets, got {}",
+                        server.variants.len());
+    }
     for v in &server.variants {
-        eprintln!("variant {:>9} params: resident {:>9} B \
-                   (dense X̂ would be {:>9} B, {} factored blocks)",
-                  v.params_count, v.resident_bytes(), v.dense_bytes(),
-                  v.n_factored());
-        any_factored |= v.n_factored() > 0
-            && v.resident_bytes() < v.dense_bytes();
+        eprintln!("variant {:>9} params: marginal {:>6} B of shared \
+                   {:>9} B (standalone copy would be {:>9} B, dense X̂ \
+                   {:>9} B, {} factored views)",
+                  v.params_count, v.marginal_bytes(),
+                  server.stats.shared_bytes, v.materialized_bytes(),
+                  v.dense_bytes(), v.n_factored());
     }
     if rt.supports_incremental() {
-        anyhow::ensure!(any_factored,
-                        "no variant is served from factors — the \
-                         factored path regressed to dense \
-                         materialization");
+        anyhow::ensure!(
+            server.variants.iter().all(|v| v.n_factored() > 0)
+                && !server.masters().is_empty(),
+            "no variant is served from shared factor views — the \
+             zero-copy path regressed to dense materialization");
+        // The refactor's headline: the whole spectrum resides in one
+        // shared store + per-variant metadata, strictly below what
+        // the old one-copy-per-variant scheme would have resided.
+        if server.variants.len() >= 2 {
+            let old_world: usize = server.variants.iter()
+                .map(|v| v.materialized_bytes()).sum();
+            let new_world = server.stats.shared_bytes
+                + server.stats.marginal_bytes;
+            eprintln!("spectrum: {} variants reside in {new_world} B \
+                       (shared {} + marginal {}); per-variant copies \
+                       would be {old_world} B",
+                      server.variants.len(), server.stats.shared_bytes,
+                      server.stats.marginal_bytes);
+            anyhow::ensure!(new_world < old_world,
+                            "shared spectrum ({new_world} B) not below \
+                             per-variant copies ({old_world} B)");
+        }
     } else {
         eprintln!("backend `{}` has no factored execution; serving from \
                    a memoized dense materialization", rt.backend_name());
     }
     let budgets: Vec<usize> =
         server.variants.iter().map(|v| v.params_count).collect();
+    // --spectrum asserts every admitted budget saw traffic; since the
+    // producer cycles budgets round-robin, pad the request count up to
+    // the spectrum size so a small --requests can't trip the gate.
+    let n_requests = if spectrum {
+        n_requests.max(budgets.len())
+    } else {
+        n_requests
+    };
 
     let (req_tx, req_rx) = std::sync::mpsc::channel();
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();
@@ -300,14 +374,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("p50 {:.1} ms  p95 {p95:.1} ms  served {} reqs",
                  lat[lat.len() / 2], lat.len());
     }
-    let s = server.stats;
+    let s = &server.stats;
     println!("packing: {} batches, {} groups ({:.2} groups/batch), \
               {} packed rows, {} mixed-length groups",
              s.batches, s.groups, s.groups_per_batch(), s.packed_rows,
              s.mixed_len_groups);
-    // Smoke contract: every request round-trips to a response.
+    println!("resident: shared {} B + marginal {} B across {} variants",
+             s.shared_bytes, s.marginal_bytes, server.variants.len());
+    for (count, served) in &s.served_by_variant {
+        println!("  variant {count:>9}: served {served} requests");
+    }
+    // Smoke contract: every request round-trips to a response, the
+    // byte split is populated, and the per-variant counters account
+    // for every response.
     anyhow::ensure!(n_resp == n_requests,
                     "served {n_resp}/{n_requests} requests");
+    anyhow::ensure!(s.shared_bytes > 0 && s.marginal_bytes > 0,
+                    "resident byte split not populated (shared {}, \
+                     marginal {})", s.shared_bytes, s.marginal_bytes);
+    let counted: u64 = s.served_by_variant.values().sum();
+    anyhow::ensure!(counted == n_resp as u64,
+                    "per-variant served counts {counted} != {n_resp} \
+                     responses");
+    if spectrum {
+        // Budgets cycle across every admitted point, so each variant
+        // must have seen traffic — proving routing snaps onto
+        // runtime-admitted budgets.
+        for v in &server.variants {
+            anyhow::ensure!(
+                s.served_by_variant.get(&v.params_count)
+                    .is_some_and(|&c| c > 0),
+                "admitted {}-param variant served no requests",
+                v.params_count);
+        }
+    }
     // Groups are keyed by routed variant only, so a batch can never
     // fan out into more groups than deployed variants.
     anyhow::ensure!(s.groups <= s.batches * server.variants.len() as u64,
@@ -328,8 +428,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  s.groups_per_batch().ceil() as u64,
                  server.variants.len());
     }
-    println!("serve OK: {n_resp}/{n_requests} responses, factored \
-              variants resident below dense");
+    println!("serve OK: {n_resp}/{n_requests} responses, {} budgets \
+              served zero-copy from one shared factor store",
+             server.variants.len());
     Ok(())
 }
 

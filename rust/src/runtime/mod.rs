@@ -8,13 +8,18 @@
 //! - `eval_loss` — (Σ NLL, token count) for exact perplexity pooling.
 //!
 //! The serving path adds a factored-parameter surface on the same seam:
-//! [`ModelParams`] holds each parameter either dense or as SLR factors
-//! `(U, s, V)` + CSR residual ([`ParamValue`]), and
-//! `forward_logits_model` / `prefill` / `decode_step` execute it. The
-//! native backend evaluates factored linears as `x·V·diag(s)·Uᵀ + x·Sᵀ`
-//! and keeps a [`KvCache`] so greedy decode costs O(T) instead of
-//! O(T²); other backends inherit a densifying fallback (correct, no
-//! memory win) and report `supports_incremental() == false`.
+//! [`ModelParams`] holds each parameter either as an `Arc`-shared dense
+//! tensor or as a zero-copy SLR view — `(U, s, V)` + CSR residual
+//! master store plus `{rank_k, nnz_cut}` prefix cuts ([`ParamValue`])
+//! — and `forward_logits_model` / `prefill` / `decode_step` execute
+//! it. Because every arm is a reference-counted handle, N capacity
+//! variants of one model cost one master store plus N sets of cut
+//! integers, not N weight copies. The native backend evaluates
+//! factored views as `x·V[:, :k]·diag(s[:k])·U[:, :k]ᵀ + x·S_cutᵀ`
+//! over the master prefixes and keeps a [`KvCache`] so greedy decode
+//! costs O(T) instead of O(T²); other backends inherit a densifying
+//! fallback (correct, no memory win) and report
+//! `supports_incremental() == false`.
 //!
 //! Two implementations exist:
 //!
@@ -81,6 +86,7 @@ pub use client::{Executable, PjrtBackend};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
@@ -190,25 +196,41 @@ impl PackedPrompts {
     }
 }
 
-/// One model parameter as the serving runtime stores it: either a dense
-/// tensor or an SLR-compressed linear kept factored as (U, s, V) plus a
-/// CSR residual — never densified on the inference path.
+/// One model parameter as the serving runtime stores it: either an
+/// `Arc`-shared dense tensor or an SLR-compressed linear kept as a
+/// zero-copy **view** over a shared factor store ((U, s, V) + CSR-S
+/// master plus `{rank_k, nnz_cut}` prefix cuts) — never densified on
+/// the inference path. Both arms are reference-counted handles, so
+/// cloning a `ParamValue` into another variant's parameter set shares
+/// the backing weights instead of copying them.
 #[derive(Clone, Debug)]
 pub enum ParamValue {
     /// Plain dense tensor (norm scales, embeddings, uncompressed
-    /// blocks, or factored blocks whose factors would be larger).
-    Dense(Tensor),
-    /// SLR-compressed linear kept as (U, s, V) + CSR-S; factored-aware
-    /// backends evaluate it without materializing X̂.
+    /// blocks), shared across variants behind an `Arc`.
+    Dense(Arc<Tensor>),
+    /// SLR-compressed linear: a prefix view over an `Arc`-shared
+    /// [`crate::slr::FactorStore`]; factored-aware backends evaluate
+    /// it without materializing X̂ *or* the prefix.
     Factored(FactoredLinear),
 }
 
 impl ParamValue {
-    /// Resident bytes of this parameter as stored.
+    /// Bytes of the backing allocation this parameter references. The
+    /// allocation may be shared (another variant's `ParamValue` can
+    /// hold the same `Arc`); use [`Self::alloc`] to deduplicate across
+    /// parameter sets.
     pub fn resident_bytes(&self) -> usize {
+        self.alloc().1
+    }
+
+    /// `(address, bytes)` of the backing allocation — the key callers
+    /// use to count `Arc`-shared storage once across variants.
+    pub fn alloc(&self) -> (usize, usize) {
         match self {
-            ParamValue::Dense(t) => 4 * t.numel(),
-            ParamValue::Factored(f) => f.bytes(),
+            ParamValue::Dense(t) => {
+                (Arc::as_ptr(t) as usize, 4 * t.numel())
+            }
+            ParamValue::Factored(f) => (f.store_ptr(), f.store_bytes()),
         }
     }
 
@@ -216,7 +238,17 @@ impl ParamValue {
     pub fn dense_bytes(&self) -> usize {
         match self {
             ParamValue::Dense(t) => 4 * t.numel(),
-            ParamValue::Factored(f) => 4 * f.n * f.m,
+            ParamValue::Factored(f) => 4 * f.n() * f.m(),
+        }
+    }
+
+    /// Bytes a *standalone* copy of this parameter would occupy (dense
+    /// size, or the contiguous prefix factors + cut CSR for a view) —
+    /// the pre-refactor per-variant cost, kept for accounting.
+    pub fn materialized_bytes(&self) -> usize {
+        match self {
+            ParamValue::Dense(t) => 4 * t.numel(),
+            ParamValue::Factored(f) => f.materialized_bytes(),
         }
     }
 
@@ -228,7 +260,7 @@ impl ParamValue {
     /// Densify (clones dense tensors, reconstructs factored ones).
     pub fn to_dense(&self) -> Tensor {
         match self {
-            ParamValue::Dense(t) => t.clone(),
+            ParamValue::Dense(t) => (**t).clone(),
             ParamValue::Factored(f) => f.to_dense(),
         }
     }
@@ -245,9 +277,13 @@ pub struct ModelParams {
 
 impl ModelParams {
     /// All-dense parameter set (the trivial embedding of the old API).
+    /// Each tensor is copied once into a fresh `Arc`; further clones of
+    /// the resulting `ParamValue`s share that allocation.
     pub fn from_dense(params: &[Tensor]) -> Self {
         ModelParams {
-            values: params.iter().cloned().map(ParamValue::Dense).collect(),
+            values: params.iter()
+                .map(|t| ParamValue::Dense(Arc::new(t.clone())))
+                .collect(),
         }
     }
 
@@ -267,14 +303,29 @@ impl ModelParams {
         self.values.iter().map(|v| v.to_dense()).collect()
     }
 
-    /// Bytes resident with the current mixed representation.
+    /// Bytes of every backing allocation this set references, each
+    /// counted once (entries of one set normally reference distinct
+    /// allocations; allocations shared with *other* sets still count
+    /// in full here — cross-variant dedup lives in
+    /// `serve::Server::shared_bytes`).
     pub fn resident_bytes(&self) -> usize {
-        self.values.iter().map(|v| v.resident_bytes()).sum()
+        let mut seen = std::collections::HashSet::new();
+        self.values.iter()
+            .map(|v| v.alloc())
+            .filter(|(ptr, _)| seen.insert(*ptr))
+            .map(|(_, bytes)| bytes)
+            .sum()
     }
 
     /// Bytes a fully dense materialization would occupy.
     pub fn dense_bytes(&self) -> usize {
         self.values.iter().map(|v| v.dense_bytes()).sum()
+    }
+
+    /// Bytes a standalone (nothing shared) copy of this set would
+    /// occupy — the pre-refactor per-variant cost.
+    pub fn materialized_bytes(&self) -> usize {
+        self.values.iter().map(|v| v.materialized_bytes()).sum()
     }
 
     /// How many parameters are held factored.
@@ -535,6 +586,40 @@ mod tests {
                 assert_eq!(t, &dense[i]);
             }
         }
+    }
+
+    #[test]
+    fn param_values_share_allocations_across_clones() {
+        use crate::slr::{FactoredLinear, SlrBlock};
+        let cfg = ModelConfig::from_geometry("tiny", 16, 8, 1, 2, 12, 6,
+                                             2);
+        let mp = ModelParams::from_dense(&cfg.init_params(0));
+        // Cloning a parameter set is zero-copy: every allocation is
+        // shared, so the clone's alloc keys coincide with the
+        // original's and resident accounting does not double.
+        let clone = ModelParams { values: mp.values.clone() };
+        for (a, b) in mp.values.iter().zip(&clone.values) {
+            assert_eq!(a.alloc(), b.alloc());
+        }
+        assert_eq!(mp.resident_bytes(), clone.resident_bytes());
+
+        // Two views over one store report the same backing allocation;
+        // a fresh store does not.
+        let blk = SlrBlock::random("w", 10, 8, 3, 0.2, 1);
+        let store = std::sync::Arc::new(blk.to_store().unwrap());
+        let a = ParamValue::Factored(
+            FactoredLinear::view(store.clone(), 3, 0).unwrap());
+        let b = ParamValue::Factored(
+            FactoredLinear::view(store, 1, 2).unwrap());
+        let c = ParamValue::Factored(blk.to_factored());
+        assert_eq!(a.alloc().0, b.alloc().0);
+        assert_ne!(a.alloc().0, c.alloc().0);
+        // A set holding both views counts the store once.
+        let two = ModelParams { values: vec![a.clone(), b.clone()] };
+        assert_eq!(two.resident_bytes(), a.alloc().1);
+        // Materialized (standalone) cost is cut-dependent, unlike the
+        // shared allocation: the (1, 2) view copies less than (3, 0).
+        assert!(b.materialized_bytes() < a.materialized_bytes());
     }
 
     #[test]

@@ -767,13 +767,13 @@ fn resolve_model<'a>(cfg: &ModelConfig, params: &'a ModelParams)
                 ensure!(t.shape == *shape,
                         "param `{name}` shape {:?} != {:?}", t.shape,
                         shape);
-                LinOp::Dense(t)
+                LinOp::Dense(t.as_ref())
             }
             ParamValue::Factored(f) => {
-                ensure!(shape.len() == 2 && f.n == shape[0]
-                            && f.m == shape[1],
+                ensure!(shape.len() == 2 && f.n() == shape[0]
+                            && f.m() == shape[1],
                         "factored param `{name}` is {}x{}, expected {:?}",
-                        f.n, f.m, shape);
+                        f.n(), f.m(), shape);
                 f.validate()?;
                 LinOp::Factored(f)
             }

@@ -1,18 +1,23 @@
 //! Elastic budgeted serving: the deployment half of the paper's claim.
 //!
-//! A [`Server`] owns one HPA-compressed model variant per configured
-//! memory budget, batches incoming requests with a deadline-based
-//! dynamic batcher, and routes each request to the variant that fits its
-//! memory budget. Variants are stored *factored* — (U, s, V) plus a CSR
-//! residual per SLR block, via [`crate::runtime::ModelParams`] — so the
-//! paper's deployment memory claim holds in the resident process, not
-//! just on paper ([`VariantSpec::resident_bytes`]). Decoding is
-//! KV-cached: one prefill over the prompt, then O(T) single-position
-//! steps, with *all* same-variant requests — mixed prompt lengths
-//! included — packed into one ragged rows>1 prefill (left-pad +
-//! mask; see [`crate::runtime::PackedPrompts`]), bit-identical to
-//! decoding each request alone. [`ServeStats`] reports how batches
-//! actually packed. Threading: the PJRT backend is not `Send` (and the
+//! A [`Server`] converts a trained surrogate **once** into shared
+//! master factor stores (one `Arc<FactorStore>` per SLR block, spectrum
+//! ordered and S entries magnitude-ranked) and deploys one *zero-copy
+//! variant* per configured memory budget: per-block prefix cuts
+//! `{rank_k, nnz_cut}` wrapped as [`crate::slr::FactoredLinear`] views
+//! via [`crate::runtime::ModelParams`]. Serving V budgets therefore
+//! resides in one master store plus V·O(blocks) metadata bytes — the
+//! paper's continuous capacity spectrum, nearly free in the resident
+//! process ([`ServeStats`] carries the shared/marginal split, and
+//! [`Server::admit_budget`] carves additional budgets on a live server
+//! without copies or rebuilds). A deadline-based dynamic batcher
+//! groups incoming requests and routing snaps each request's budget to
+//! the admitted points. Decoding is KV-cached: one prefill over the
+//! prompt, then O(T) single-position steps, with *all* same-variant
+//! requests — mixed prompt lengths included — packed into one ragged
+//! rows>1 prefill (left-pad + mask; see
+//! [`crate::runtime::PackedPrompts`]), bit-identical to decoding each
+//! request alone. Threading: the PJRT backend is not `Send` (and the
 //! native backend parallelizes internally), so the server runs on its
 //! owner thread and talks to clients over std::sync::mpsc channels
 //! (the offline vendor set has no tokio; DESIGN.md §3).
@@ -24,4 +29,4 @@ pub mod server;
 pub use request::{Request, Response};
 pub use batcher::Batcher;
 pub use server::{argmax_logit, Server, ServerOptions, ServeStats,
-                 VariantSpec};
+                 VariantSpec, BUILTIN_BUDGET_FRACS};

@@ -8,8 +8,10 @@ pub struct Request {
     /// Prompt tokens (truncated to seq_len − max_new_tokens if longer).
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
-    /// Memory budget in parameters for this request (selects the HPA
-    /// variant); 0 = full surrogate.
+    /// Memory budget in parameters for this request; routing snaps it
+    /// to the largest *admitted* capacity point that fits (admitted
+    /// points change at runtime via `Server::admit_budget`/`retire`).
+    /// 0 = unconstrained, i.e. the full surrogate.
     pub budget_params: usize,
     /// Stamped at construction, i.e. client-side *before* the request
     /// enters the channel — queue latency is measured from here, so
@@ -35,11 +37,13 @@ impl Request {
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<u32>,
-    /// Which variant served it (surrogate parameter count).
+    /// Which variant served it (surrogate parameter count — also the
+    /// key of `ServeStats::served_by_variant`).
     pub served_params: usize,
     /// True when the request's nonzero `budget_params` was below every
-    /// deployed variant and the smallest one served it anyway — the
-    /// client asked for a memory ceiling the server could not honor.
+    /// *currently admitted* variant and the smallest one served it
+    /// anyway — the client asked for a memory ceiling the server could
+    /// not honor at that moment.
     pub over_budget: bool,
     /// Model-execution time of the batch group this request rode in.
     pub latency_ms: f64,

@@ -1,23 +1,32 @@
-//! The elastic server: HPA-derived model variants served *from factors*
-//! + dynamic batching + budget-aware routing, with KV-cached greedy
-//! decoding.
+//! The elastic server: zero-copy nested capacity variants over one
+//! shared master factor store + dynamic batching + budget-aware
+//! routing, with KV-cached greedy decoding.
 //!
-//! Each variant keeps its SLR-compressed blocks as (U, s, V) factors
-//! plus a CSR residual ([`crate::runtime::ModelParams`]) — dense X̂ is
-//! never materialized when the factored form is smaller, which is what
-//! makes the paper's deployment memory claim measurable here
-//! ([`VariantSpec::resident_bytes`]). Decoding does one prefill over
-//! the prompt and then O(T) single-position steps against a
-//! [`crate::runtime::KvCache`]. Same-variant requests pack into one
-//! ragged rows>1 prefill *regardless of prompt length*: prompts are
-//! left-padded to the group's longest row and the runtime masks pads
-//! out ([`crate::runtime::PackedPrompts`]), so a mixed-length batch
-//! costs one prefill per routed variant instead of one per (variant,
-//! length) pair — with output tokens identical to solo decoding
-//! ([`ServeStats`] counts how much packing actually happened).
+//! At construction each SLR block is converted **once** into an
+//! `Arc`-shared [`crate::slr::FactorStore`] (spectrum ordered, S
+//! entries magnitude-ranked). A capacity variant is then nothing but a
+//! set of per-block prefix cuts `{rank_k, nnz_cut}`
+//! ([`crate::slr::BlockCuts`]) wrapped in
+//! [`crate::runtime::ParamValue::Factored`] views — serving V budgets
+//! costs one master
+//! store plus V·O(blocks) integers, not V weight copies
+//! ([`Server::shared_bytes`] / [`VariantSpec::marginal_bytes`] make
+//! the split measurable, and [`ServeStats`] carries it). New budgets
+//! can be carved on a *live* server in O(blocks)
+//! ([`Server::admit_budget`]); dense X̂ is never materialized.
+//!
+//! Decoding does one prefill over the prompt and then O(T)
+//! single-position steps against a [`crate::runtime::KvCache`].
+//! Same-variant requests pack into one ragged rows>1 prefill
+//! *regardless of prompt length*: prompts are left-padded to the
+//! group's longest row and the runtime masks pads out
+//! ([`crate::runtime::PackedPrompts`]), so a mixed-length batch costs
+//! one prefill per routed variant instead of one per (variant, length)
+//! pair — with output tokens identical to solo decoding.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
@@ -26,29 +35,44 @@ use super::batcher::Batcher;
 use super::request::{Request, Response};
 use crate::config::ModelConfig;
 use crate::runtime::{ModelParams, PackedPrompts, ParamValue, Runtime};
-use crate::slr::{hpa, SlrBlock};
+use crate::slr::{hpa, BlockCuts, BlockShape, FactorStore, FactoredLinear,
+                 SlrBlock};
 use crate::tensor::Tensor;
 
-/// One deployable model variant: a parameter budget and its HPA-derived
-/// weights, built once at startup — elastic deployment without
-/// retraining. Compressed blocks stay factored whenever that is smaller
-/// than dense.
+/// The budget fractions `salaad serve` deploys by default (and the set
+/// the nested-variant equivalence tests sweep): fractions of the
+/// removable parameter pool handed to HPA.
+pub const BUILTIN_BUDGET_FRACS: &[f64] = &[0.3, 0.6];
+
+/// One deployable model variant: a parameter budget expressed as
+/// per-block prefix cuts into the server's shared master stores, plus
+/// the `Arc`-shared parameter views realizing it. Built in O(blocks)
+/// with no weight copies — elastic deployment without retraining *or*
+/// duplication.
 pub struct VariantSpec {
     /// Surrogate parameter count of this variant.
     pub params_count: usize,
-    /// Mixed dense/factored parameter set in `cfg.params` order.
+    /// Per-block `{rank_k, nnz_cut}` into the server's masters
+    /// (aligned with [`Server::masters`]).
+    pub cuts: Vec<BlockCuts>,
+    /// Mixed dense/factored parameter set in `cfg.params` order; every
+    /// entry is a shared handle (dense `Arc`s + store views).
     pub params: ModelParams,
     /// Memoized dense materialization, populated only when the backend
     /// has no factored execution (`supports_incremental() == false`,
     /// i.e. the PJRT fallback): without it the per-token fallback loop
-    /// would rebuild X̂ from (U, s, V, CSR-S) on every forward. None on
-    /// the native backend, which serves from the factors directly.
+    /// would rebuild X̂ from the views on every forward. None on the
+    /// native backend, which serves from the shared factors directly —
+    /// when present it is this variant's (large) marginal cost.
     dense_cache: Option<Vec<Tensor>>,
 }
 
 impl VariantSpec {
-    /// Bytes this variant actually occupies as stored (factors plus the
-    /// dense fallback copy when one had to be materialized).
+    /// Bytes this variant *references*, shared allocations counted in
+    /// full (master stores + base dense tensors + any dense fallback
+    /// copy). Across variants the shared part repeats — see
+    /// [`Server::shared_bytes`] / [`Self::marginal_bytes`] for the
+    /// deduplicated split.
     pub fn resident_bytes(&self) -> usize {
         self.params.resident_bytes()
             + self.dense_cache.as_ref().map_or(0, |d| {
@@ -56,12 +80,32 @@ impl VariantSpec {
             })
     }
 
+    /// Bytes this variant *uniquely owns*: the per-parameter handles
+    /// and cut metadata (O(blocks) integers), plus the dense fallback
+    /// copy on backends without factored execution. This is the whole
+    /// per-budget cost of the nested scheme.
+    pub fn marginal_bytes(&self) -> usize {
+        self.params.values.len() * std::mem::size_of::<ParamValue>()
+            + self.cuts.len() * std::mem::size_of::<BlockCuts>()
+            + self.dense_cache.as_ref().map_or(0, |d| {
+                d.iter().map(|t| 4 * t.numel()).sum()
+            })
+    }
+
+    /// Bytes a *standalone* copy of this variant would occupy
+    /// (contiguous prefix factors + cut CSR per block, own dense
+    /// tensors) — exactly what each variant cost before the
+    /// shared-store refactor.
+    pub fn materialized_bytes(&self) -> usize {
+        self.params.materialized_bytes()
+    }
+
     /// Bytes the seed-era dense X̂ materialization would occupy.
     pub fn dense_bytes(&self) -> usize {
         self.params.dense_bytes()
     }
 
-    /// How many parameters are held factored.
+    /// How many parameters are held as factored views.
     pub fn n_factored(&self) -> usize {
         self.params.n_factored()
     }
@@ -81,11 +125,12 @@ impl Default for ServerOptions {
     }
 }
 
-/// Packing counters the serving loop accumulates across its lifetime —
-/// the observable form of "mixed-length batches pack". Reproducible
-/// run to run: batches are grouped by routed variant index only and
-/// groups execute in ascending variant order.
-#[derive(Clone, Copy, Debug, Default)]
+/// Counters the serving loop accumulates across its lifetime — the
+/// observable form of "mixed-length batches pack" and "the capacity
+/// spectrum is nearly free". Reproducible run to run: batches are
+/// grouped by routed variant index only and groups execute in
+/// ascending variant order.
+#[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     /// Non-empty batches pulled from the batcher.
     pub batches: u64,
@@ -99,6 +144,17 @@ pub struct ServeStats {
     /// prefill (0 on backends without incremental decoding, which
     /// serve requests one by one).
     pub mixed_len_groups: u64,
+    /// Requests served per variant, keyed by the variant's
+    /// `params_count` (stable across [`Server::admit_budget`] /
+    /// [`Server::retire`], unlike variant indices).
+    pub served_by_variant: BTreeMap<usize, u64>,
+    /// Bytes of the shared master stores + base dense parameters,
+    /// counted once no matter how many variants are admitted.
+    /// Refreshed whenever the variant set changes.
+    pub shared_bytes: usize,
+    /// Per-variant metadata bytes summed across admitted variants —
+    /// the whole marginal cost of the capacity spectrum.
+    pub marginal_bytes: usize,
 }
 
 impl ServeStats {
@@ -119,11 +175,32 @@ impl ServeStats {
 pub struct Server<'a> {
     rt: &'a Runtime,
     cfg: ModelConfig,
-    /// Variants sorted by ascending parameter count, deduplicated.
+    /// Dense base parameters in `cfg.params` order, `Arc`-shared by
+    /// every variant; `None` at positions owned by a master store (the
+    /// dense originals of SLR blocks are not retained).
+    base: Vec<Option<Arc<Tensor>>>,
+    /// One immutable master factor store per SLR block, with its index
+    /// into `cfg.params`.
+    masters: Vec<(usize, Arc<FactorStore>)>,
+    /// Planning shapes of the masters (HPA inputs for admits).
+    shapes: Vec<BlockShape>,
+    /// Dense parameter count of the whole model / of the selected
+    /// blocks — `params_count` bookkeeping.
+    dense_total: usize,
+    dense_selected: usize,
+    /// HPA mixing coefficient used for every admitted budget.
+    kappa: f64,
+    /// Variants sorted by strictly ascending parameter count. Among
+    /// candidates with equal `params_count` (repeated or near-equal
+    /// budget fractions) the **earliest admitted wins**: the full
+    /// variant first, then `budget_fracs` in argument order, then
+    /// runtime [`Self::admit_budget`] calls in call order — see the
+    /// dedup regression test.
     pub variants: Vec<VariantSpec>,
     batcher: Batcher,
     pub served: u64,
-    /// Packing counters across every batch this server has run.
+    /// Packing + spectrum counters across every batch this server has
+    /// run.
     pub stats: ServeStats,
 }
 
@@ -140,83 +217,177 @@ pub fn argmax_logit(row: &[f32]) -> usize {
 }
 
 impl<'a> Server<'a> {
-    /// Build variants from a trained surrogate: one per requested budget
-    /// (given as fractions of removable parameters) plus the full
-    /// surrogate. Variants with identical parameter counts (repeated or
-    /// near-equal fractions) are deduplicated.
+    /// Build the master stores from a trained surrogate and admit one
+    /// variant per requested budget (fractions of removable
+    /// parameters) plus the full surrogate — every variant a zero-copy
+    /// view set. Budgets landing on an already-admitted parameter
+    /// count deduplicate (earliest admitted wins; see `variants`).
     pub fn new(rt: &'a Runtime, cfg: ModelConfig, base_params: &[Tensor],
                blocks: &[SlrBlock], block_param_idx: &[usize],
                budget_fracs: &[f64], opts: ServerOptions) -> Result<Self> {
         ensure!(blocks.len() == block_param_idx.len(),
                 "{} blocks vs {} param indices", blocks.len(),
                 block_param_idx.len());
-        let mut variants = Vec::new();
-        let full_count = Self::count_with(cfg.n_params(), blocks,
-                                          block_param_idx, blocks);
-        let make = |params_count: usize, params: ModelParams| {
-            // Backends without factored execution get a one-time dense
-            // materialization instead of re-densifying per token.
-            let dense_cache = (!rt.supports_incremental())
-                .then(|| params.densify());
-            VariantSpec { params_count, params, dense_cache }
-        };
-        // Full surrogate variant.
-        variants.push(make(full_count,
-                           Self::build_params(base_params, blocks,
-                                              block_param_idx)));
-        for frac in budget_fracs {
-            let plan = hpa::plan_frac(blocks, opts.kappa,
-                                      frac.clamp(0.0, 0.95))?;
-            let (trunc, _report) = hpa::apply(blocks, &plan);
-            variants.push(make(
-                Self::count_with(cfg.n_params(), blocks,
-                                 block_param_idx, &trunc),
-                Self::build_params(base_params, &trunc,
-                                   block_param_idx)));
+        ensure!(base_params.len() == cfg.params.len(),
+                "{} base params vs {} in config", base_params.len(),
+                cfg.params.len());
+        let dense_total = cfg.n_params();
+        let dense_selected: usize =
+            blocks.iter().map(|b| b.dense_param_count()).sum();
+        let mut base: Vec<Option<Arc<Tensor>>> = base_params.iter()
+            .map(|t| Some(Arc::new(t.clone())))
+            .collect();
+        let mut masters = Vec::with_capacity(blocks.len());
+        let mut shapes = Vec::with_capacity(blocks.len());
+        for (b, &i) in blocks.iter().zip(block_param_idx) {
+            ensure!(i < base.len(),
+                    "block `{}` param index {i} out of range", b.name);
+            let st = Arc::new(b.to_store()?);
+            shapes.push(BlockShape::of_store(&st));
+            masters.push((i, st));
+            base[i] = None; // the dense original is not retained
         }
-        variants.sort_by_key(|v| v.params_count);
-        variants.dedup_by(|a, b| a.params_count == b.params_count);
-        Ok(Server {
+        let mut server = Server {
             rt,
             cfg,
-            variants,
+            base,
+            masters,
+            shapes,
+            dense_total,
+            dense_selected,
+            kappa: opts.kappa,
+            variants: Vec::new(),
             batcher: Batcher::new(opts.max_batch, opts.max_wait),
             served: 0,
             stats: ServeStats::default(),
-        })
-    }
-
-    /// Per-parameter representation choice: keep the SLR block factored
-    /// when (U, s, V, CSR-S) is smaller than the dense X̂, densify
-    /// otherwise (e.g. near-full-rank blocks of the uncompressed
-    /// variant). Either way the result is what the backend executes.
-    fn build_params(base: &[Tensor], blocks: &[SlrBlock], idx: &[usize])
-                    -> ModelParams {
-        let mut mp = ModelParams::from_dense(base);
-        for (b, &i) in blocks.iter().zip(idx) {
-            let f = b.to_factored();
-            mp.values[i] = if f.bytes() < 4 * b.n * b.m {
-                ParamValue::Factored(f)
-            } else {
-                ParamValue::Dense(b.xhat())
-            };
+        };
+        // Full surrogate variant, then one admit per requested budget
+        // — construction is just the live-server admit path in a loop.
+        let full: Vec<BlockCuts> =
+            server.shapes.iter().map(BlockCuts::full).collect();
+        let spec = server.variant_from_cuts(full)?;
+        server.variants.push(spec);
+        for frac in budget_fracs {
+            server.admit_budget(*frac)?;
         }
-        mp
+        server.refresh_byte_stats();
+        Ok(server)
     }
 
-    fn count_with(dense_total: usize, orig: &[SlrBlock], _idx: &[usize],
-                  blocks: &[SlrBlock]) -> usize {
-        let dense_selected: usize =
-            orig.iter().map(|b| b.dense_param_count()).sum();
-        let slr: usize = blocks.iter().map(|b| b.param_count()).sum();
-        dense_total - dense_selected + slr
+    /// Carve a new capacity variant on a live server: HPA-plan the
+    /// budget fraction over the master shapes, derive per-block prefix
+    /// cuts and wrap them as views — O(blocks) work, no weight copies,
+    /// no rebuild. Returns the index of the variant now serving that
+    /// budget; a budget landing on an already-admitted parameter count
+    /// returns the existing variant (earliest admitted wins — the same
+    /// dedup rule `Server::new` applies).
+    pub fn admit_budget(&mut self, frac: f64) -> Result<usize> {
+        let plan = hpa::plan_frac_shapes(&self.shapes, self.kappa,
+                                         frac.clamp(0.0, 0.95))?;
+        let cuts = hpa::cuts(&self.shapes, &plan);
+        let count = self.dense_total - self.dense_selected
+            + hpa::cut_param_count(&self.shapes, &cuts);
+        if let Some(i) = self.variants.iter()
+            .position(|v| v.params_count == count)
+        {
+            return Ok(i);
+        }
+        let spec = self.variant_from_cuts(cuts)?;
+        debug_assert_eq!(spec.params_count, count);
+        let pos = self.variants
+            .partition_point(|v| v.params_count < count);
+        self.variants.insert(pos, spec);
+        self.refresh_byte_stats();
+        Ok(pos)
     }
 
-    /// Pick the largest variant that fits the request's budget
-    /// (0 = unconstrained → largest available). Returns the variant
-    /// index plus an over-budget flag: when the budget is below the
-    /// smallest variant, the smallest one serves anyway but the
-    /// response says so instead of silently over-serving.
+    /// Retire an admitted variant (scale the spectrum back down). Its
+    /// shared weights stay — only the O(blocks) view metadata is
+    /// freed. At least one variant must remain.
+    pub fn retire(&mut self, vi: usize) -> Result<()> {
+        ensure!(vi < self.variants.len(),
+                "variant {vi} out of range ({} admitted)",
+                self.variants.len());
+        ensure!(self.variants.len() > 1,
+                "cannot retire the last admitted variant");
+        self.variants.remove(vi);
+        self.refresh_byte_stats();
+        Ok(())
+    }
+
+    /// The shared master stores (param index + store per SLR block)
+    /// every variant's views read.
+    pub fn masters(&self) -> &[(usize, Arc<FactorStore>)] {
+        &self.masters
+    }
+
+    /// Bytes of the master factor stores alone (the denominator of the
+    /// `--spectrum` smoke's "marginal < 10% of the master store"
+    /// gate).
+    pub fn master_store_bytes(&self) -> usize {
+        self.masters.iter().map(|(_, st)| st.bytes()).sum()
+    }
+
+    /// Bytes shared by *all* variants, counted once: master stores +
+    /// retained base dense parameters. (All shared allocations are
+    /// constructed and owned here, so no pointer dedup is needed.)
+    pub fn shared_bytes(&self) -> usize {
+        let dense: usize = self.base.iter().flatten()
+            .map(|t| 4 * t.numel())
+            .sum();
+        dense + self.master_store_bytes()
+    }
+
+    /// Marginal bytes across every admitted variant — what the whole
+    /// capacity spectrum costs on top of [`Self::shared_bytes`].
+    pub fn marginal_bytes(&self) -> usize {
+        self.variants.iter().map(|v| v.marginal_bytes()).sum()
+    }
+
+    fn refresh_byte_stats(&mut self) {
+        self.stats.shared_bytes = self.shared_bytes();
+        self.stats.marginal_bytes = self.marginal_bytes();
+    }
+
+    /// Assemble a variant from per-block cuts: dense entries clone the
+    /// shared `Arc`s, compressed entries become prefix views of the
+    /// masters. The placeholder written at master positions before the
+    /// view overwrite has an impossible shape, so a bookkeeping bug
+    /// fails loudly at `resolve_model` instead of serving garbage.
+    fn variant_from_cuts(&self, cuts: Vec<BlockCuts>)
+                         -> Result<VariantSpec> {
+        ensure!(cuts.len() == self.masters.len(),
+                "{} cuts for {} masters", cuts.len(), self.masters.len());
+        let mut values: Vec<ParamValue> = self.base.iter()
+            .map(|slot| match slot {
+                Some(t) => ParamValue::Dense(t.clone()),
+                None => ParamValue::Dense(Arc::new(
+                    Tensor::zeros(&[0, 0]))),
+            })
+            .collect();
+        for ((i, store), c) in self.masters.iter().zip(&cuts) {
+            values[*i] = ParamValue::Factored(
+                FactoredLinear::view(store.clone(), c.rank_k,
+                                     c.nnz_cut)?);
+        }
+        let params = ModelParams { values };
+        let params_count = self.dense_total - self.dense_selected
+            + hpa::cut_param_count(&self.shapes, &cuts);
+        // Backends without factored execution get a one-time dense
+        // materialization instead of re-densifying per token.
+        let dense_cache = (!self.rt.supports_incremental())
+            .then(|| params.densify());
+        Ok(VariantSpec { params_count, cuts, params, dense_cache })
+    }
+
+    /// Pick the variant a request's budget snaps to: the largest
+    /// admitted point that fits (0 = unconstrained → largest
+    /// available). Returns the variant index plus an over-budget flag:
+    /// when the budget is below the smallest admitted point, the
+    /// smallest one serves anyway but the response says so instead of
+    /// silently over-serving. Admitting or retiring budgets
+    /// re-snaps subsequent requests automatically — routing reads the
+    /// live variant list.
     pub fn route(&self, budget_params: usize) -> (usize, bool) {
         if budget_params == 0 {
             return (self.variants.len() - 1, false);
@@ -389,6 +560,9 @@ impl<'a> Server<'a> {
             for (vi, idxs) in &groups {
                 let variant = &self.variants[*vi];
                 self.stats.groups += 1;
+                *self.stats.served_by_variant
+                    .entry(variant.params_count)
+                    .or_default() += idxs.len() as u64;
                 if incremental && idxs.len() > 1 {
                     self.stats.packed_rows += idxs.len() as u64;
                     let mut lens: Vec<usize> = idxs.iter()
@@ -492,7 +666,7 @@ mod tests {
         let hidx = server.cfg.param_index("lm_head").unwrap();
         let shape = server.cfg.shape_of("lm_head").unwrap().to_vec();
         server.variants[0].params.values[hidx] =
-            ParamValue::Dense(Tensor::full(&shape, f32::NAN));
+            ParamValue::Dense(Arc::new(Tensor::full(&shape, f32::NAN)));
         let v = &server.variants[0];
         let toks = server.generate_uncached(v, &[1, 2, 3], 4).unwrap();
         assert_eq!(toks.len(), 4);
@@ -533,6 +707,84 @@ mod tests {
         assert!(!over);
     }
 
+    /// The dedup rule is deterministic and documented: among equal
+    /// `params_count` candidates — repeated *or* near-equal budget
+    /// fractions — the earliest admitted wins, and later admits of the
+    /// same count return the existing variant untouched.
+    #[test]
+    fn dedup_keeps_the_earliest_admitted_of_equal_counts() {
+        let rt = Runtime::native();
+        // A fraction perturbed below the parameter-count resolution
+        // must collapse onto the first admit, exactly like an exact
+        // repeat.
+        let server = tiny_server(&rt, &[0.5, 0.5, 0.5 + 1e-12], 4);
+        assert_eq!(server.variants.len(), 2,
+                   "near-equal fracs must dedupe to full + one");
+        let kept = server.variants[0].cuts.clone();
+        // The kept variant is bit-for-bit the *first* 0.5 admit: a
+        // fresh server with a single 0.5 budget carves the same cuts.
+        let first_only = tiny_server(&rt, &[0.5], 4);
+        assert_eq!(kept, first_only.variants[0].cuts,
+                   "dedup did not keep the earliest-admitted variant");
+        // Runtime admits follow the same rule.
+        let mut server = server;
+        let n_before = server.variants.len();
+        let vi = server.admit_budget(0.5).unwrap();
+        assert_eq!(server.variants.len(), n_before,
+                   "duplicate admit must not add a variant");
+        assert_eq!(server.variants[vi].cuts, kept);
+    }
+
+    #[test]
+    fn admit_budget_carves_views_on_a_live_server() {
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[0.6], 4);
+        let counts_before: Vec<usize> =
+            server.variants.iter().map(|v| v.params_count).collect();
+        let marginal_before = server.stats.marginal_bytes;
+        assert!(marginal_before > 0);
+
+        let vi = server.admit_budget(0.3).unwrap();
+        let new_count = server.variants[vi].params_count;
+        assert!(!counts_before.contains(&new_count),
+                "0.3 should carve a new capacity point");
+        // Still strictly ascending → routing snaps onto the new point.
+        for w in server.variants.windows(2) {
+            assert!(w[0].params_count < w[1].params_count);
+        }
+        assert_eq!(server.route(new_count), (vi, false));
+        // The admit cost no weight copies: shared bytes unchanged,
+        // marginal grew by exactly one variant's metadata.
+        assert_eq!(server.stats.shared_bytes, server.shared_bytes());
+        assert_eq!(server.stats.marginal_bytes - marginal_before,
+                   server.variants[vi].marginal_bytes());
+        // Zero-copy means the new views alias the same masters.
+        for ((i, store), c) in
+            server.masters().iter().zip(&server.variants[vi].cuts)
+        {
+            match &server.variants[vi].params.values[*i] {
+                ParamValue::Factored(f) => {
+                    assert_eq!(f.store_ptr(),
+                               Arc::as_ptr(store) as usize);
+                    assert_eq!((f.rank(), f.nnz()),
+                               (c.rank_k, c.nnz_cut));
+                }
+                other => panic!("master slot holds {other:?}"),
+            }
+        }
+
+        // Retire frees only metadata and re-snaps routing.
+        server.retire(vi).unwrap();
+        assert_eq!(server.stats.marginal_bytes, marginal_before);
+        let (snapped, over) = server.route(new_count);
+        assert!(!over || snapped == 0);
+        // The last variant can never be retired.
+        while server.variants.len() > 1 {
+            server.retire(0).unwrap();
+        }
+        assert!(server.retire(0).is_err());
+    }
+
     #[test]
     fn over_budget_flag_reaches_the_response() {
         let rt = Runtime::native();
@@ -553,6 +805,14 @@ mod tests {
         assert!(!got[1].over_budget);
         assert_eq!(got[1].served_params,
                    server.variants.last().unwrap().params_count);
+        // Per-variant served counters saw one request each.
+        assert_eq!(server.stats.served_by_variant
+                       .get(&server.variants[0].params_count),
+                   Some(&1));
+        assert_eq!(server.stats.served_by_variant
+                       .get(&server.variants.last().unwrap()
+                           .params_count),
+                   Some(&1));
     }
 
     #[test]
@@ -659,7 +919,7 @@ mod tests {
         server.run(req_rx, resp_tx).unwrap();
         let got: Vec<Response> = resp_rx.iter().collect();
         assert_eq!(got.len(), 4);
-        let s = server.stats;
+        let s = &server.stats;
         assert_eq!(s.batches, 1,
                    "4 pre-queued requests must drain as one batch");
         assert_eq!(s.groups, 1,
@@ -667,6 +927,10 @@ mod tests {
         assert!((s.groups_per_batch() - 1.0).abs() < 1e-12);
         assert_eq!(s.packed_rows, 4);
         assert_eq!(s.mixed_len_groups, 1);
+        // All four landed on the single (full) variant's counter.
+        assert_eq!(s.served_by_variant
+                       .get(&server.variants[0].params_count),
+                   Some(&4));
     }
 
     #[test]
@@ -690,15 +954,33 @@ mod tests {
     }
 
     #[test]
-    fn compressed_variant_is_factored_and_smaller() {
+    fn spectrum_is_shared_store_plus_integers() {
         let rt = Runtime::native();
-        let server = tiny_server(&rt, &[0.5], 4);
-        // The compressed variant keeps blocks factored and its resident
-        // footprint beats the dense X̂ materialization.
+        let server = tiny_server(&rt, &[0.3, 0.5, 0.7], 4);
+        assert!(server.variants.len() >= 3);
+        // Every variant holds factored views; the compressed ones
+        // would each be lighter than dense even standalone.
         let small = &server.variants[0];
-        assert!(small.n_factored() > 0, "no factored blocks survived");
-        assert!(small.resident_bytes() < small.dense_bytes(),
-                "factored {}B not below dense {}B",
-                small.resident_bytes(), small.dense_bytes());
+        assert!(small.n_factored() > 0, "no factored views survived");
+        assert!(small.materialized_bytes() < small.dense_bytes(),
+                "standalone copy {}B not below dense {}B",
+                small.materialized_bytes(), small.dense_bytes());
+        // The whole spectrum's marginal cost stays below the shared
+        // store even on this deliberately tiny geometry (the <10%
+        // production gate runs at nano scale in
+        // rust/tests/nested_variants.rs and the --spectrum smoke).
+        assert!(server.stats.shared_bytes > 0);
+        assert!(server.stats.marginal_bytes < server.stats.shared_bytes,
+                "marginal {}B not below shared {}B",
+                server.stats.marginal_bytes, server.stats.shared_bytes);
+        // And referencing-everything accounting stays consistent: a
+        // variant references at most shared + its own marginal bytes.
+        for v in &server.variants {
+            assert!(v.resident_bytes()
+                        <= server.shared_bytes() + v.marginal_bytes(),
+                    "variant references {}B > shared {} + marginal {}",
+                    v.resident_bytes(), server.shared_bytes(),
+                    v.marginal_bytes());
+        }
     }
 }

@@ -2,8 +2,10 @@
 //! residual S (dense storage, sparse content), dual Y, and the
 //! block-local regularization state (α, β, ρ).
 
+use anyhow::Result;
+
 use super::metrics::{density, effective_rank_ratio, slr_param_count};
-use super::sparse::{CsrMatrix, FactoredLinear};
+use super::sparse::{CsrMatrix, FactorStore, FactoredLinear};
 use crate::linalg::reconstruct;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -86,17 +88,29 @@ impl SlrBlock {
         out
     }
 
-    /// Deployment form: the (U, s, V) factors plus S converted to CSR —
-    /// what the server evaluates instead of densifying X̂.
+    /// Deployment form: the (U, s, V) factors plus S converted to CSR,
+    /// as a full-capacity [`FactoredLinear`] view over a fresh
+    /// single-owner store — what the server evaluates instead of
+    /// densifying X̂.
     pub fn to_factored(&self) -> FactoredLinear {
         FactoredLinear::new(self.u.clone(), self.s.clone(), self.v.clone(),
                             CsrMatrix::from_dense(&self.sp, S_EPS))
     }
 
-    /// Deployed byte footprint of the factored form (f32 factors + CSR
-    /// residual) — the honest, measurable version of `param_count`.
+    /// Master factor store for elastic serving: the same factors as
+    /// [`Self::to_factored`], but returned as the shareable
+    /// [`FactorStore`] that every budget's zero-copy view is carved
+    /// from (spectrum ordered, S entries magnitude-ranked).
+    pub fn to_store(&self) -> Result<FactorStore> {
+        FactorStore::new(self.u.clone(), self.s.clone(), self.v.clone(),
+                         CsrMatrix::from_dense(&self.sp, S_EPS))
+    }
+
+    /// Deployed byte footprint of a standalone factored copy (f32
+    /// factors + CSR residual) — the honest, measurable version of
+    /// `param_count`.
     pub fn resident_bytes(&self) -> usize {
-        self.to_factored().bytes()
+        self.to_factored().materialized_bytes()
     }
 
     /// Synthetic developed block: random descending spectrum and a
@@ -257,8 +271,12 @@ mod tests {
         assert_eq!(b.rank(), 3);
         let f = b.to_factored();
         assert!(f.to_dense().dist_frob(&b.xhat()) < 1e-6);
-        assert_eq!(f.sp.nnz(), b.nnz());
-        assert_eq!(b.resident_bytes(), f.bytes());
+        assert_eq!(f.nnz(), b.nnz());
+        assert_eq!(b.resident_bytes(), f.materialized_bytes());
+        // The shareable master store holds the same capacity.
+        let st = b.to_store().unwrap();
+        assert_eq!((st.rank_max(), st.nnz_max()), (3, b.nnz()));
+        assert_eq!(st.s, b.s, "descending spectrum must not be permuted");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use super::block::{SlrBlock, S_EPS};
 use super::metrics::slr_param_count;
+use super::sparse::FactorStore;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -31,6 +32,61 @@ pub struct HpaPlan {
     pub c_s: usize,
 }
 
+/// Shape summary of one deployed block — everything HPA planning needs,
+/// without keeping the training-time `SlrBlock` (dense S, dual Y)
+/// alive. The serving path derives these from its master
+/// [`FactorStore`]s so budgets can be admitted on a live server in
+/// O(blocks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockShape {
+    /// Output dimension.
+    pub n: usize,
+    /// Input dimension.
+    pub m: usize,
+    /// Retained rank of the master factors.
+    pub rank: usize,
+    /// Stored S entries of the master residual.
+    pub nnz: usize,
+}
+
+impl BlockShape {
+    /// Shape of a training-time surrogate block.
+    pub fn of(b: &SlrBlock) -> Self {
+        BlockShape { n: b.n, m: b.m, rank: b.rank(), nnz: b.nnz() }
+    }
+
+    /// Shape of a deployed master store.
+    pub fn of_store(st: &FactorStore) -> Self {
+        BlockShape { n: st.n(), m: st.m(), rank: st.rank_max(),
+                     nnz: st.nnz_max() }
+    }
+}
+
+/// Per-block nested-truncation cuts derived from a plan: keep the top
+/// `rank_k` singular directions and the top `nnz_cut` S entries by
+/// magnitude. Because the master store orders both (spectrum
+/// descending, entries magnitude-ranked), a cut pair *is* a deployable
+/// variant of the block — applying it is a prefix view, not a copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockCuts {
+    /// Singular directions kept.
+    pub rank_k: usize,
+    /// S entries kept (top-|.|).
+    pub nnz_cut: usize,
+}
+
+impl BlockCuts {
+    /// Full-capacity cuts (the untruncated variant) for a shape.
+    pub fn full(shape: &BlockShape) -> Self {
+        BlockCuts { rank_k: shape.rank, nnz_cut: shape.nnz }
+    }
+
+    /// Surrogate parameter count of a block truncated to these cuts.
+    pub fn param_count(&self, shape: &BlockShape) -> usize {
+        slr_param_count(self.rank_k, shape.n, shape.m, self.nnz_cut)
+    }
+}
+
 /// Accounting of an applied plan.
 #[derive(Clone, Debug)]
 pub struct HpaReport {
@@ -43,15 +99,24 @@ pub struct HpaReport {
 /// Derive (φ_L, φ_S) for removing `budget` parameters at mixing κ.
 pub fn plan(blocks: &[SlrBlock], kappa: f64, budget: usize)
             -> Result<HpaPlan> {
+    let shapes: Vec<BlockShape> =
+        blocks.iter().map(BlockShape::of).collect();
+    plan_shapes(&shapes, kappa, budget)
+}
+
+/// [`plan`] over pre-extracted [`BlockShape`]s — the form the serving
+/// path uses once the training-time blocks are gone.
+pub fn plan_shapes(shapes: &[BlockShape], kappa: f64, budget: usize)
+                   -> Result<HpaPlan> {
     if !(0.0..=1.0).contains(&kappa) {
         bail!("κ must be in [0,1], got {kappa}");
     }
     // C_L: parameters freed if every singular value were removed.
-    let c_l: usize = blocks
+    let c_l: usize = shapes
         .iter()
-        .map(|b| b.rank() * (b.n + b.m + 1))
+        .map(|b| b.rank * (b.n + b.m + 1))
         .sum();
-    let c_s: usize = blocks.iter().map(|b| b.nnz()).sum();
+    let c_s: usize = shapes.iter().map(|b| b.nnz).sum();
     if budget > c_l + c_s {
         bail!("budget {budget} exceeds removable pool {}", c_l + c_s);
     }
@@ -77,10 +142,48 @@ pub fn plan(blocks: &[SlrBlock], kappa: f64, budget: usize)
 /// `salaad compress --budget-frac`, the elastic sweep).
 pub fn plan_frac(blocks: &[SlrBlock], kappa: f64, frac: f64)
                  -> Result<HpaPlan> {
-    let pool = plan(blocks, kappa, 0)?;
+    let shapes: Vec<BlockShape> =
+        blocks.iter().map(BlockShape::of).collect();
+    plan_frac_shapes(&shapes, kappa, frac)
+}
+
+/// [`plan_frac`] over pre-extracted [`BlockShape`]s.
+pub fn plan_frac_shapes(shapes: &[BlockShape], kappa: f64, frac: f64)
+                        -> Result<HpaPlan> {
+    let pool = plan_shapes(shapes, kappa, 0)?;
     let budget =
         ((pool.c_l + pool.c_s) as f64 * frac.clamp(0.0, 1.0)) as usize;
-    plan(blocks, kappa, budget)
+    plan_shapes(shapes, kappa, budget)
+}
+
+/// Per-block prefix cuts realizing a plan: the exact (rank, nnz) that
+/// [`apply`]'s materialized truncation keeps, expressed as nested-view
+/// coordinates instead of copies. `apply` and `cuts` share one
+/// per-block rounding helper (`cuts_one`), and the
+/// `apply_keeps_exactly_the_cuts` test pins the equivalence.
+pub fn cuts(shapes: &[BlockShape], plan_: &HpaPlan) -> Vec<BlockCuts> {
+    shapes.iter()
+        .map(|s| cuts_one(s, plan_.phi_l, plan_.phi_s))
+        .collect()
+}
+
+/// Prefix cuts for one block under global ratios (φ_L, φ_S): drop the
+/// `round(rank·φ_L)` smallest singular values and the
+/// `round(nnz·φ_S)` smallest-|.| S entries — i.e. keep the
+/// complementary prefixes of the magnitude-ordered master.
+fn cuts_one(shape: &BlockShape, phi_l: f64, phi_s: f64) -> BlockCuts {
+    let k_drop =
+        ((shape.rank as f64 * phi_l).round() as usize).min(shape.rank);
+    let s_drop =
+        ((shape.nnz as f64 * phi_s).round() as usize).min(shape.nnz);
+    BlockCuts { rank_k: shape.rank - k_drop,
+                nnz_cut: shape.nnz - s_drop }
+}
+
+/// Total surrogate parameter count of a cut set over its shapes.
+pub fn cut_param_count(shapes: &[BlockShape], cuts: &[BlockCuts])
+                       -> usize {
+    shapes.iter().zip(cuts).map(|(s, c)| c.param_count(s)).sum()
 }
 
 /// Apply a plan, producing truncated copies of the blocks (the deployed
@@ -105,17 +208,21 @@ pub fn apply(blocks: &[SlrBlock], plan_: &HpaPlan)
 }
 
 /// Remove the smallest `phi_l` fraction of singular values and the
-/// smallest `phi_s` fraction of sparse nonzeros from one block.
+/// smallest `phi_s` fraction of sparse nonzeros from one block — the
+/// materialized form of the same [`cuts_one`] arithmetic the nested
+/// serving views use, so a truncated copy and a prefix view always
+/// keep identical structure.
 fn truncate_block(b: &SlrBlock, phi_l: f64, phi_s: f64)
                   -> (SlrBlock, usize) {
     let mut out = b.clone();
     let mut freed = 0usize;
+    let c = cuts_one(&BlockShape::of(b), phi_l, phi_s);
 
     // --- Low-rank truncation: drop the k_drop smallest values.
     let r = b.rank();
-    let k_drop = ((r as f64 * phi_l).round() as usize).min(r);
+    let k_drop = r - c.rank_k;
     if k_drop > 0 {
-        let keep = r - k_drop;
+        let keep = c.rank_k;
         // Singular values are stored descending; keep the head.
         let mut order: Vec<usize> = (0..r).collect();
         order.sort_by(|&i, &j| b.s[j].partial_cmp(&b.s[i]).unwrap());
@@ -140,7 +247,7 @@ fn truncate_block(b: &SlrBlock, phi_l: f64, phi_s: f64)
 
     // --- Sparse truncation: zero the smallest-|.| phi_s fraction.
     let nnz = b.nnz();
-    let s_drop = ((nnz as f64 * phi_s).round() as usize).min(nnz);
+    let s_drop = nnz - c.nnz_cut;
     if s_drop > 0 {
         let mut mags: Vec<(f32, usize)> = b
             .sp
@@ -302,6 +409,59 @@ mod tests {
         // Out-of-range fractions clamp instead of erroring.
         assert!(plan_frac(&blocks, 0.7, 1.7).is_ok());
         assert_eq!(plan_frac(&blocks, 0.7, -0.3).unwrap().budget, 0);
+    }
+
+    /// The nested-serving contract: the cut coordinates must describe
+    /// exactly the structure a materialized `apply` keeps, block for
+    /// block — including the full-capacity (zero-budget) and
+    /// everything-removed edges.
+    #[test]
+    fn apply_keeps_exactly_the_cuts() {
+        prop::check("hpa_cuts_match_apply", 10, |rng| {
+            let blocks = random_blocks(rng, 4);
+            let shapes: Vec<BlockShape> =
+                blocks.iter().map(BlockShape::of).collect();
+            let pool = plan_shapes(&shapes, 0.5, 0).unwrap();
+            let frac = rng.next_f64(); // 0..1 of the removable pool
+            let budget =
+                ((pool.c_l + pool.c_s) as f64 * frac) as usize;
+            let kappa = rng.next_f64();
+            let p = plan_shapes(&shapes, kappa, budget).unwrap();
+            // Same plan through both planning entrypoints.
+            let p2 = plan(&blocks, kappa, budget).unwrap();
+            assert_eq!((p.phi_l, p.phi_s), (p2.phi_l, p2.phi_s));
+            let c = cuts(&shapes, &p);
+            let (trunc, report) = apply(&blocks, &p);
+            for ((b, cut), shape) in trunc.iter().zip(&c).zip(&shapes) {
+                assert_eq!(b.rank(), cut.rank_k,
+                           "rank cut mismatch at φ_L={}", p.phi_l);
+                assert_eq!(b.nnz(), cut.nnz_cut,
+                           "nnz cut mismatch at φ_S={}", p.phi_s);
+                assert_eq!(b.param_count(), cut.param_count(shape));
+            }
+            assert_eq!(report.params_after,
+                       cut_param_count(&shapes, &c));
+        });
+    }
+
+    #[test]
+    fn full_cuts_are_identity_and_param_counts_add_up() {
+        let mut rng = Rng::new(9);
+        let blocks = random_blocks(&mut rng, 3);
+        let shapes: Vec<BlockShape> =
+            blocks.iter().map(BlockShape::of).collect();
+        let full: Vec<BlockCuts> =
+            shapes.iter().map(BlockCuts::full).collect();
+        assert_eq!(cut_param_count(&shapes, &full),
+                   total_params(&blocks));
+        // plan_frac_shapes(0) derives the same identity cuts.
+        let p = plan_frac_shapes(&shapes, 0.7, 0.0).unwrap();
+        assert_eq!(cuts(&shapes, &p), full);
+        // And BlockShape::of_store agrees with BlockShape::of.
+        for b in &blocks {
+            let st = b.to_store().unwrap();
+            assert_eq!(BlockShape::of_store(&st), BlockShape::of(b));
+        }
     }
 
     #[test]

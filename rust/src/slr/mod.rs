@@ -14,5 +14,5 @@ pub mod sparse;
 
 pub use block::SlrBlock;
 pub use controller::IController;
-pub use hpa::{HpaPlan, HpaReport};
-pub use sparse::{CsrMatrix, FactoredLinear};
+pub use hpa::{BlockCuts, BlockShape, HpaPlan, HpaReport};
+pub use sparse::{CsrMatrix, FactorStore, FactoredLinear};

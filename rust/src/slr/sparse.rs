@@ -1,20 +1,45 @@
-//! Compressed sparse row (CSR) storage for the S component, plus the
-//! deployable factored-linear representation built on it.
+//! Compressed sparse row (CSR) storage for the S component, the shared
+//! master factor store, and the zero-copy factored-linear *views* built
+//! on it.
 //!
 //! The training path keeps S dense-stored for fast proximal updates;
-//! *deployment* converts to CSR, which is what actually realizes the
-//! paper's memory claim (nnz values + column indices + row offsets
-//! instead of n·m floats). `spmv`/`spmm_t` provide the factored
-//! inference path on the Rust side, mirroring the `slr_matmul` Pallas
-//! kernel's residual term. [`FactoredLinear`] bundles the low-rank
-//! factors with the CSR residual into the unit the serving runtime
-//! evaluates without ever densifying X̂ = L + S.
+//! *deployment* converts each SLR block once into a [`FactorStore`] —
+//! the immutable master copy of (U, s, V) plus S in CSR with a
+//! per-entry magnitude rank — and every served capacity is a
+//! [`FactoredLinear`] **view** over that store: an `Arc` plus two
+//! integers `{rank_k, nnz_cut}`. Truncation is a *prefix*: the store
+//! keeps singular values non-increasing and ranks S entries by
+//! magnitude, so the top-k/top-q structure of every budget is already
+//! laid out in the master and a new budget costs no weight copies
+//! (the paper's elastic-deployment claim, realized in resident bytes).
+//!
+//! `spmv`/`spmm_t` provide the factored inference path on the Rust
+//! side, mirroring the `slr_matmul` Pallas kernel's residual term.
+//!
+//! # Bit-consistency contract
+//!
+//! A view's [`FactoredLinear::matmul_t`] and its
+//! [`FactoredLinear::row_dense_into`] replay, arithmetic step for
+//! arithmetic step, what the same product would compute over a
+//! *standalone materialized copy* of the prefix (contiguous
+//! `U[:, :k]`, `s[:k]`, `V[:, :k]` and the top-`nnz_cut` CSR evaluated
+//! by the pre-view code): the first GEMM accumulates ascending-`k`
+//! with one rounding step per term ([`crate::linalg::matmul`]'s
+//! contract, via [`crate::linalg::axpy8`]), the second is
+//! [`crate::linalg::dot8`] per element
+//! ([`crate::linalg::matmul_nt`]'s contract), and the residual
+//! accumulates kept entries in ascending column order per row exactly
+//! like [`CsrMatrix::spmm_t`]. Views are therefore **bit-identical**
+//! to materialized truncation — pinned by the property tests below and
+//! by `rust/tests/nested_variants.rs` at the whole-model level.
 
 #![warn(missing_docs)]
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
-use crate::linalg::{matmul, matmul_nt, reconstruct};
+use crate::linalg::{axpy8, dot8, matmul, matmul_nt, reconstruct};
 use crate::tensor::Tensor;
 
 /// Compressed-sparse-row f32 matrix.
@@ -149,126 +174,478 @@ impl CsrMatrix {
     }
 }
 
-/// Deployed byte footprint of a factored SLR block: f32 factors
-/// (U: n·r, s: r, V: m·r) + CSR residual.
+/// Deployed byte footprint of a *standalone* factored SLR block: f32
+/// factors (U: n·r, s: r, V: m·r) + CSR residual of `nnz` entries. This
+/// is what one materialized variant used to cost per block before the
+/// shared-store refactor — the baseline the zero-copy views are
+/// measured against.
 pub fn slr_block_bytes(n: usize, m: usize, rank: usize,
                        csr: &CsrMatrix) -> usize {
     4 * (n * rank + rank + m * rank) + csr.bytes()
 }
 
-/// A deployed SLR linear layer kept in factored form: Ŵ = U diag(s) Vᵀ
-/// + S with U (n×r), s (r), V (m×r) and S in CSR. This is the native
-/// analog of the `slr_matmul` Pallas kernel's parameter layout — the
-/// representation the server holds so the paper's memory claim is
-/// realized *at inference*, not just in accounting.
+/// The immutable master copy of one SLR block's deployment state:
+/// Ŵ = U diag(s) Vᵀ + S with U (n×r_max), s (r_max), V (m×r_max) and S
+/// in CSR, plus a per-entry **magnitude rank**. Shared behind an `Arc`
+/// by every [`FactoredLinear`] view carved from it.
+///
+/// # Nesting invariants
+///
+/// - `s` is non-increasing (the constructor sorts factor columns by
+///   descending singular value, stably, if the input is not already
+///   ordered — SVT output is), so the top-k spectrum of *any* budget
+///   is the prefix `s[..k]` / `U[:, :k]` / `V[:, :k]`.
+/// - `mag_rank[e]` is the position of CSR entry `e` in the global
+///   magnitude-descending order of this block's S entries (ties broken
+///   toward dropping the earlier row-major entry first, matching
+///   `hpa`'s historical tie-breaking), so the top-q sparse residual of
+///   any budget is exactly `{e : mag_rank[e] < q}` — still iterated in
+///   ascending-column CSR order at evaluation time, which is what
+///   keeps views bit-identical to materialized truncation.
 #[derive(Clone, Debug)]
-pub struct FactoredLinear {
-    /// Output dimension (rows of Ŵ).
-    pub n: usize,
-    /// Input dimension (columns of Ŵ).
-    pub m: usize,
-    /// Left factor, n×r.
+pub struct FactorStore {
+    n: usize,
+    m: usize,
+    /// Left factor, n×r_max.
     pub u: Tensor,
-    /// Singular values, length r.
+    /// Singular values, length r_max, non-increasing.
     pub s: Vec<f32>,
-    /// Right factor, m×r.
+    /// Right factor, m×r_max.
     pub v: Tensor,
-    /// Sparse residual S, n×m.
+    /// Sparse residual S in CSR (row-major, ascending columns).
     pub sp: CsrMatrix,
+    /// Per-entry global magnitude rank (see struct docs).
+    pub mag_rank: Vec<u32>,
 }
 
-impl FactoredLinear {
-    /// Bundle factors + residual, panicking on inconsistent shapes
-    /// (use [`FactoredLinear::validate`] for a fallible check).
-    pub fn new(u: Tensor, s: Vec<f32>, v: Tensor, sp: CsrMatrix) -> Self {
-        let f = FactoredLinear {
-            n: u.nrows(),
-            m: v.nrows(),
-            u,
-            s,
-            v,
-            sp,
-        };
-        f.validate().expect("inconsistent factored linear");
-        f
+impl FactorStore {
+    /// Build a master store from factor parts, validating shapes,
+    /// ordering the spectrum (stable descending sort of the factor
+    /// columns when `s` is not already non-increasing) and computing
+    /// the S magnitude ranks.
+    pub fn new(mut u: Tensor, mut s: Vec<f32>, mut v: Tensor,
+               sp: CsrMatrix) -> Result<Self> {
+        let r = s.len();
+        let (n, m) = (u.nrows(), v.nrows());
+        ensure!(u.shape == [n, r],
+                "U shape {:?} != [{n}, {r}]", u.shape);
+        ensure!(v.shape == [m, r],
+                "V shape {:?} != [{m}, {r}]", v.shape);
+        ensure!(sp.n == n && sp.m == m,
+                "S is {}x{}, factors are {n}x{m}", sp.n, sp.m);
+        if !s.is_sorted_by(|a, b| a >= b) {
+            // Stable descending sort — the same comparator and
+            // stability `hpa::apply` has always used, so a store built
+            // from unsorted factors matches its truncated copies.
+            let mut order: Vec<usize> = (0..r).collect();
+            order.sort_by(|&i, &j| s[j].total_cmp(&s[i]));
+            let mut su = Tensor::zeros(&[n, r]);
+            let mut sv = Tensor::zeros(&[m, r]);
+            let mut ss = Vec::with_capacity(r);
+            for (dst, &src) in order.iter().enumerate() {
+                ss.push(s[src]);
+                for i in 0..n {
+                    su.data[i * r + dst] = u.data[i * r + src];
+                }
+                for i in 0..m {
+                    sv.data[i * r + dst] = v.data[i * r + src];
+                }
+            }
+            u = su;
+            s = ss;
+            v = sv;
+        }
+        let nnz = sp.nnz();
+        // Stable ascending-|value| sort over CSR entry order; entry
+        // `order[p]` is the (p+1)-th smallest, so its magnitude rank
+        // (descending) is `nnz − 1 − p`. Ties keep entry order, which
+        // drops the earlier row-major entry first — exactly what
+        // `hpa`'s drop-smallest truncation always did.
+        let mut order: Vec<u32> = (0..nnz as u32).collect();
+        order.sort_by(|&a, &b| {
+            sp.values[a as usize].abs()
+                .total_cmp(&sp.values[b as usize].abs())
+        });
+        let mut mag_rank = vec![0u32; nnz];
+        for (p, &e) in order.iter().enumerate() {
+            mag_rank[e as usize] = (nnz - 1 - p) as u32;
+        }
+        Ok(FactorStore { n, m, u, s, v, sp, mag_rank })
     }
 
-    /// Retained rank r (length of `s`).
-    pub fn rank(&self) -> usize {
+    /// Output dimension (rows of Ŵ).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Input dimension (columns of Ŵ).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Master rank r_max — the largest rank any view can keep.
+    pub fn rank_max(&self) -> usize {
         self.s.len()
     }
 
-    /// Check factor/residual shape consistency.
+    /// Master S entry count — the largest residual any view can keep.
+    pub fn nnz_max(&self) -> usize {
+        self.sp.nnz()
+    }
+
+    /// Resident bytes of the master store: f32 factors + CSR residual
+    /// + the u32 magnitude ranks. Counted **once** no matter how many
+    /// views share the store.
+    pub fn bytes(&self) -> usize {
+        slr_block_bytes(self.n, self.m, self.rank_max(), &self.sp)
+            + self.mag_rank.len() * 4
+    }
+}
+
+/// Input-row threshold above which a strict-prefix view copies its
+/// factors into contiguous scratch to run the tiled, thread-parallel
+/// GEMM kernels (below it, the strided in-place microloops win — the
+/// O((n+m)·k) copy would cost as much as the t·k·(n+m) product
+/// itself). Both paths are bit-identical, so the threshold only moves
+/// speed, never results.
+const PREFIX_COPY_ROWS: usize = 4;
+
+/// A deployed SLR linear layer as a **zero-copy view** over a shared
+/// [`FactorStore`]: Ŵ_view = U[:, :rank_k] diag(s[:rank_k])
+/// V[:, :rank_k]ᵀ + top-`nnz_cut` entries of S. The view owns an `Arc`
+/// and two integers — carving another capacity from the same store
+/// costs no weight copies ([`FactoredLinear::marginal_bytes`]).
+///
+/// This is the native analog of the `slr_matmul` Pallas kernel's
+/// parameter layout, extended with the nesting the paper's elastic
+/// deployment needs: the serving runtime holds one view per (variant,
+/// block) and the memory claim is realized *at inference*, not just in
+/// accounting.
+#[derive(Clone, Debug)]
+pub struct FactoredLinear {
+    store: Arc<FactorStore>,
+    rank_k: usize,
+    nnz_cut: usize,
+}
+
+impl FactoredLinear {
+    /// Bundle standalone factor parts into a fresh single-owner store
+    /// and return the full-capacity view, panicking on inconsistent
+    /// shapes (use [`FactorStore::new`] + [`FactoredLinear::view`] for
+    /// a fallible, sharing construction).
+    pub fn new(u: Tensor, s: Vec<f32>, v: Tensor, sp: CsrMatrix) -> Self {
+        let store = FactorStore::new(u, s, v, sp)
+            .expect("inconsistent factored linear");
+        Self::full(Arc::new(store))
+    }
+
+    /// Full-capacity view of a shared store (`rank_k = r_max`,
+    /// `nnz_cut = nnz_max`).
+    pub fn full(store: Arc<FactorStore>) -> Self {
+        let (rank_k, nnz_cut) = (store.rank_max(), store.nnz_max());
+        FactoredLinear { store, rank_k, nnz_cut }
+    }
+
+    /// Prefix view keeping the top `rank_k` singular directions and the
+    /// top `nnz_cut` S entries by magnitude. Errors when a cut exceeds
+    /// the master capacity.
+    pub fn view(store: Arc<FactorStore>, rank_k: usize, nnz_cut: usize)
+                -> Result<Self> {
+        ensure!(rank_k <= store.rank_max(),
+                "rank cut {rank_k} exceeds master rank {}",
+                store.rank_max());
+        ensure!(nnz_cut <= store.nnz_max(),
+                "nnz cut {nnz_cut} exceeds master nnz {}",
+                store.nnz_max());
+        Ok(FactoredLinear { store, rank_k, nnz_cut })
+    }
+
+    /// The shared master store this view reads.
+    pub fn store(&self) -> &Arc<FactorStore> {
+        &self.store
+    }
+
+    /// Output dimension (rows of Ŵ).
+    pub fn n(&self) -> usize {
+        self.store.n
+    }
+
+    /// Input dimension (columns of Ŵ).
+    pub fn m(&self) -> usize {
+        self.store.m
+    }
+
+    /// Retained rank of this view.
+    pub fn rank(&self) -> usize {
+        self.rank_k
+    }
+
+    /// Retained S entries of this view (magnitude ranks are distinct,
+    /// so the cut *is* the count).
+    pub fn nnz(&self) -> usize {
+        self.nnz_cut
+    }
+
+    /// Check view invariants against the store (always true for values
+    /// built through [`Self::view`]/[`Self::full`]).
     pub fn validate(&self) -> Result<()> {
-        let r = self.rank();
-        ensure!(self.u.shape == [self.n, r],
-                "U shape {:?} != [{}, {r}]", self.u.shape, self.n);
-        ensure!(self.v.shape == [self.m, r],
-                "V shape {:?} != [{}, {r}]", self.v.shape, self.m);
-        ensure!(self.sp.n == self.n && self.sp.m == self.m,
-                "S is {}x{}, factors are {}x{}", self.sp.n, self.sp.m,
-                self.n, self.m);
+        ensure!(self.rank_k <= self.store.rank_max()
+                    && self.nnz_cut <= self.store.nnz_max(),
+                "view cuts ({}, {}) exceed master ({}, {})",
+                self.rank_k, self.nnz_cut, self.store.rank_max(),
+                self.store.nnz_max());
         Ok(())
     }
 
-    /// Resident deployment footprint in bytes (factors + CSR residual).
-    pub fn bytes(&self) -> usize {
-        slr_block_bytes(self.n, self.m, self.rank(), &self.sp)
+    /// Bytes this view itself occupies: an `Arc` pointer plus the two
+    /// cuts. The whole point of the refactor — a served capacity is a
+    /// few integers, not a weight copy.
+    pub fn marginal_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
     }
 
-    /// Y = X · Ŵᵀ for row-major X (t×m) → (t×n), evaluated as
-    /// x·V·diag(s)·Uᵀ + x·Sᵀ — never materializing Ŵ. Cost is
-    /// O(t·r·(n+m) + t·nnz) against the dense path's O(t·n·m).
-    pub fn matmul_t(&self, x: &Tensor) -> Tensor {
-        assert_eq!(x.ncols(), self.m, "input dim {} != {}", x.ncols(),
-                   self.m);
-        if self.rank() == 0 {
-            return self.sp.spmm_t(x);
+    /// Bytes of the shared master store backing this view (count once
+    /// per store across views — see `serve::Server::shared_bytes`).
+    pub fn store_bytes(&self) -> usize {
+        self.store.bytes()
+    }
+
+    /// Address of the backing store allocation, for callers that
+    /// deduplicate shared bytes across views.
+    pub fn store_ptr(&self) -> usize {
+        Arc::as_ptr(&self.store) as usize
+    }
+
+    /// Bytes a *standalone* materialization of this view would occupy
+    /// (contiguous prefix factors + top-`nnz_cut` CSR) — the
+    /// pre-refactor per-variant cost, kept for accounting and the
+    /// serve smoke's "spectrum is nearly free" comparison.
+    pub fn materialized_bytes(&self) -> usize {
+        let (n, m, k) = (self.n(), self.m(), self.rank_k);
+        4 * (n * k + k + m * k) + self.nnz_cut * 8 + (n + 1) * 4
+    }
+
+    /// Contiguous copies of the rank-prefix factors (U[:, :k], V[:,
+    /// :k]) — O((n+m)·k) scratch that lets wide products run on the
+    /// tiled GEMM kernels (see [`Self::matmul_t`]).
+    fn prefix_factors(&self) -> (Tensor, Tensor) {
+        let st = &*self.store;
+        let (n, m, k) = (st.n, st.m, self.rank_k);
+        let mut u = Tensor::zeros(&[n, k]);
+        for i in 0..n {
+            u.row_mut(i).copy_from_slice(&st.u.row(i)[..k]);
         }
-        let r = self.rank();
-        let mut xv = matmul(x, &self.v); // (t, r)
-        for i in 0..xv.nrows() {
-            let row = xv.row_mut(i);
-            for (xj, sj) in row.iter_mut().zip(&self.s) {
-                *xj *= *sj;
+        let mut v = Tensor::zeros(&[m, k]);
+        for i in 0..m {
+            v.row_mut(i).copy_from_slice(&st.v.row(i)[..k]);
+        }
+        (u, v)
+    }
+
+    /// Copy this view's prefix out into a standalone [`FactoredLinear`]
+    /// with its own contiguous single-owner store — the equivalence
+    /// oracle for the zero-copy path (its evaluation is bit-identical
+    /// to the view's, pinned by the tests below) and the shape
+    /// `hpa::apply`-style materialized truncation always produced.
+    pub fn materialize(&self) -> FactoredLinear {
+        let st = &*self.store;
+        let (n, m, k) = (st.n, st.m, self.rank_k);
+        let (u, v) = self.prefix_factors();
+        let s = st.s[..k].to_vec();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u32);
+        for i in 0..n {
+            let (lo, hi) = (st.sp.indptr[i] as usize,
+                            st.sp.indptr[i + 1] as usize);
+            for e in lo..hi {
+                if (st.mag_rank[e] as usize) < self.nnz_cut {
+                    indices.push(st.sp.indices[e]);
+                    values.push(st.sp.values[e]);
+                }
             }
+            indptr.push(indices.len() as u32);
         }
-        let mut out = matmul_nt(&xv, &self.u); // (t, n)
-        out.add_assign(&self.sp.spmm_t(x));
+        FactoredLinear::new(u, s, v,
+                            CsrMatrix { n, m, indptr, indices, values })
+    }
+
+    /// Y = X · Ŵ_viewᵀ for row-major X (t×m) → (t×n), evaluated as
+    /// x·V[:, :k]·diag(s[:k])·U[:, :k]ᵀ + x·S_cutᵀ — reading rank-prefix
+    /// slices of the master factors (with at most O((n+m)·k)
+    /// transient scratch when a wide product is worth the tiled
+    /// kernels — never a per-variant resident copy) and skipping S
+    /// entries past the magnitude cut. Cost is
+    /// O(t·k·(n+m) + t·nnz_master) against the dense path's
+    /// O(t·n·m) (the residual scans master entries and skips the
+    /// truncated tail — a predictable branch, no copies).
+    ///
+    /// Bit-identical to evaluating [`Self::materialize`] — see the
+    /// module-level contract.
+    pub fn matmul_t(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ncols(), self.m(), "input dim {} != {}", x.ncols(),
+                   self.m());
+        if self.rank_k == 0 {
+            return self.spmm_t_cut(x);
+        }
+        let st = &*self.store;
+        let (t, k, r) = (x.nrows(), self.rank_k, st.rank_max());
+        // Every branch below produces identical bits (the tiled
+        // kernels' per-element order *is* the strided-prefix order —
+        // module contract), so the dispatch is purely about speed:
+        // - full-rank view: the master factors already are the
+        //   contiguous operands — tiled, thread-parallel kernels, no
+        //   copy;
+        // - wide inputs over a strict prefix: one O((n+m)·k) copy
+        //   buys the tiled kernels for O(t·k·(n+m)) of GEMM work;
+        // - narrow inputs (decode steps): strided in-place microloops,
+        //   where a prefix copy would cost as much as the product.
+        let mut out = if k == r {
+            let mut xv = matmul(x, &st.v); // (t, k)
+            Self::scale_cols(&mut xv, &st.s[..k]);
+            matmul_nt(&xv, &st.u) // (t, n)
+        } else if t >= PREFIX_COPY_ROWS {
+            let (u_k, v_k) = self.prefix_factors();
+            let mut xv = matmul(x, &v_k);
+            Self::scale_cols(&mut xv, &st.s[..k]);
+            matmul_nt(&xv, &u_k)
+        } else {
+            // xv = x · V[:, :k]: ascending-l accumulation, one
+            // rounding step per term per element — `linalg::matmul`'s
+            // contract, applied to the master's k-wide row prefixes
+            // (row stride r).
+            let mut xv = Tensor::zeros(&[t, k]);
+            for i in 0..t {
+                let xrow = x.row(i);
+                let orow = xv.row_mut(i);
+                for (l, &xl) in xrow.iter().enumerate() {
+                    axpy8(orow, &st.v.data[l * r..l * r + k], xl);
+                }
+            }
+            Self::scale_cols(&mut xv, &st.s[..k]);
+            // out = xv · U[:, :k]ᵀ: every element is exactly
+            // dot8(xv.row(i), U.row(j)[..k]) — `linalg::matmul_nt`'s
+            // contract on the prefix slices.
+            let n = st.n;
+            let mut out = Tensor::zeros(&[t, n]);
+            for i in 0..t {
+                let a = xv.row(i);
+                let orow = out.row_mut(i);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = dot8(a, &st.u.data[j * r..j * r + k]);
+                }
+            }
+            out
+        };
+        out.add_assign(&self.spmm_t_cut(x));
         out
     }
 
-    /// Write dense row i of Ŵ into `out` (the factored embedding-lookup
-    /// path: U[i,:]·diag(s)·Vᵀ + S[i,:]).
+    /// Scale column `c` of every row by `s[c]` (the diag(s) step,
+    /// shared by all three GEMM dispatch branches).
+    fn scale_cols(xv: &mut Tensor, s: &[f32]) {
+        for i in 0..xv.nrows() {
+            for (xj, sj) in xv.row_mut(i).iter_mut().zip(s) {
+                *xj *= *sj;
+            }
+        }
+    }
+
+    /// Y = X · S_cutᵀ over the magnitude-cut residual: per output
+    /// element, kept entries accumulate in ascending-column CSR order
+    /// with one rounding step each — [`CsrMatrix::spmm_t`] over the
+    /// materialized cut, without building it.
+    fn spmm_t_cut(&self, x: &Tensor) -> Tensor {
+        let st = &*self.store;
+        if self.nnz_cut >= st.nnz_max() {
+            return st.sp.spmm_t(x); // full residual: no rank checks
+        }
+        assert_eq!(x.ncols(), st.m);
+        let t = x.nrows();
+        let cut = self.nnz_cut as u32;
+        let mut out = Tensor::zeros(&[t, st.n]);
+        for r in 0..t {
+            let xrow = x.row(r);
+            let orow = out.row_mut(r);
+            for i in 0..st.n {
+                let (lo, hi) = (st.sp.indptr[i] as usize,
+                                st.sp.indptr[i + 1] as usize);
+                let mut acc = 0.0f32;
+                for e in lo..hi {
+                    if st.mag_rank[e] < cut {
+                        acc += st.sp.values[e]
+                            * xrow[st.sp.indices[e] as usize];
+                    }
+                }
+                orow[i] = acc;
+            }
+        }
+        out
+    }
+
+    /// Write dense row i of Ŵ_view into `out` (the factored
+    /// embedding-lookup path: U[i, :k]·diag(s[:k])·V[:, :k]ᵀ +
+    /// S_cut[i, :]), reading master prefixes in place.
     pub fn row_dense_into(&self, i: usize, out: &mut [f32]) {
-        assert_eq!(out.len(), self.m);
+        let st = &*self.store;
+        assert_eq!(out.len(), st.m);
         out.fill(0.0);
-        let r = self.rank();
-        for k in 0..r {
-            let c = self.u.data[i * r + k] * self.s[k];
+        let r = st.rank_max();
+        for kk in 0..self.rank_k {
+            let c = st.u.data[i * r + kk] * st.s[kk];
             if c == 0.0 {
                 continue;
             }
             for (j, o) in out.iter_mut().enumerate() {
-                *o += c * self.v.data[j * r + k];
+                *o += c * st.v.data[j * r + kk];
             }
         }
-        let (lo, hi) = (self.sp.indptr[i] as usize,
-                        self.sp.indptr[i + 1] as usize);
-        for k in lo..hi {
-            out[self.sp.indices[k] as usize] += self.sp.values[k];
+        let cut = self.nnz_cut as u32;
+        let (lo, hi) = (st.sp.indptr[i] as usize,
+                        st.sp.indptr[i + 1] as usize);
+        for e in lo..hi {
+            if st.mag_rank[e] < cut {
+                out[st.sp.indices[e] as usize] += st.sp.values[e];
+            }
         }
     }
 
-    /// Densified Ŵ = U diag(s) Vᵀ + S (tests and fallback paths only —
-    /// the serving hot path never calls this).
+    /// Densified Ŵ_view = U[:, :k] diag(s[:k]) V[:, :k]ᵀ + S_cut (tests
+    /// and fallback paths only — the serving hot path never calls
+    /// this).
     pub fn to_dense(&self) -> Tensor {
-        let mut out = if self.rank() == 0 {
-            Tensor::zeros(&[self.n, self.m])
+        let mat = self.materialize();
+        let st = &*mat.store;
+        let mut out = if mat.rank_k == 0 {
+            Tensor::zeros(&[st.n, st.m])
         } else {
-            reconstruct(&self.u, &self.s, &self.v)
+            reconstruct(&st.u, &st.s, &st.v)
         };
-        out.add_assign(&self.sp.to_dense());
+        out.add_assign(&st.sp.to_dense());
+        out
+    }
+
+    /// Pre-view evaluation over the materialized prefix — the bit-
+    /// exactness oracle used by the equivalence tests: contiguous
+    /// tiled [`matmul`] + [`matmul_nt`] + [`CsrMatrix::spmm_t`],
+    /// exactly the code path every variant ran before the shared-store
+    /// refactor.
+    pub fn matmul_t_materialized(&self, x: &Tensor) -> Tensor {
+        let mat = self.materialize();
+        let st = &*mat.store;
+        if mat.rank_k == 0 {
+            return st.sp.spmm_t(x);
+        }
+        let mut xv = matmul(x, &st.v); // (t, k)
+        for i in 0..xv.nrows() {
+            let row = xv.row_mut(i);
+            for (xj, sj) in row.iter_mut().zip(&st.s) {
+                *xj *= *sj;
+            }
+        }
+        let mut out = matmul_nt(&xv, &st.u); // (t, n)
+        out.add_assign(&st.sp.spmm_t(x));
         out
     }
 }
@@ -398,16 +775,147 @@ mod tests {
         assert_eq!(f.to_dense(), sp.to_dense());
         let x = Tensor::randn(&[3, 5], &mut rng, 1.0);
         assert!(f.matmul_t(&x).dist_frob(&sp.spmm_t(&x)) < 1e-6);
-        assert_eq!(f.bytes(), sp.bytes());
+        assert_eq!(f.materialized_bytes(), sp.bytes());
     }
 
     #[test]
     fn factored_bytes_beat_dense_when_compressed() {
         let mut rng = Rng::new(9);
         let f = random_factored(64, 64, 4, &mut rng);
-        assert_eq!(f.bytes(),
-                   4 * (64 * 4 + 4 + 64 * 4) + f.sp.bytes());
-        assert!(f.bytes() < 64 * 64 * 4,
-                "factored {} bytes vs dense {}", f.bytes(), 64 * 64 * 4);
+        assert_eq!(f.materialized_bytes(),
+                   4 * (64 * 4 + 4 + 64 * 4)
+                       + f.store().sp.bytes());
+        assert!(f.materialized_bytes() < 64 * 64 * 4,
+                "factored {} bytes vs dense {}", f.materialized_bytes(),
+                64 * 64 * 4);
+        // The store adds only the u32 magnitude ranks on top.
+        assert_eq!(f.store_bytes(),
+                   f.materialized_bytes() + 4 * f.nnz());
+        // And the view itself is a pointer plus two integers.
+        assert!(f.marginal_bytes() <= 32,
+                "view costs {} bytes", f.marginal_bytes());
+    }
+
+    #[test]
+    fn store_orders_spectrum_and_ranks_entries() {
+        let mut rng = Rng::new(10);
+        // Deliberately unsorted spectrum: the store must sort columns
+        // (stably, descending) so prefixes are the top-k directions.
+        let u = Tensor::randn(&[6, 3], &mut rng, 1.0);
+        let v = Tensor::randn(&[5, 3], &mut rng, 1.0);
+        let s = vec![0.5f32, 2.0, 1.0];
+        let sp_dense = random_sparse(6, 5, 0.4, &mut rng);
+        let sp = CsrMatrix::from_dense(&sp_dense, 0.0);
+        let sorted = FactorStore::new(u.clone(), s.clone(), v.clone(),
+                                      sp.clone()).unwrap();
+        assert_eq!(sorted.s, vec![2.0, 1.0, 0.5]);
+        // Column that carried σ=2.0 (index 1) is now column 0.
+        for i in 0..6 {
+            assert_eq!(sorted.u.at2(i, 0), u.at2(i, 1));
+            assert_eq!(sorted.u.at2(i, 2), u.at2(i, 0));
+        }
+        // Ŵ is unchanged by the permutation.
+        let direct = FactoredLinear::new(u, s, v, sp);
+        let mut max_d = 0.0f32;
+        let sorted_dense =
+            FactoredLinear::full(Arc::new(sorted.clone())).to_dense();
+        for (a, b) in sorted_dense.data.iter()
+            .zip(&direct.to_dense().data)
+        {
+            max_d = max_d.max((a - b).abs());
+        }
+        assert!(max_d < 1e-5, "column sort changed Ŵ by {max_d}");
+        // Magnitude ranks: rank 0 is the largest-|.| entry, and the
+        // rank set is a permutation of 0..nnz.
+        let nnz = sorted.nnz_max();
+        assert!(nnz > 0, "test premise: the residual has entries");
+        let mut seen = vec![false; nnz];
+        for &rk in &sorted.mag_rank {
+            seen[rk as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "ranks not a permutation");
+        let top = sorted.mag_rank.iter().position(|&rk| rk == 0)
+            .unwrap();
+        let max_abs = sorted.sp.values.iter()
+            .fold(0.0f32, |a, x| a.max(x.abs()));
+        assert_eq!(sorted.sp.values[top].abs(), max_abs);
+    }
+
+    /// The load-bearing property of the whole refactor: a prefix view
+    /// evaluates **bit-identically** to its standalone materialized
+    /// copy run through the pre-refactor tiled-GEMM path, across
+    /// random shapes and cuts including the rank_k = 0 and
+    /// nnz_cut = 0 edges.
+    #[test]
+    fn view_matmul_is_bit_identical_to_materialized() {
+        prop::check("view_bit_exact", 24, |rng| {
+            let n = prop::dim(rng, 1, 24);
+            let m = prop::dim(rng, 1, 24);
+            let r = prop::dim(rng, 1, n.min(m));
+            let full = random_factored(n, m, r, rng);
+            let store = full.store().clone();
+            // Cuts: force the 0 edges on the first draws, then random.
+            let rank_k = match rng.next_below(4) {
+                0 => 0,
+                _ => rng.next_below(r as u64 + 1) as usize,
+            };
+            let nnz_cut = match rng.next_below(4) {
+                0 => 0,
+                _ => rng.next_below(store.nnz_max() as u64 + 1) as usize,
+            };
+            let view = FactoredLinear::view(store, rank_k, nnz_cut)
+                .unwrap();
+            // t straddles PREFIX_COPY_ROWS so the strided microloops,
+            // the copy-then-tiled path and (when rank_k == r) the
+            // no-copy tiled path all get exercised.
+            let t = prop::dim(rng, 1, 2 * PREFIX_COPY_ROWS);
+            let x = Tensor::randn(&[t, m], rng, 1.0);
+            let got = view.matmul_t(&x);
+            let want = view.matmul_t_materialized(&x);
+            for (a, b) in got.data.iter().zip(&want.data) {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "{n}x{m} r{r} k{rank_k} q{nnz_cut}: view \
+                            diverged from materialized ({a} vs {b})");
+            }
+            // Row lookup too (the embedding path).
+            let mat = view.materialize();
+            let mut vrow = vec![0.0f32; m];
+            let mut mrow = vec![0.0f32; m];
+            for i in 0..n {
+                view.row_dense_into(i, &mut vrow);
+                mat.row_dense_into(i, &mut mrow);
+                for (a, b) in vrow.iter().zip(&mrow) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "row {i}: view lookup diverged");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn view_cut_keeps_top_magnitudes() {
+        let mut rng = Rng::new(12);
+        let full = random_factored(10, 8, 2, &mut rng);
+        let store = full.store().clone();
+        let nnz = store.nnz_max();
+        for cut in [0, 1, nnz / 2, nnz] {
+            let view = FactoredLinear::view(store.clone(), 2, cut)
+                .unwrap();
+            let kept = view.materialize();
+            assert_eq!(kept.store().sp.nnz(), cut);
+            if cut > 0 && cut < nnz {
+                let min_kept = kept.store().sp.values.iter()
+                    .fold(f32::INFINITY, |a, x| a.min(x.abs()));
+                let mut all: Vec<f32> = store.sp.values.iter()
+                    .map(|x| x.abs()).collect();
+                all.sort_by(f32::total_cmp);
+                // Every dropped magnitude is ≤ every kept one.
+                assert!(all[nnz - cut - 1] <= min_kept,
+                        "cut {cut} dropped a larger entry than it kept");
+            }
+        }
+        // Out-of-range cuts are rejected.
+        assert!(FactoredLinear::view(store.clone(), 3, 0).is_err());
+        assert!(FactoredLinear::view(store, 2, nnz + 1).is_err());
     }
 }

@@ -1,0 +1,246 @@
+//! Nested zero-copy variants: the whole-model equivalence and
+//! accounting gates of the shared-factor-store refactor.
+//!
+//! - View-variant logits must be **bit-exact** against the same budget
+//!   materialized the pre-refactor way (contiguous truncated factors
+//!   evaluated by the tiled GEMM path) — on nano and micro, for every
+//!   builtin budget fraction, including the `rank_k = 0` and
+//!   `nnz_cut = 0` edges.
+//! - Greedy decode over a view variant must emit tokens identical to
+//!   the materialized variant's decode.
+//! - `admit_budget` must carve budgets on a *live* server (traffic
+//!   before and after) with marginal cost <10% of the master store.
+
+use std::sync::Arc;
+
+use salaad::config::ModelConfig;
+use salaad::runtime::{ModelParams, PackedPrompts, ParamValue, Runtime};
+use salaad::serve::{argmax_logit, Request, Server, ServerOptions,
+                    BUILTIN_BUDGET_FRACS};
+use salaad::slr::{FactoredLinear, SlrBlock};
+
+/// Synthetic developed SLR blocks over the selected 2-D parameters,
+/// paired with their indices into `cfg.params`.
+fn synthetic_blocks(cfg: &ModelConfig, rank: usize, density: f64)
+                    -> (Vec<SlrBlock>, Vec<usize>) {
+    let mut blocks = Vec::new();
+    let mut idx = Vec::new();
+    for name in cfg.blocks(true, true) {
+        let shape = cfg.shape_of(&name).unwrap().to_vec();
+        blocks.push(SlrBlock::random(&name, shape[0], shape[1], rank,
+                                     density, 11));
+        idx.push(cfg.param_index(&name).unwrap());
+    }
+    (blocks, idx)
+}
+
+fn fixed_tokens(cfg: &ModelConfig, n: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i * 29 + 7) % cfg.vocab) as i32).collect()
+}
+
+/// The pre-refactor representation of a parameter set: every factored
+/// view copied out into a standalone contiguous prefix (evaluated by
+/// the tiled `matmul`/`matmul_nt`/`spmm_t` path), dense entries
+/// shared as-is.
+fn materialized(params: &ModelParams) -> ModelParams {
+    ModelParams {
+        values: params.values.iter()
+            .map(|v| match v {
+                ParamValue::Factored(f) => {
+                    ParamValue::Factored(f.materialize())
+                }
+                dense => dense.clone(),
+            })
+            .collect(),
+    }
+}
+
+fn assert_bits_equal(a: &salaad::tensor::Tensor,
+                     b: &salaad::tensor::Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape mismatch");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{what}: element {i} diverged ({x} vs {y})");
+    }
+}
+
+/// Greedy KV-cached decode straight on the runtime seam (no server
+/// plumbing), so both representations run the identical code path.
+fn greedy_decode(rt: &Runtime, cfg: &ModelConfig, params: &ModelParams,
+                 prompt: &[i32], max_new: usize) -> Vec<u32> {
+    let pack = PackedPrompts::equal(prompt, 1).unwrap();
+    let (logits, mut cache) = rt.prefill(cfg, params, &pack).unwrap();
+    let v = cfg.vocab;
+    let plen = prompt.len();
+    let mut out = Vec::with_capacity(max_new);
+    let mut last =
+        argmax_logit(&logits.data[(plen - 1) * v..plen * v]) as i32;
+    out.push(last as u32);
+    for _ in 1..max_new.min(cfg.seq_len - plen) {
+        let step = rt.decode_step(cfg, params, &mut cache, &[last])
+            .unwrap();
+        last = argmax_logit(step.row(0)) as i32;
+        out.push(last as u32);
+    }
+    out
+}
+
+#[test]
+fn view_variants_are_bit_exact_vs_materialized_on_builtin_fracs() {
+    let rt = Runtime::native();
+    for scale in ["nano", "micro"] {
+        let cfg = rt.model_config(scale).unwrap();
+        let (blocks, idx) = synthetic_blocks(&cfg, 8, 0.05);
+        let params = cfg.init_params(2);
+        let server = Server::new(&rt, cfg.clone(), &params, &blocks,
+                                 &idx, BUILTIN_BUDGET_FRACS,
+                                 ServerOptions::default())
+            .unwrap();
+        // Full + one per builtin frac (no accidental dedup at these
+        // scales).
+        assert_eq!(server.variants.len(),
+                   1 + BUILTIN_BUDGET_FRACS.len(),
+                   "{scale}: unexpected variant dedup");
+        let tokens = fixed_tokens(&cfg, cfg.seq_len);
+        for variant in &server.variants {
+            let mat = materialized(&variant.params);
+            let got = rt.forward_logits_model(&cfg, &variant.params,
+                                              &tokens, 1).unwrap();
+            let want = rt.forward_logits_model(&cfg, &mat, &tokens, 1)
+                .unwrap();
+            assert_bits_equal(&got, &want,
+                              &format!("{scale} variant {} logits",
+                                       variant.params_count));
+            // Decode: views and materialized copies emit identical
+            // tokens (the pre-refactor serving behavior, preserved).
+            let prompt = &tokens[..8];
+            let a = greedy_decode(&rt, &cfg, &variant.params, prompt, 6);
+            let b = greedy_decode(&rt, &cfg, &mat, prompt, 6);
+            assert_eq!(a, b,
+                       "{scale} variant {}: view decode diverged from \
+                        materialized decode",
+                       variant.params_count);
+            assert_eq!(a.len(), 6);
+        }
+    }
+}
+
+#[test]
+fn zero_cut_views_match_materialized_edges() {
+    let rt = Runtime::native();
+    let cfg = rt.model_config("nano").unwrap();
+    let (blocks, idx) = synthetic_blocks(&cfg, 6, 0.05);
+    let params = cfg.init_params(4);
+    let server = Server::new(&rt, cfg.clone(), &params, &blocks, &idx,
+                             &[], ServerOptions::default()).unwrap();
+    let full = &server.variants[0];
+    let tokens = fixed_tokens(&cfg, cfg.seq_len);
+    // Three edge spectra: rank_k = 0 (pure sparse), nnz_cut = 0 (pure
+    // low-rank), and both 0 (the block vanishes entirely).
+    for (keep_rank, keep_nnz, label) in [
+        (false, true, "rank0"),
+        (true, false, "nnz0"),
+        (false, false, "both0"),
+    ] {
+        let mut values = full.params.values.clone();
+        for (i, store) in server.masters() {
+            let rk = if keep_rank { store.rank_max() } else { 0 };
+            let nq = if keep_nnz { store.nnz_max() } else { 0 };
+            values[*i] = ParamValue::Factored(
+                FactoredLinear::view(Arc::clone(store), rk, nq)
+                    .unwrap());
+        }
+        let view_params = ModelParams { values };
+        let mat = materialized(&view_params);
+        let got = rt.forward_logits_model(&cfg, &view_params, &tokens,
+                                          1).unwrap();
+        let want = rt.forward_logits_model(&cfg, &mat, &tokens, 1)
+            .unwrap();
+        assert_bits_equal(&got, &want, &format!("{label} logits"));
+    }
+}
+
+#[test]
+fn admit_budget_round_trips_on_a_live_server() {
+    let rt = Runtime::native();
+    let cfg = rt.model_config("nano").unwrap();
+    let (blocks, idx) = synthetic_blocks(&cfg, 8, 0.05);
+    let params = cfg.init_params(6);
+    let mut server = Server::new(&rt, cfg.clone(), &params, &blocks,
+                                 &idx, &[0.6],
+                                 ServerOptions::default()).unwrap();
+
+    // Traffic before the admit.
+    let full_count = server.variants.last().unwrap().params_count;
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    req_tx.send(Request::new(0, vec![1, 2, 3], 2, 0)).unwrap();
+    drop(req_tx);
+    server.run(req_rx, resp_tx).unwrap();
+    let first: Vec<_> = resp_rx.iter().collect();
+    assert_eq!(first.len(), 1);
+    assert_eq!(first[0].served_params, full_count);
+
+    // Carve a mid-spectrum budget on the live server: no rebuild, no
+    // weight copies, marginal <10% of the master store.
+    let shared_before = server.stats.shared_bytes;
+    let vi = server.admit_budget(0.3).unwrap();
+    let admitted = server.variants[vi].params_count;
+    assert_eq!(server.stats.shared_bytes, shared_before,
+               "admit copied weights");
+    assert!(server.variants[vi].marginal_bytes() * 10
+                < server.master_store_bytes());
+
+    // Traffic after the admit snaps onto the new point.
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    req_tx.send(Request::new(1, vec![4, 5, 6], 2, admitted)).unwrap();
+    drop(req_tx);
+    server.run(req_rx, resp_tx).unwrap();
+    let second: Vec<_> = resp_rx.iter().collect();
+    assert_eq!(second.len(), 1);
+    assert_eq!(second[0].served_params, admitted,
+               "request did not snap to the runtime-admitted budget");
+    assert!(!second[0].over_budget);
+    assert_eq!(second[0].tokens.len(), 2);
+    // Per-variant counters saw both phases.
+    assert_eq!(server.stats.served_by_variant.get(&full_count),
+               Some(&1));
+    assert_eq!(server.stats.served_by_variant.get(&admitted), Some(&1));
+
+    // The admitted view is bit-exact against its materialization too.
+    let tokens = fixed_tokens(&cfg, cfg.seq_len);
+    let mat = materialized(&server.variants[vi].params);
+    let got = rt.forward_logits_model(&cfg, &server.variants[vi].params,
+                                      &tokens, 1).unwrap();
+    let want = rt.forward_logits_model(&cfg, &mat, &tokens, 1).unwrap();
+    assert_bits_equal(&got, &want, "admitted variant logits");
+}
+
+#[test]
+fn spectrum_of_budgets_is_nearly_free_at_nano() {
+    let rt = Runtime::native();
+    let cfg = rt.model_config("nano").unwrap();
+    let (blocks, idx) = synthetic_blocks(&cfg, 8, 0.05);
+    let params = cfg.init_params(0);
+    let mut server = Server::new(&rt, cfg, &params, &blocks, &idx,
+                                 BUILTIN_BUDGET_FRACS,
+                                 ServerOptions::default()).unwrap();
+    let shared = server.stats.shared_bytes;
+    for frac in [0.15, 0.45, 0.75, 0.9] {
+        server.admit_budget(frac).unwrap();
+    }
+    assert!(server.variants.len() >= 5);
+    assert_eq!(server.stats.shared_bytes, shared,
+               "admits changed the shared footprint");
+    // Serving the whole spectrum costs ≤ master store + V·O(blocks):
+    // the aggregate marginal is <10% of the master store, and far
+    // below what per-variant copies would have resided.
+    assert!(server.stats.marginal_bytes * 10
+                < server.master_store_bytes(),
+            "spectrum marginal {}B not below 10% of master {}B",
+            server.stats.marginal_bytes, server.master_store_bytes());
+    let old_world: usize = server.variants.iter()
+        .map(|v| v.materialized_bytes()).sum();
+    assert!(shared + server.stats.marginal_bytes < old_world);
+}

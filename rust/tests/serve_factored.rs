@@ -69,7 +69,7 @@ fn factored_logits_match_densified_xhat_on_every_builtin_config() {
 }
 
 #[test]
-fn server_compressed_variant_resident_bytes_beat_dense() {
+fn server_spectrum_resides_in_shared_store_plus_metadata() {
     let rt = Runtime::native();
     let cfg = rt.model_config("nano").unwrap();
     let (blocks, idx) = synthetic_blocks(&cfg, 12, 0.08);
@@ -80,13 +80,29 @@ fn server_compressed_variant_resident_bytes_beat_dense() {
     assert!(server.variants.len() >= 2);
     let small = &server.variants[0];
     assert!(small.n_factored() > 0,
-            "compressed variant holds no factored blocks");
-    assert!(small.resident_bytes() < small.dense_bytes(),
-            "resident {}B not strictly below dense {}B",
-            small.resident_bytes(), small.dense_bytes());
-    // No variant may ever exceed its dense materialization.
+            "compressed variant holds no factored views");
+    // A standalone copy of the compressed variant would still beat
+    // dense X̂ (the paper's per-variant memory claim)…
+    assert!(small.materialized_bytes() < small.dense_bytes(),
+            "standalone copy {}B not strictly below dense {}B",
+            small.materialized_bytes(), small.dense_bytes());
+    // …but the refactor's claim is stronger: the *whole spectrum*
+    // resides in one shared store + per-variant metadata, below what
+    // one-copy-per-variant used to cost.
+    let old_world: usize = server.variants.iter()
+        .map(|v| v.materialized_bytes()).sum();
+    let new_world = server.stats.shared_bytes
+        + server.stats.marginal_bytes;
+    assert!(new_world < old_world,
+            "shared spectrum {new_world}B not below per-variant copies \
+             {old_world}B");
+    // At nano scale the marginal cost is a rounding error: every
+    // variant is under 10% of the master store.
     for v in &server.variants {
-        assert!(v.resident_bytes() <= v.dense_bytes());
+        assert!(v.marginal_bytes() * 10 < server.master_store_bytes(),
+                "variant {} marginal {}B not below 10% of the {}B \
+                 master store", v.params_count, v.marginal_bytes(),
+                server.master_store_bytes());
     }
 }
 

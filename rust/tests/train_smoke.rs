@@ -148,16 +148,23 @@ fn serve_smoke() {
     for w in server.variants.windows(2) {
         assert!(w[0].params_count < w[1].params_count);
     }
-    // On factored-capable backends every variant's resident footprint
-    // is bounded by the dense X̂ materialization (build_params picks
-    // the cheaper representation per block); backends without factored
-    // execution additionally memoize a dense copy, so the bound does
-    // not apply there.
+    // On factored-capable backends the variants are zero-copy views
+    // over shared master stores: the byte split is populated and the
+    // whole spectrum's marginal cost stays a sliver of the shared
+    // weights, even for a briefly-trained (weakly compressed)
+    // surrogate. Backends without factored execution memoize dense
+    // copies per variant, so the bound does not apply there.
     if rt.supports_incremental() {
+        assert!(server.stats.shared_bytes > 0);
+        assert!(server.stats.marginal_bytes > 0);
+        assert!(server.stats.marginal_bytes * 10
+                    < server.stats.shared_bytes,
+                "spectrum marginal {}B not below 10% of shared {}B",
+                server.stats.marginal_bytes, server.stats.shared_bytes);
         for v in &server.variants {
-            assert!(v.resident_bytes() <= v.dense_bytes(),
-                    "variant {} resident {}B > dense {}B",
-                    v.params_count, v.resident_bytes(), v.dense_bytes());
+            assert!(v.n_factored() > 0,
+                    "variant {} holds no factored views",
+                    v.params_count);
         }
     }
 
