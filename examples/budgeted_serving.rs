@@ -32,7 +32,7 @@ fn main() -> Result<()> {
         &rt, cfg.clone(), &tr.params, &tr.blocks, &tr.block_param_idx,
         &[0.35, 0.65],
         ServerOptions { max_batch: 4, max_wait: Duration::from_millis(8),
-                        kappa: 0.7 })?;
+                        ..ServerOptions::default() })?;
     // Every budget is a zero-copy view over one shared factor store —
     // carving one more on the live server costs O(blocks) integers.
     server.admit_budget(0.5)?;

@@ -29,7 +29,7 @@ use salaad::coordinator::{run_admm_phase, Method, Trainer};
 use salaad::data::BatchLoader;
 use salaad::linalg::{jacobi_svd, matmul, matmul_nt, matmul_tn, rand_svd};
 use salaad::runtime::{ModelParams, PackedPrompts, Runtime};
-use salaad::serve::{Server, ServerOptions};
+use salaad::serve::{Request, Server, ServerOptions};
 use salaad::slr::prox::{soft_threshold_assign, svt};
 use salaad::slr::{hpa, rpca::rpca, SlrBlock};
 use salaad::tensor::Tensor;
@@ -404,6 +404,30 @@ fn main() {
                 }
                 std::hint::black_box(server.variants.len());
             });
+            // Continuous scheduling under burst: 12 pre-queued
+            // requests with staggered prompt/generation lengths over 8
+            // decode slots, so late requests enter mid-decode as short
+            // rows retire (the serve-smoke schedule; numbers recorded
+            // in EXPERIMENTS.md §Tail latency under continuous
+            // batching).
+            if scale == "nano" && rt.supports_incremental() {
+                b.bench("serve/continuous_burst_nano", || {
+                    let (req_tx, req_rx) = std::sync::mpsc::channel();
+                    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+                    for i in 0..12u64 {
+                        let plen = 4 + (i as usize * 5) % 23;
+                        let max_new = 2 + (i as usize * 7) % 15;
+                        let prompt: Vec<u32> = (0..plen)
+                            .map(|j| ((j * 13 + 3) % cfg.vocab) as u32)
+                            .collect();
+                        req_tx.send(Request::new(i, prompt, max_new, 0))
+                            .unwrap();
+                    }
+                    drop(req_tx);
+                    server.run(req_rx, resp_tx).unwrap();
+                    std::hint::black_box(resp_rx.iter().count());
+                });
+            }
         }
 
         // One short SALAAD training step sequence (fully end-to-end).

@@ -33,7 +33,8 @@ USAGE:
   salaad eval <ckpt-dir> [--downstream]
   salaad compress <ckpt-dir> [--budget-frac F] [--kappa K] [--out DIR]
   salaad serve <scale> [--steps N] [--requests N] [--mixed-lens]
-               [--admit F1,F2,...] [--spectrum]
+               [--admit F1,F2,...] [--spectrum] [--burst]
+               [--block-size N]
   salaad exp <id|all> [--scale S] [--steps N] [--seed N] [--out DIR]
              [--no-cache] [--verbose]
 
@@ -231,6 +232,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // below 10% of the master factor store (the CI smoke for the
     // zero-copy nested-variant path).
     let spectrum = args.has("spectrum");
+    // --burst: submit a bursty mixed-length, mixed-budget schedule
+    // (more requests than decode slots, staggered generation lengths)
+    // and hard-fail unless the continuous scheduler admitted at least
+    // one request mid-decode, the paged arena's high-water mark stayed
+    // below per-row contiguous capacity, and tail percentiles are
+    // reported — the CI smoke for continuous batching.
+    let burst = args.has("burst");
+    // --block-size N: tokens per KV-arena block (0 → default). Any
+    // size decodes bit-identically; this only moves the memory/table
+    // trade-off.
+    let block_tokens = args.usize_flag(
+        "block-size", ServerOptions::default().block_tokens)?;
     // --admit F1,F2,…: extra budget fractions carved at runtime.
     let admit_fracs: Vec<f64> = match args.flag("admit") {
         Some(list) => list.split(',')
@@ -252,7 +265,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut server = Server::new(&rt, cfg.clone(), &tr.params, &tr.blocks,
                                  &tr.block_param_idx,
                                  BUILTIN_BUDGET_FRACS,
-                                 ServerOptions::default())?;
+                                 ServerOptions {
+                                     block_tokens,
+                                     ..ServerOptions::default()
+                                 })?;
     // Runtime elasticity: carve additional budgets on the live server
     // — O(blocks) each, no weight copies, no rebuild.
     let spectrum_fracs: Vec<f64> = if spectrum {
@@ -336,19 +352,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let producer = std::thread::spawn(move || {
         let mut rng = salaad::util::Rng::new(42);
         for i in 0..n_requests as u64 {
-            // Mixed-lens traffic varies the prompt length so requests
-            // routed to the same variant land in one ragged pack;
-            // plain traffic keeps the original fixed length.
-            let plen = if mixed_lens {
+            // Mixed-lens/burst traffic varies the prompt length so
+            // requests routed to the same variant land in one ragged
+            // pack; plain traffic keeps the original fixed length.
+            let plen = if mixed_lens || burst {
                 4 + (i as usize * 5) % 23
             } else {
                 12
+            };
+            // Burst traffic also staggers generation lengths, so rows
+            // retire at different decode steps and later requests
+            // enter the freed slots while packmates are mid-flight.
+            let max_new = if burst {
+                2 + (i as usize * 7) % 15
+            } else {
+                4
             };
             let prompt: Vec<u32> = (0..plen)
                 .map(|_| rng.next_below(vocab) as u32)
                 .collect();
             let budget = budgets[(i as usize) % budgets.len()];
-            req_tx.send(Request::new(i, prompt, 4, budget)).unwrap();
+            req_tx.send(Request::new(i, prompt, max_new, budget))
+                .unwrap();
         }
     });
     // Drain the producer before serving: every request is already in
@@ -379,6 +404,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
               {} packed rows, {} mixed-length groups",
              s.batches, s.groups, s.groups_per_batch(), s.packed_rows,
              s.mixed_len_groups);
+    println!("scheduler: {} decode steps, {} requests admitted \
+              mid-decode",
+             s.decode_steps, s.admitted_mid_decode);
+    println!("tails: queue-wait p50 {:.1} ms  p99 {:.1} ms | \
+              latency p50 {:.1} ms  p99 {:.1} ms",
+             s.queue_wait_pct(0.5), s.queue_wait_pct(0.99),
+             s.decode_latency_pct(0.5), s.decode_latency_pct(0.99));
+    println!("arena: {}-token blocks, {} in use / {} free at drain, \
+              high-water {} vs {} contiguous",
+             s.arena_block_tokens, s.arena_blocks_in_use,
+             s.arena_blocks_free, s.arena_blocks_high_water,
+             s.arena_blocks_contiguous);
     println!("resident: shared {} B + marginal {} B across {} variants",
              s.shared_bytes, s.marginal_bytes, server.variants.len());
     for (count, served) in &s.served_by_variant {
@@ -408,12 +445,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 v.params_count);
         }
     }
-    // Groups are keyed by routed variant only, so a batch can never
-    // fan out into more groups than deployed variants.
-    anyhow::ensure!(s.groups <= s.batches * server.variants.len() as u64,
-                    "{} groups from {} batches exceeds one group per \
-                     variant ({} variants)",
-                    s.groups, s.batches, server.variants.len());
+    // Groups are keyed by routed variant only and every group serves
+    // at least one request, so the continuous scheduler's admission
+    // waves can never fan out into more groups than requests.
+    anyhow::ensure!(s.groups <= n_resp as u64,
+                    "{} groups exceeds {} served requests — admission \
+                     waves are fragmenting",
+                    s.groups, n_resp);
     if mixed_lens && rt.supports_incremental() {
         // The mixed-length smoke only proves something if requests
         // actually shared ragged packs: hard-fail otherwise.
@@ -427,6 +465,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
                   batch across {} variant(s)",
                  s.groups_per_batch().ceil() as u64,
                  server.variants.len());
+    }
+    if burst && rt.supports_incremental() {
+        // (a) Continuous admission actually happened: at least one
+        // request entered a freed slot while packmates were decoding.
+        anyhow::ensure!(
+            s.admitted_mid_decode >= 1,
+            "burst of {n_requests} requests saw no mid-decode \
+             admission ({} decode steps) — the scheduler regressed to \
+             group-and-drain", s.decode_steps);
+        // (b) Paging pays: the peak block footprint stays strictly
+        // below what per-row contiguous buffers would reserve.
+        anyhow::ensure!(
+            s.arena_blocks_high_water > 0
+                && s.arena_blocks_high_water < s.arena_blocks_contiguous,
+            "arena high-water {} blocks not below the {}-block per-row \
+             contiguous reservation",
+            s.arena_blocks_high_water, s.arena_blocks_contiguous);
+        // (c) Tail telemetry is populated (the p99s printed above are
+        // real samples, not empty-set zeros).
+        anyhow::ensure!(
+            s.queue_wait_ms.len() == n_resp
+                && s.decode_latency_ms.len() == n_resp,
+            "tail-latency samples incomplete: {} queue / {} latency \
+             for {n_resp} responses",
+            s.queue_wait_ms.len(), s.decode_latency_ms.len());
+        println!("burst OK: {} mid-decode admissions, high-water \
+                  {}/{} blocks, queue-wait p99 {:.1} ms",
+                 s.admitted_mid_decode, s.arena_blocks_high_water,
+                 s.arena_blocks_contiguous, s.queue_wait_pct(0.99));
     }
     println!("serve OK: {n_resp}/{n_requests} responses, {} budgets \
               served zero-copy from one shared factor store",

@@ -19,7 +19,12 @@
 //! over the master prefixes and keeps a [`KvCache`] so greedy decode
 //! costs O(T) instead of O(T²); other backends inherit a densifying
 //! fallback (correct, no memory win) and report
-//! `supports_incremental() == false`.
+//! `supports_incremental() == false`. The cache itself is a **paged
+//! arena** — fixed-size token blocks, per-row block tables, a free
+//! list — so `prefill_into` / `decode_rows` can run a continuous
+//! scheduler over one long-lived cache: finished rows return their
+//! blocks and late arrivals prefill into the freed slots, bit-exactly
+//! (see [`KvCache`] and `serve::Server`).
 //!
 //! Two implementations exist:
 //!
@@ -399,6 +404,37 @@ pub trait Backend {
         bail!("backend `{}` does not support incremental decoding",
               self.name())
     }
+
+    /// [`Self::prefill`], but into caller-chosen **empty slots** of an
+    /// existing (wider) cache instead of a fresh one — the admission
+    /// half of continuous batching: a scheduler keeps one shared
+    /// [`KvCache`] arena alive and prefills late arrivals into slots
+    /// freed by finished rows, while untouched slots keep decoding
+    /// state. `slots[b]` is the cache row for pack row `b` (distinct,
+    /// in range, `row_len == 0`). Per-row arithmetic is independent of
+    /// slot placement, so the logits are bit-identical to
+    /// [`Self::prefill`] of the same pack.
+    fn prefill_into(&self, cfg: &ModelConfig, params: &ModelParams,
+                    cache: &mut KvCache, prompts: &PackedPrompts,
+                    slots: &[usize]) -> Result<Tensor> {
+        let _ = (cfg, params, cache, prompts, slots);
+        bail!("backend `{}` does not support incremental decoding",
+              self.name())
+    }
+
+    /// [`Self::decode_step`] over a **subset** of cache rows: one
+    /// token per entry of `slots`, returning `(slots.len(), vocab)`
+    /// logits in `slots` order. The continuous scheduler uses this to
+    /// step only the slots routed to one model variant, leaving other
+    /// variants' slots untouched. Negative-token semantics match
+    /// [`Self::decode_step`]; slots must be distinct and in range.
+    fn decode_rows(&self, cfg: &ModelConfig, params: &ModelParams,
+                   cache: &mut KvCache, last: &[i32], slots: &[usize])
+                   -> Result<Tensor> {
+        let _ = (cfg, params, cache, last, slots);
+        bail!("backend `{}` does not support incremental decoding",
+              self.name())
+    }
 }
 
 /// Backend + config registry: the object the rest of the crate holds.
@@ -539,6 +575,23 @@ impl Runtime {
                        cache: &mut KvCache, last: &[i32])
                        -> Result<Tensor> {
         self.backend.decode_step(cfg, params, cache, last)
+    }
+
+    /// Prefill a packed batch into chosen empty slots of a shared
+    /// cache (continuous-batching admission). See
+    /// [`Backend::prefill_into`].
+    pub fn prefill_into(&self, cfg: &ModelConfig, params: &ModelParams,
+                        cache: &mut KvCache, prompts: &PackedPrompts,
+                        slots: &[usize]) -> Result<Tensor> {
+        self.backend.prefill_into(cfg, params, cache, prompts, slots)
+    }
+
+    /// Decode one token for a subset of cache rows, in `slots` order.
+    /// See [`Backend::decode_rows`].
+    pub fn decode_rows(&self, cfg: &ModelConfig, params: &ModelParams,
+                       cache: &mut KvCache, last: &[i32],
+                       slots: &[usize]) -> Result<Tensor> {
+        self.backend.decode_rows(cfg, params, cache, last, slots)
     }
 }
 

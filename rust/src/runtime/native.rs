@@ -78,7 +78,7 @@ impl Backend for NativeBackend {
         let mv = resolve_model(cfg, params)?;
         let mut cache = KvCache::new(cfg, rows);
         let logits =
-            forward_model(cfg, &mv, &mut cache, tokens, rows, None)?;
+            forward_model(cfg, &mv, &mut cache, tokens, rows, None, None)?;
         logits.reshape(&[rows, t, cfg.vocab])
     }
 
@@ -93,8 +93,45 @@ impl Backend for NativeBackend {
         let mv = resolve_model(cfg, params)?;
         let mut cache = KvCache::new(cfg, rows);
         let logits = forward_model(cfg, &mv, &mut cache, &prompts.tokens,
-                                   rows, Some(prompts.row_lens.as_slice()))?;
+                                   rows, Some(prompts.row_lens.as_slice()),
+                                   None)?;
         Ok((logits, cache))
+    }
+
+    fn prefill_into(&self, cfg: &ModelConfig, params: &ModelParams,
+                    cache: &mut KvCache, prompts: &PackedPrompts,
+                    slots: &[usize]) -> Result<Tensor> {
+        prompts.validate()?;
+        let rows = prompts.rows();
+        ensure!(slots.len() == rows,
+                "prefill_into expects one slot per prompt row ({} != {})",
+                slots.len(), rows);
+        for &s in slots {
+            ensure!(s < cache.rows(),
+                    "slot {s} out of range for a {}-row cache",
+                    cache.rows());
+            ensure!(cache.row_len(s) == 0,
+                    "prefill_into requires empty slots, slot {s} holds \
+                     {} positions", cache.row_len(s));
+        }
+        let mv = resolve_model(cfg, params)?;
+        forward_model(cfg, &mv, cache, &prompts.tokens, rows,
+                      Some(prompts.row_lens.as_slice()), Some(slots))
+    }
+
+    fn decode_rows(&self, cfg: &ModelConfig, params: &ModelParams,
+                   cache: &mut KvCache, last: &[i32], slots: &[usize])
+                   -> Result<Tensor> {
+        ensure!(last.len() == slots.len(),
+                "decode_rows expects one token per slot ({} != {})",
+                last.len(), slots.len());
+        let active: Vec<usize> =
+            last.iter().map(|&tok| usize::from(tok >= 0)).collect();
+        ensure!(active.iter().any(|&a| a == 1),
+                "decode_rows called with every row finished");
+        let mv = resolve_model(cfg, params)?;
+        forward_model(cfg, &mv, cache, last, last.len(),
+                      Some(active.as_slice()), Some(slots))
     }
 
     fn decode_step(&self, cfg: &ModelConfig, params: &ModelParams,
@@ -110,7 +147,7 @@ impl Backend for NativeBackend {
                 "decode_step called with every row finished");
         let mv = resolve_model(cfg, params)?;
         forward_model(cfg, &mv, cache, last, last.len(),
-                      Some(active.as_slice()))
+                      Some(active.as_slice()), None)
     }
 }
 
@@ -411,6 +448,47 @@ fn attend(qr: Tensor, kr: Tensor, v: Tensor, scale: f32) -> HeadState {
     HeadState { qr, kr, v, probs, o }
 }
 
+/// Row-indexed f32 storage the fused attention kernel reads K/V
+/// through. Two impls exist: a contiguous [`Tensor`] (the dense
+/// forward's per-head blocks) and [`PagedKvRows`] (a block-table view
+/// into the paged KV arena). The kernel visits rows strictly one at a
+/// time, so the storage layout is invisible to the arithmetic.
+trait AttnRows {
+    /// Row `i` as a contiguous `&[f32]` slice.
+    fn row(&self, i: usize) -> &[f32];
+}
+
+impl AttnRows for Tensor {
+    fn row(&self, i: usize) -> &[f32] {
+        Tensor::row(self, i)
+    }
+}
+
+/// The K or V rows of one (layer, row, head) triple, read through the
+/// row's block table: logical position `p` lives in block
+/// `table[p / bsz]` at in-block token offset `p % bsz`. Returned
+/// slices are the same f32 values a contiguous cache would hold at the
+/// same logical positions, so swapping this view in under
+/// [`attn_stream_row`] replays the identical rounding sequence.
+struct PagedKvRows<'a> {
+    pool: &'a [f32],
+    table: &'a [u32],
+    /// Offset of this (layer, head) pair inside a block.
+    lh_off: usize,
+    bsz: usize,
+    hd: usize,
+    block_elems: usize,
+}
+
+impl AttnRows for PagedKvRows<'_> {
+    fn row(&self, i: usize) -> &[f32] {
+        let base = self.table[i / self.bsz] as usize * self.block_elems
+            + self.lh_off
+            + (i % self.bsz) * self.hd;
+        &self.pool[base..base + self.hd]
+    }
+}
+
 /// Fused streaming-softmax attention for one query row — the no-grad
 /// attention kernel shared by the dense inference forward, prefill and
 /// KV-cached decode.
@@ -453,9 +531,17 @@ fn attend(qr: Tensor, kr: Tensor, v: Tensor, scale: f32) -> HeadState {
 /// `keys` rows must already be RoPE-rotated; only the `window` rows of
 /// `keys`/`vals` are read (extra capacity rows, e.g. a not-yet-full
 /// [`KvCache`], are ignored).
-fn attn_stream_row(qrot: &[f32], keys: &Tensor, vals: &Tensor,
-                   window: Range<usize>, scale: f32,
-                   srow: &mut [f32], orow: &mut [f32]) {
+///
+/// K/V storage is abstracted behind [`AttnRows`]: a contiguous
+/// [`Tensor`] and a block-table view into the paged KV arena
+/// ([`PagedKvRows`]) are interchangeable here because the kernel only
+/// ever asks for one row at a time, in ascending key order — *where*
+/// a row lives cannot change the rounding sequence, so paged and
+/// contiguous attention are bit-identical by construction (pinned by
+/// `paged_attention_matches_contiguous_bit_exact`).
+fn attn_stream_row<K: AttnRows, V: AttnRows>(
+    qrot: &[f32], keys: &K, vals: &V, window: Range<usize>, scale: f32,
+    srow: &mut [f32], orow: &mut [f32]) {
     let start = window.start;
     let s = &mut srow[..window.end - start];
     let mut m = f32::NEG_INFINITY;
@@ -595,56 +681,103 @@ fn forward_resolved(cfg: &ModelConfig, pv: &ParamView, tokens: &[i32],
 
 // -------------------------------------- factored + incremental serving
 
-/// KV cache for incremental decoding: per layer and per (row, head),
-/// the post-RoPE keys and raw values of every position seen so far.
-/// Each row advances independently (`lens`) so a ragged packed prefill
-/// leaves every row positioned after its *true* prompt length, and a
-/// finished row can sit still while its packmates keep decoding.
-/// Capacity is `cfg.seq_len` per row.
+/// KV cache for incremental decoding, backed by a **paged arena**:
+/// post-RoPE keys and raw values live in fixed-size token blocks drawn
+/// from one shared pool, with a per-row block table mapping logical
+/// positions to blocks and a LIFO free list recycling the blocks of
+/// finished rows. Each row advances independently (`lens`) so a ragged
+/// packed prefill leaves every row positioned after its *true* prompt
+/// length, and a finished row can sit still while its packmates keep
+/// decoding. Capacity is `cfg.seq_len` positions per row.
 ///
-/// The cache layout is always *compacted*: row `b`'s keys occupy cache
-/// rows `0..lens[b]` with the rope angle of their true positions, even
-/// when the tokens arrived left-padded inside a wider buffer — pad
-/// slots are skipped at append time, never stored, never attended. A
-/// row of a ragged pack therefore has the same cache bytes, the same
-/// remaining capacity and the same attention reads as a solo run of
-/// that prompt.
+/// One block covers [`Self::block_tokens`] consecutive positions of
+/// one row across **all** layers and heads (`layers·heads·bsz·hd` f32
+/// per pool), so growing a row by a block is a single free-list pop
+/// and freeing a row returns its whole table at once. Blocks are
+/// allocated on demand: a short prompt occupies `⌈len/bsz⌉` blocks
+/// instead of a full `cap`-position buffer, and [`Self::free_row`]
+/// returns them for reuse — a long generation no longer pins the
+/// memory of rows that finished beside it. `blocks_high_water` tracks
+/// the most blocks ever simultaneously in use.
+///
+/// The cache layout is always *compacted*: row `b`'s keys occupy
+/// logical positions `0..lens[b]` with the rope angle of their true
+/// positions, even when the tokens arrived left-padded inside a wider
+/// buffer — pad slots are skipped at append time, never stored, never
+/// attended. A row of a ragged pack therefore has the same cache
+/// values, the same remaining capacity and the same attention reads
+/// as a solo run of that prompt. Paging does not weaken this:
+/// attention reads go through [`PagedKvRows`], which returns the same
+/// f32 slices in the same ascending-key order a contiguous buffer
+/// would, so paged decode is **bit-identical** to the contiguous path
+/// (`paged_attention_matches_contiguous_bit_exact` pins it).
 pub struct KvCache {
     rows: usize,
     /// Positions filled so far, per row.
     lens: Vec<usize>,
     cap: usize,
     heads: usize,
-    /// `k[layer][row * heads + head]` is a (cap, hd) tensor of rotated
-    /// keys; `v` likewise holds values.
-    k: Vec<Vec<Tensor>>,
-    v: Vec<Vec<Tensor>>,
+    layers: usize,
+    hd: usize,
+    /// Tokens per block.
+    bsz: usize,
+    /// f32 elements one block occupies in each pool:
+    /// `layers · heads · bsz · hd`.
+    block_elems: usize,
+    /// Block pools, grown on demand; block `i` is the `block_elems`
+    /// slice at `i * block_elems`.
+    k_pool: Vec<f32>,
+    v_pool: Vec<f32>,
+    /// LIFO free list of recycled block ids. Recycled blocks are not
+    /// zeroed: every readable (layer, head, position) slot is
+    /// overwritten at append time before `lens` advances past it.
+    free: Vec<u32>,
+    /// Per-row block tables: `tables[b][p / bsz]` holds position `p`.
+    tables: Vec<Vec<u32>>,
+    /// Most blocks ever simultaneously in use.
+    hwm: usize,
     /// Shared rotary tables (process-wide cache, not owned per cache).
     rope: Arc<RopeTables>,
 }
 
 impl KvCache {
+    /// Default tokens-per-block granularity (the vLLM-ish sweet spot:
+    /// small enough that short rows waste little, large enough that
+    /// table indirection stays off the hot path).
+    pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
     /// Empty cache for `rows` sequences of the geometry in `cfg`, with
-    /// capacity `cfg.seq_len` positions per row. Rotary tables come
-    /// from the process-wide per-geometry cache rather than being
-    /// recomputed per construction.
+    /// capacity `cfg.seq_len` positions per row and the default block
+    /// size. Rotary tables come from the process-wide per-geometry
+    /// cache rather than being recomputed per construction.
     pub fn new(cfg: &ModelConfig, rows: usize) -> Self {
+        Self::with_block_size(cfg, rows, Self::DEFAULT_BLOCK_TOKENS)
+    }
+
+    /// [`Self::new`] with an explicit tokens-per-block granularity
+    /// (clamped to `1..=cfg.seq_len`). Block size changes *where* K/V
+    /// rows live, never their values or read order, so any block size
+    /// decodes bit-identically to any other.
+    pub fn with_block_size(cfg: &ModelConfig, rows: usize,
+                           block_tokens: usize) -> Self {
         let (cap, heads, hd) = (cfg.seq_len, cfg.n_heads, cfg.d_head());
+        let layers = cfg.n_layers;
+        let bsz = block_tokens.clamp(1, cap);
         let rope = rope_tables_cached(cap, hd, cfg.rope_theta);
-        let alloc = || -> Vec<Vec<Tensor>> {
-            (0..cfg.n_layers)
-                .map(|_| (0..rows * heads)
-                    .map(|_| Tensor::zeros(&[cap, hd]))
-                    .collect())
-                .collect()
-        };
         KvCache {
             rows,
             lens: vec![0; rows],
             cap,
             heads,
-            k: alloc(),
-            v: alloc(),
+            layers,
+            hd,
+            bsz,
+            block_elems: layers * heads * bsz * hd,
+            k_pool: Vec::new(),
+            v_pool: Vec::new(),
+            free: Vec::new(),
+            tables: vec![Vec::new(); rows],
+            hwm: 0,
             rope,
         }
     }
@@ -681,13 +814,104 @@ impl KvCache {
         self.cap
     }
 
-    /// Resident bytes of the cached K/V tensors (the shared rotary
-    /// tables are excluded: they are owned by the process-wide
-    /// per-geometry cache, not by any one `KvCache`).
+    /// Tokens per arena block (after clamping).
+    pub fn block_tokens(&self) -> usize {
+        self.bsz
+    }
+
+    /// Blocks currently assigned to rows (Σ block-table lengths).
+    pub fn blocks_in_use(&self) -> usize {
+        self.tables.iter().map(|t| t.len()).sum()
+    }
+
+    /// Allocated blocks sitting on the free list, ready for reuse.
+    pub fn blocks_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Most blocks ever simultaneously in use over this cache's
+    /// lifetime — the arena's actual peak footprint, to compare
+    /// against [`Self::blocks_contiguous`].
+    pub fn blocks_high_water(&self) -> usize {
+        self.hwm
+    }
+
+    /// Blocks a per-row contiguous layout would pre-reserve
+    /// (`rows · ⌈cap/bsz⌉`) — the seed-era allocation this arena
+    /// replaces, and the upper bound the serve smoke holds the
+    /// high-water mark strictly under.
+    pub fn blocks_contiguous(&self) -> usize {
+        self.rows * self.cap.div_ceil(self.bsz)
+    }
+
+    /// Return row `b`'s blocks to the free list and reset its length,
+    /// making the slot admissible for a new request. The blocks are
+    /// recycled as-is (no zeroing — see `free`).
+    pub fn free_row(&mut self, b: usize) {
+        let table = std::mem::take(&mut self.tables[b]);
+        self.free.extend(table);
+        self.lens[b] = 0;
+    }
+
+    /// Resident bytes of the K/V pools (the shared rotary tables are
+    /// excluded: they are owned by the process-wide per-geometry
+    /// cache, not by any one `KvCache`). Pools grow on demand, so this
+    /// tracks actual traffic rather than `rows · cap` worst case.
     pub fn resident_bytes(&self) -> usize {
-        let per: usize = self.k.iter().flatten().map(|t| 4 * t.numel())
-            .sum();
-        2 * per
+        4 * (self.k_pool.len() + self.v_pool.len())
+    }
+
+    /// Ensure row `b`'s table covers `len` positions, popping the free
+    /// list first and growing the pools only when it is empty.
+    fn reserve_row(&mut self, b: usize, len: usize) {
+        let need = len.div_ceil(self.bsz);
+        while self.tables[b].len() < need {
+            let blk = match self.free.pop() {
+                Some(id) => id,
+                None => {
+                    let id = (self.k_pool.len() / self.block_elems)
+                        as u32;
+                    self.k_pool.resize(
+                        self.k_pool.len() + self.block_elems, 0.0);
+                    self.v_pool.resize(
+                        self.v_pool.len() + self.block_elems, 0.0);
+                    id
+                }
+            };
+            self.tables[b].push(blk);
+        }
+        self.hwm = self.hwm.max(self.blocks_in_use());
+    }
+
+    /// Write the rotated key and raw value of (layer `li`, row `b`,
+    /// head `h`, position `pos`) into the arena. The row's table must
+    /// already cover `pos` (see [`Self::reserve_row`]).
+    fn kv_write(&mut self, li: usize, b: usize, h: usize, pos: usize,
+                ksrc: &[f32], vsrc: &[f32]) {
+        let base = self.tables[b][pos / self.bsz] as usize
+            * self.block_elems
+            + (li * self.heads + h) * self.bsz * self.hd
+            + (pos % self.bsz) * self.hd;
+        rope_row(ksrc, &mut self.k_pool[base..base + self.hd],
+                 &self.rope.cos, &self.rope.sin, pos);
+        self.v_pool[base..base + self.hd].copy_from_slice(vsrc);
+    }
+
+    /// Block-table view of row `b`'s keys for (layer `li`, head `h`).
+    fn k_view(&self, li: usize, b: usize, h: usize) -> PagedKvRows<'_> {
+        PagedKvRows {
+            pool: &self.k_pool,
+            table: &self.tables[b],
+            lh_off: (li * self.heads + h) * self.bsz * self.hd,
+            bsz: self.bsz,
+            hd: self.hd,
+            block_elems: self.block_elems,
+        }
+    }
+
+    /// Block-table view of row `b`'s values for (layer `li`, head `h`).
+    fn v_view(&self, li: usize, b: usize, h: usize) -> PagedKvRows<'_> {
+        PagedKvRows { pool: &self.v_pool, ..self.k_view(li, b, h) }
     }
 }
 
@@ -877,16 +1101,43 @@ fn rope_row(src: &[f32], dst: &mut [f32], cos: &[f32], sin: &[f32],
 /// (`ragged_prefill_is_bit_identical_to_solo` pins this). A row with
 /// `new_lens[b] = 0` is skipped entirely (how finished rows of a pack
 /// stop attending while the rest keep decoding).
+///
+/// `slots` maps buffer row `b` to cache row `slots[b]`, letting a
+/// continuous scheduler run a *subset* of a wider cache's rows —
+/// freshly admitted requests prefill into freed slots while untouched
+/// slots keep their state — without paying GEMM width for idle rows.
+/// `None` is the identity mapping over all `cache.rows()` rows (the
+/// whole-cache calling convention of `prefill`/`decode_step`). Every
+/// activation op here is per-row independent (RMSNorm, the x·Wᵀ
+/// linears, SwiGLU, attention over the row's own cache), so running
+/// rows as a subset replays a solo run of each row bit for bit — the
+/// same argument, and the same pinning tests, as ragged packing.
 fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
                  tokens: &[i32], rows: usize,
-                 new_lens: Option<&[usize]>) -> Result<Tensor> {
+                 new_lens: Option<&[usize]>,
+                 slots: Option<&[usize]>) -> Result<Tensor> {
     let (d, heads) = (cfg.d_model, cfg.n_heads);
     let hd = cfg.d_head();
     ensure!(hd % 2 == 0, "d_head must be even for rotary embeddings");
-    ensure!(rows > 0 && rows == cache.rows(),
-            "cache built for {} rows, forward called with {rows}",
-            cache.rows());
-    ensure!(cache.heads == heads && cache.k.len() == cfg.n_layers
+    ensure!(rows > 0, "forward_model called with zero rows");
+    match slots {
+        None => ensure!(rows == cache.rows(),
+                        "cache built for {} rows, forward called with \
+                         {rows}", cache.rows()),
+        Some(s) => {
+            ensure!(s.len() == rows,
+                    "{} slots for {rows} buffer rows", s.len());
+            for (i, &sl) in s.iter().enumerate() {
+                ensure!(sl < cache.rows(),
+                        "slot {sl} out of range for a {}-row cache",
+                        cache.rows());
+                ensure!(!s[..i].contains(&sl),
+                        "slot {sl} mapped by two buffer rows");
+            }
+        }
+    }
+    let slot_of = move |b: usize| slots.map_or(b, |s| s[b]);
+    ensure!(cache.heads == heads && cache.layers == cfg.n_layers
                 && cache.capacity() == cfg.seq_len,
             "kv cache geometry does not match config `{}`", cfg.name);
     ensure!(!tokens.is_empty() && tokens.len() % rows == 0,
@@ -906,9 +1157,18 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
     for (b, &l) in new_lens.iter().enumerate() {
         ensure!(l <= t_new,
                 "row {b}: {l} new tokens exceed buffer width {t_new}");
-        ensure!(cache.lens[b] + l <= cache.capacity(),
+        ensure!(cache.lens[slot_of(b)] + l <= cache.capacity(),
                 "kv cache overflow on row {b}: {} + {l} > capacity {}",
-                cache.lens[b], cache.capacity());
+                cache.lens[slot_of(b)], cache.capacity());
+    }
+    // Reserve arena blocks for every row's new positions up front (one
+    // block spans all layers and heads, so this happens once, not per
+    // layer) — the only allocating step; the per-layer loops below
+    // just index.
+    for (b, &l) in new_lens.iter().enumerate() {
+        let s = slot_of(b);
+        let need = cache.lens[s] + l;
+        cache.reserve_row(s, need);
     }
     // Validate the real token slots only — pad slots are never read.
     for b in 0..rows {
@@ -942,20 +1202,19 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
 
         // Append rotated K and raw V for the new *real* positions.
         // Writes compact the left-pad away: buffer column `off + j` of
-        // row b lands at cache row `lens[b] + j` — the row's true
-        // position — with the rope angle of that true position.
+        // row b lands at logical cache position `lens[b] + j` — the
+        // row's true position — with the rope angle of that true
+        // position. `kv_write` routes the logical position through the
+        // row's block table into the paged arena.
         for b in 0..rows {
             let off = t_new - new_lens[b];
+            let s = slot_of(b);
             for h in 0..heads {
-                let kc = &mut cache.k[li][b * heads + h];
-                let vc = &mut cache.v[li][b * heads + h];
                 for i in off..t_new {
-                    let pos = cache.lens[b] + (i - off);
+                    let pos = cache.lens[s] + (i - off);
                     let ksrc = &k.row(b * t_new + i)[h * hd..(h + 1) * hd];
-                    rope_row(ksrc, kc.row_mut(pos), &cache.rope.cos,
-                             &cache.rope.sin, pos);
-                    vc.row_mut(pos).copy_from_slice(
-                        &v.row(b * t_new + i)[h * hd..(h + 1) * hd]);
+                    let vsrc = &v.row(b * t_new + i)[h * hd..(h + 1) * hd];
+                    cache.kv_write(li, s, h, pos, ksrc, vsrc);
                 }
             }
         }
@@ -966,7 +1225,7 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
         // compacted cache holds no pad keys, so masked slots are never
         // read on either side of the dot product.
         let max_total = (0..rows)
-            .map(|b| cache.lens[b] + new_lens[b])
+            .map(|b| cache.lens[slot_of(b)] + new_lens[b])
             .max()
             .unwrap_or(0);
         let flops = 2 * rows * heads * t_new * max_total * hd * 2;
@@ -981,18 +1240,19 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
         let head_outs = parallel_map(&bh, workers, |&idx| {
             let (b, h) = (idx / heads, idx % heads);
             let off = t_new - new_lens[b];
-            let kc = &cache_ref.k[li][b * heads + h];
-            let vc = &cache_ref.v[li][b * heads + h];
+            let s = slot_of(b);
+            let kc = cache_ref.k_view(li, s, h);
+            let vc = cache_ref.v_view(li, s, h);
             let mut o = Tensor::zeros(&[t_new, hd]);
             let mut qrot = vec![0.0f32; hd];
             let mut srow =
-                vec![0.0f32; cache_ref.lens[b] + new_lens[b]];
+                vec![0.0f32; cache_ref.lens[s] + new_lens[b]];
             for i in off..t_new {
-                let pos = cache_ref.lens[b] + (i - off);
+                let pos = cache_ref.lens[s] + (i - off);
                 let qsrc = &q.row(b * t_new + i)[h * hd..(h + 1) * hd];
                 rope_row(qsrc, &mut qrot, &cache_ref.rope.cos,
                          &cache_ref.rope.sin, pos);
-                attn_stream_row(&qrot, kc, vc, 0..pos + 1, scale,
+                attn_stream_row(&qrot, &kc, &vc, 0..pos + 1, scale,
                                 &mut srow, o.row_mut(i));
             }
             o
@@ -1015,8 +1275,8 @@ fn forward_model(cfg: &ModelConfig, mv: &ModelView, cache: &mut KvCache,
         x_out.add_assign(&x_mid);
         x = x_out;
     }
-    for (len, &l) in cache.lens.iter_mut().zip(new_lens) {
-        *len += l;
+    for (b, &l) in new_lens.iter().enumerate() {
+        cache.lens[slot_of(b)] += l;
     }
 
     let (xnf, _) = rmsnorm_fwd(&x, mv.final_norm, cfg.norm_eps);
@@ -1459,6 +1719,204 @@ mod tests {
             .unwrap();
         assert_eq!(step2.row(2), solo2.row(0),
                    "active row diverged beside finished packmates");
+    }
+
+    /// Block-table reads must be **bit-identical** to a contiguous
+    /// buffer holding the same K/V rows — across random geometries and
+    /// block sizes, including rows finishing mid-batch and their
+    /// blocks being recycled by a later admission. This is the pin on
+    /// `attn_stream_row`'s paged/contiguous equivalence claim.
+    #[test]
+    fn paged_attention_matches_contiguous_bit_exact() {
+        use crate::util::prop;
+
+        // Append positions `lens[b]..upto` of row `b` with fresh
+        // random K/V, mirroring the exact post-rope values into
+        // contiguous per-(layer, head) tensors.
+        fn fill_row(cache: &mut KvCache, mk: &mut [Vec<Tensor>],
+                    mvals: &mut [Vec<Tensor>], b: usize, upto: usize,
+                    rng: &mut Rng) {
+            let (heads, hd) = (cache.heads, cache.hd);
+            let from = cache.lens[b];
+            cache.reserve_row(b, upto);
+            for pos in from..upto {
+                for li in 0..cache.layers {
+                    for h in 0..heads {
+                        let kr = Tensor::randn(&[1, hd], rng, 1.0);
+                        let vr = Tensor::randn(&[1, hd], rng, 1.0);
+                        cache.kv_write(li, b, h, pos, kr.row(0),
+                                       vr.row(0));
+                        rope_row(kr.row(0),
+                                 mk[li][b * heads + h].row_mut(pos),
+                                 &cache.rope.cos, &cache.rope.sin,
+                                 pos);
+                        mvals[li][b * heads + h].row_mut(pos)
+                            .copy_from_slice(vr.row(0));
+                    }
+                }
+            }
+            cache.lens[b] = upto;
+        }
+
+        // Every (layer, row, head): streaming attention through the
+        // block table vs the contiguous mirror, same query — the
+        // outputs must be equal as bit patterns, not within an eps.
+        fn assert_rows_match(cache: &KvCache, mk: &[Vec<Tensor>],
+                             mvals: &[Vec<Tensor>], rng: &mut Rng) {
+            let (heads, hd) = (cache.heads, cache.hd);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for li in 0..cache.layers {
+                for b in 0..cache.rows() {
+                    let t = cache.row_len(b);
+                    if t == 0 {
+                        continue;
+                    }
+                    for h in 0..heads {
+                        let q = Tensor::randn(&[1, hd], rng, 1.0);
+                        let mut srow = vec![0.0f32; t];
+                        let mut want = vec![0.0f32; hd];
+                        attn_stream_row(q.row(0),
+                                        &mk[li][b * heads + h],
+                                        &mvals[li][b * heads + h],
+                                        0..t, scale, &mut srow,
+                                        &mut want);
+                        let kc = cache.k_view(li, b, h);
+                        let vc = cache.v_view(li, b, h);
+                        let mut got = vec![0.0f32; hd];
+                        attn_stream_row(q.row(0), &kc, &vc, 0..t,
+                                        scale, &mut srow, &mut got);
+                        assert_eq!(want, got,
+                                   "layer {li} row {b} head {h}: paged \
+                                    reads changed the arithmetic");
+                    }
+                }
+            }
+        }
+
+        prop::check("paged_attn", 12, |rng| {
+            let layers = prop::dim(rng, 1, 2);
+            let heads = prop::dim(rng, 1, 3);
+            let hd = 2 * prop::dim(rng, 1, 6);
+            let cap = prop::dim(rng, 4, 20);
+            let rows = prop::dim(rng, 2, 4);
+            // May exceed cap — `with_block_size` clamps.
+            let bsz = prop::dim(rng, 1, cap + 4);
+            let cfg = ModelConfig::from_geometry(
+                "pagedprop", 16, heads * hd, layers, heads, 8, cap, 1);
+            let mut cache = KvCache::with_block_size(&cfg, rows, bsz);
+            assert!(cache.block_tokens() <= cap);
+            let mut mk =
+                vec![vec![Tensor::zeros(&[cap, hd]); rows * heads];
+                     layers];
+            let mut mvals = mk.clone();
+            for b in 0..rows {
+                let upto = prop::dim(rng, 1, cap);
+                fill_row(&mut cache, &mut mk, &mut mvals, b, upto, rng);
+            }
+            assert_rows_match(&cache, &mk, &mvals, rng);
+            assert!(cache.blocks_high_water() >= cache.blocks_in_use());
+            assert_eq!(cache.blocks_free(), 0,
+                       "nothing freed yet, nothing should idle");
+
+            // A middle row finishes: its blocks go to the free list…
+            let victim = rows / 2;
+            let freed = cache.tables[victim].len();
+            let total = cache.blocks_in_use() + cache.blocks_free();
+            cache.free_row(victim);
+            assert_eq!(cache.blocks_free(), freed);
+            assert_eq!(cache.row_len(victim), 0);
+            assert_eq!(cache.blocks_in_use() + cache.blocks_free(),
+                       total, "free_row must conserve blocks");
+
+            // …and a later admission recycles them, still bit-exact.
+            let upto = prop::dim(rng, 1, cap);
+            fill_row(&mut cache, &mut mk, &mut mvals, victim, upto,
+                     rng);
+            let need = upto.div_ceil(cache.block_tokens());
+            assert_eq!(cache.blocks_in_use() + cache.blocks_free(),
+                       total.max(total - freed + need),
+                       "recycle must pop the free list before growing");
+            assert_rows_match(&cache, &mk, &mvals, rng);
+        });
+    }
+
+    /// The continuous-scheduler entry points: prefilling into chosen
+    /// slots of a wider shared cache and decoding slot subsets must
+    /// reproduce each request's solo run bit for bit — including a
+    /// freed slot being recycled (different block size than the solo
+    /// caches, so this also crosses block-size boundaries).
+    #[test]
+    fn prefill_into_and_decode_rows_match_solo_bit_exact() {
+        let cfg = tiny2_cfg();
+        let mp = ModelParams::from_dense(&cfg.init_params(11));
+        let b = NativeBackend::new();
+        // 3-slot shared arena, 2-token blocks (solo caches use the
+        // default block size — bit-exactness must not care).
+        let mut cache = KvCache::with_block_size(&cfg, 3, 2);
+        let p0 = golden_tokens(cfg.vocab, 5);
+        let p1 = vec![3i32, 1, 4];
+
+        // Admit both prompts into slots 0 and 2 (slot 1 stays idle).
+        let pack = PackedPrompts::pack(&[p0.clone(), p1.clone()])
+            .unwrap();
+        let t_max = pack.max_len();
+        let pre = b.prefill_into(&cfg, &mp, &mut cache, &pack, &[0, 2])
+            .unwrap();
+        assert_eq!(cache.row_len(0), p0.len());
+        assert_eq!(cache.row_len(1), 0);
+        assert_eq!(cache.row_len(2), p1.len());
+
+        let solo0 = PackedPrompts::equal(&p0, 1).unwrap();
+        let (want0, mut c0) = b.prefill(&cfg, &mp, &solo0).unwrap();
+        let solo1 = PackedPrompts::equal(&p1, 1).unwrap();
+        let (want1, mut c1) = b.prefill(&cfg, &mp, &solo1).unwrap();
+        for i in 0..p0.len() {
+            assert_eq!(pre.row(i), want0.row(i),
+                       "slot 0 prefill diverged at {i}");
+        }
+        let off = t_max - p1.len();
+        for i in 0..p1.len() {
+            assert_eq!(pre.row(t_max + off + i), want1.row(i),
+                       "slot 2 prefill diverged at {i}");
+        }
+
+        // Joint decode over the slot subset ≡ solo decode steps.
+        let step = b.decode_rows(&cfg, &mp, &mut cache, &[5, 7],
+                                 &[0, 2]).unwrap();
+        let s0 = b.decode_step(&cfg, &mp, &mut c0, &[5]).unwrap();
+        let s1 = b.decode_step(&cfg, &mp, &mut c1, &[7]).unwrap();
+        assert_eq!(step.row(0), s0.row(0), "slot 0 decode diverged");
+        assert_eq!(step.row(1), s1.row(0), "slot 2 decode diverged");
+
+        // Slot 2's request finishes; its blocks recycle into a new
+        // admission in the same slot while slot 0 keeps decoding.
+        cache.free_row(2);
+        assert!(cache.blocks_free() > 0, "freed blocks must be listed");
+        let p2 = golden_tokens(cfg.vocab, 4);
+        let pack2 = PackedPrompts::equal(&p2, 1).unwrap();
+        let pre2 = b.prefill_into(&cfg, &mp, &mut cache, &pack2, &[2])
+            .unwrap();
+        let (want2, mut c2) = b.prefill(&cfg, &mp, &pack2).unwrap();
+        assert_eq!(pre2, want2,
+                   "recycled-slot prefill diverged from solo");
+        let step2 = b.decode_rows(&cfg, &mp, &mut cache, &[6, 2],
+                                  &[0, 2]).unwrap();
+        let s0b = b.decode_step(&cfg, &mp, &mut c0, &[6]).unwrap();
+        let s2 = b.decode_step(&cfg, &mp, &mut c2, &[2]).unwrap();
+        assert_eq!(step2.row(0), s0b.row(0),
+                   "slot 0 diverged after a neighbor was recycled");
+        assert_eq!(step2.row(1), s2.row(0),
+                   "recycled slot 2 decode diverged");
+
+        // Malformed slot maps are rejected, not absorbed.
+        assert!(b.prefill_into(&cfg, &mp, &mut cache, &pack2, &[0])
+                    .is_err(), "occupied slot must be refused");
+        assert!(b.decode_rows(&cfg, &mp, &mut cache, &[1], &[3])
+                    .is_err(), "out-of-range slot must be refused");
+        assert!(b.decode_rows(&cfg, &mp, &mut cache, &[1, 1], &[0, 0])
+                    .is_err(), "duplicate slot must be refused");
+        assert!(b.decode_rows(&cfg, &mp, &mut cache, &[-1], &[0])
+                    .is_err(), "all-finished decode is a caller bug");
     }
 
     #[test]

@@ -1,17 +1,32 @@
 //! Deadline-based dynamic batcher: collect up to `max_batch` requests or
 //! wait at most `max_wait`, whichever comes first — the standard
 //! latency/throughput knob of LLM serving frontends.
+//!
+//! The continuous scheduler uses both intake modes: [`Batcher::
+//! next_batch`] (blocking, deadline-bounded) when every slot is idle —
+//! there is nothing to decode, so waiting out the deadline to form a
+//! fuller first wave is free — and [`Batcher::drain_ready`]
+//! (non-blocking) while rows are mid-decode, where *any* wait would
+//! stall tokens already in flight.
 
 use super::request::Request;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
+/// Deadline-based request collector (see the module docs). Holds only
+/// the two knobs; the channel is passed per call so one batcher can
+/// serve successive channels.
 pub struct Batcher {
+    /// Largest batch a single [`Self::next_batch`] call returns (≥ 1);
+    /// also the continuous scheduler's decode-slot count.
     pub max_batch: usize,
+    /// Longest a partially filled batch waits for stragglers after the
+    /// first request arrives.
     pub max_wait: Duration,
 }
 
 impl Batcher {
+    /// Build a batcher; `max_batch` is clamped to at least 1.
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         Batcher { max_batch: max_batch.max(1), max_wait }
     }
@@ -42,6 +57,25 @@ impl Batcher {
             }
         }
         Some(out)
+    }
+
+    /// Non-blocking intake for the continuous scheduler: take every
+    /// request already sitting in the channel and return immediately —
+    /// never waits, ignores `max_batch`/`max_wait` (admission capacity
+    /// is the scheduler's free-slot count, and a decode step is
+    /// already the natural batching interval). The second return is
+    /// `true` once the channel is closed *and* drained — the same
+    /// condition as [`Self::next_batch`] returning `None`.
+    pub fn drain_ready(&self, rx: &Receiver<Request>)
+                       -> (Vec<Request>, bool) {
+        let mut out = Vec::new();
+        loop {
+            match rx.try_recv() {
+                Ok(r) => out.push(r),
+                Err(TryRecvError::Empty) => return (out, false),
+                Err(TryRecvError::Disconnected) => return (out, true),
+            }
+        }
     }
 }
 
@@ -137,6 +171,34 @@ mod tests {
         assert!(batch[0].enqueued_at.elapsed()
                     >= Duration::from_millis(15),
                 "channel wait dropped from the queue clock");
+    }
+
+    #[test]
+    fn drain_ready_never_blocks_and_reports_closure() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(4, Duration::from_secs(30));
+        // Empty open channel: returns at once, not closed — a 30s
+        // max_wait must be irrelevant here.
+        let t0 = Instant::now();
+        let (got, closed) = b.drain_ready(&rx);
+        assert!(got.is_empty() && !closed);
+        assert!(t0.elapsed() < Duration::from_secs(1),
+                "drain_ready blocked on an empty channel");
+        // Queued requests drain in arrival order, beyond max_batch.
+        for i in 0..6 {
+            tx.send(req(i)).unwrap();
+        }
+        let (got, closed) = b.drain_ready(&rx);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 1, 2, 3, 4, 5],
+                   "drain_ready must take everything available");
+        assert!(!closed, "sender still alive");
+        // Hang-up: remaining requests flush, then closure reports.
+        tx.send(req(9)).unwrap();
+        drop(tx);
+        let (got, closed) = b.drain_ready(&rx);
+        assert_eq!(got.len(), 1);
+        assert!(closed, "drained+disconnected must report closure");
     }
 
     #[test]

@@ -10,17 +10,85 @@
 //! paper's continuous capacity spectrum, nearly free in the resident
 //! process ([`ServeStats`] carries the shared/marginal split, and
 //! [`Server::admit_budget`] carves additional budgets on a live server
-//! without copies or rebuilds). A deadline-based dynamic batcher
-//! groups incoming requests and routing snaps each request's budget to
-//! the admitted points. Decoding is KV-cached: one prefill over the
-//! prompt, then O(T) single-position steps, with *all* same-variant
-//! requests — mixed prompt lengths included — packed into one ragged
-//! rows>1 prefill (left-pad + mask; see
-//! [`crate::runtime::PackedPrompts`]), bit-identical to decoding each
-//! request alone. Threading: the PJRT backend is not `Send` (and the
-//! native backend parallelizes internally), so the server runs on its
-//! owner thread and talks to clients over std::sync::mpsc channels
-//! (the offline vendor set has no tokio; DESIGN.md §3).
+//! without copies or rebuilds).
+//!
+//! Scheduling is **continuous** (vLLM-style) on incremental backends:
+//! one paged KV arena ([`crate::runtime::KvCache`]) with `max_batch`
+//! decode slots lives for the whole session, and every loop iteration
+//! admits waiting requests into free slots, decodes one token for each
+//! in-flight row, and retires finished rows — returning their arena
+//! blocks to the free list — so a late arrival starts as soon as *any*
+//! slot frees instead of waiting out a whole batch. Intake is
+//! two-mode ([`Batcher`]): deadline-bounded blocking collection while
+//! the arena is idle, non-blocking drains while rows are decoding.
+//! Routing snaps each request's budget to the admitted capacity
+//! points; same-variant admissions pack into one ragged left-padded
+//! prefill (mixed prompt lengths included; see
+//! [`crate::runtime::PackedPrompts`]). Scheduling and paging are
+//! bit-invisible to the output: every request's tokens are identical
+//! to decoding it alone. [`ServeStats`] reports p50/p99 queue-wait and
+//! request-latency percentiles plus arena occupancy, so the
+//! tail-latency win is measured rather than asserted.
+//!
+//! Threading: the PJRT backend is not `Send` (and the native backend
+//! parallelizes internally), so the server runs on its owner thread
+//! and talks to clients over std::sync::mpsc channels (the offline
+//! vendor set has no tokio; DESIGN.md §3).
+//!
+//! # Example: mixed-length requests against a live scheduler
+//!
+//! ```
+//! use std::sync::mpsc::channel;
+//! use std::time::Duration;
+//! use salaad::config::ModelConfig;
+//! use salaad::runtime::Runtime;
+//! use salaad::serve::{Request, Response, Server, ServerOptions};
+//! use salaad::slr::SlrBlock;
+//!
+//! let rt = Runtime::native();
+//! let cfg = ModelConfig::from_geometry("doc", 32, 8, 1, 2, 16, 24, 2);
+//! let params = cfg.init_params(0);
+//! // Synthetic SLR blocks over the attention projections stand in for
+//! // a trained surrogate (see `salaad train` for the real pipeline).
+//! let mut blocks = Vec::new();
+//! let mut idx = Vec::new();
+//! for name in cfg.blocks(true, false) {
+//!     let shape = cfg.shape_of(&name)?.to_vec();
+//!     blocks.push(SlrBlock::random(&name, shape[0], shape[1], 3,
+//!                                  0.1, 0));
+//!     idx.push(cfg.param_index(&name)?);
+//! }
+//! let mut server = Server::new(
+//!     &rt, cfg, &params, &blocks, &idx, &[0.5],
+//!     ServerOptions { max_batch: 2,
+//!                     max_wait: Duration::from_millis(2),
+//!                     ..ServerOptions::default() })?;
+//!
+//! // Three mixed-length requests, the third forced to wait for a
+//! // slot: with max_batch = 2 the scheduler admits it only once the
+//! // short request retires — mid-decode, not after the whole batch.
+//! let (req_tx, req_rx) = channel();
+//! let (resp_tx, resp_rx) = channel();
+//! req_tx.send(Request::new(0, vec![1, 2, 3], 10, 0)).unwrap();
+//! req_tx.send(Request::new(1, vec![4, 5], 2, 0)).unwrap();
+//! req_tx.send(Request::new(2, vec![6, 7, 1, 2, 3], 4, 0)).unwrap();
+//! drop(req_tx); // close the channel: run() returns when drained
+//! server.run(req_rx, resp_tx)?;
+//!
+//! let mut got: Vec<Response> = resp_rx.iter().collect();
+//! got.sort_by_key(|r| r.id);
+//! assert_eq!(got.len(), 3);
+//! assert_eq!(got[0].tokens.len(), 10);
+//! assert_eq!(got[1].tokens.len(), 2);
+//! assert_eq!(got[2].tokens.len(), 4);
+//! // Tail telemetry is populated by the run.
+//! assert!(server.stats.queue_wait_pct(0.99)
+//!             >= server.stats.queue_wait_pct(0.5));
+//! assert_eq!(server.stats.arena_blocks_in_use, 0);
+//! # anyhow::Ok(())
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod request;
 pub mod batcher;

@@ -2,11 +2,16 @@
 
 use std::time::Instant;
 
+/// One generation request, as a client drops it into the server's
+/// request channel.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Client-chosen correlation id, echoed back on the [`Response`].
     pub id: u64,
     /// Prompt tokens (truncated to seq_len − max_new_tokens if longer).
     pub prompt: Vec<u32>,
+    /// Greedy-decode token budget (further capped by remaining
+    /// sequence capacity after the prompt).
     pub max_new_tokens: usize,
     /// Memory budget in parameters for this request; routing snaps it
     /// to the largest *admitted* capacity point that fits (admitted
@@ -15,12 +20,13 @@ pub struct Request {
     pub budget_params: usize,
     /// Stamped at construction, i.e. client-side *before* the request
     /// enters the channel — queue latency is measured from here, so
-    /// time spent waiting behind a long-running batch is visible
+    /// time spent waiting behind in-flight decodes is visible
     /// (stamping at batcher dequeue silently dropped it).
     pub enqueued_at: Instant,
 }
 
 impl Request {
+    /// Build a request and stamp its queue clock (`enqueued_at`) now.
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize,
                budget_params: usize) -> Self {
         Request {
@@ -33,9 +39,14 @@ impl Request {
     }
 }
 
+/// The server's answer to one [`Request`], sent on the response
+/// channel as the request retires.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The [`Request::id`] this answers.
     pub id: u64,
+    /// Greedily decoded tokens — bit-identical to a solo decode of the
+    /// same prompt on the same variant, regardless of scheduling.
     pub tokens: Vec<u32>,
     /// Which variant served it (surrogate parameter count — also the
     /// key of `ServeStats::served_by_variant`).
@@ -45,9 +56,14 @@ pub struct Response {
     /// anyway — the client asked for a memory ceiling the server could
     /// not honor at that moment.
     pub over_budget: bool,
-    /// Model-execution time of the batch group this request rode in.
+    /// Service time in milliseconds. Under the continuous scheduler
+    /// this is the request's own admission-to-finish span (prefill
+    /// through last token, including decode steps shared with
+    /// packmates); under the group-and-drain fallback it is the model
+    /// time of the batch group this request rode in.
     pub latency_ms: f64,
-    /// Queueing + batching delay from client-side enqueue to the start
-    /// of model execution.
+    /// Queueing delay in milliseconds from client-side enqueue
+    /// ([`Request::enqueued_at`]) to admission into a decode slot (or,
+    /// under the fallback, to the start of the request's group).
     pub queue_ms: f64,
 }

@@ -1,6 +1,6 @@
 //! The elastic server: zero-copy nested capacity variants over one
-//! shared master factor store + dynamic batching + budget-aware
-//! routing, with KV-cached greedy decoding.
+//! shared master factor store + budget-aware routing + a **continuous
+//! scheduler** decoding against one paged KV arena.
 //!
 //! At construction each SLR block is converted **once** into an
 //! `Arc`-shared [`crate::slr::FactorStore`] (spectrum ordered, S
@@ -15,16 +15,26 @@
 //! can be carved on a *live* server in O(blocks)
 //! ([`Server::admit_budget`]); dense X̂ is never materialized.
 //!
-//! Decoding does one prefill over the prompt and then O(T)
-//! single-position steps against a [`crate::runtime::KvCache`].
-//! Same-variant requests pack into one ragged rows>1 prefill
-//! *regardless of prompt length*: prompts are left-padded to the
-//! group's longest row and the runtime masks pads out
-//! ([`crate::runtime::PackedPrompts`]), so a mixed-length batch costs
-//! one prefill per routed variant instead of one per (variant, length)
-//! pair — with output tokens identical to solo decoding.
+//! [`Server::run`] schedules continuously rather than batch-by-batch:
+//! one [`crate::runtime::KvCache`] paged arena with `max_batch` slots
+//! lives for the whole serving session, and each loop iteration
+//! **admits** waiting requests into free slots (prefilling via
+//! `prefill_into`, grouped by routed variant into one ragged
+//! left-padded pack each — see [`crate::runtime::PackedPrompts`]),
+//! **decodes** one token for every in-flight row (`decode_rows`, one
+//! call per variant with live rows), and **retires** rows that hit
+//! their budget, returning their arena blocks to the free list. A
+//! late arrival therefore starts as soon as *any* slot frees instead
+//! of waiting out the whole batch, and a long generation pins only
+//! its own blocks — the pre-continuous group-and-drain bottleneck.
+//! Per-row arithmetic is slot- and paging-independent, so every
+//! request's tokens stay bit-identical to a solo decode. Backends
+//! without incremental decoding fall back to the old group-and-drain
+//! loop. [`ServeStats`] records both tails (p50/p99 queue-wait and
+//! request latency) and arena occupancy, so the scheduling win is
+//! measured rather than asserted.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,7 +44,8 @@ use anyhow::{ensure, Result};
 use super::batcher::Batcher;
 use super::request::{Request, Response};
 use crate::config::ModelConfig;
-use crate::runtime::{ModelParams, PackedPrompts, ParamValue, Runtime};
+use crate::runtime::{KvCache, ModelParams, PackedPrompts, ParamValue,
+                     Runtime};
 use crate::slr::{hpa, BlockCuts, BlockShape, FactorStore, FactoredLinear,
                  SlrBlock};
 use crate::tensor::Tensor;
@@ -111,17 +122,31 @@ impl VariantSpec {
     }
 }
 
+/// Construction knobs for [`Server::new`].
 pub struct ServerOptions {
+    /// Decode-slot count of the continuous scheduler (the shared KV
+    /// arena's row count) and the largest single intake batch.
     pub max_batch: usize,
+    /// Longest the batcher holds a partially filled first batch for
+    /// stragglers; mid-decode intake never waits (see
+    /// [`super::Batcher::drain_ready`]).
     pub max_wait: Duration,
+    /// HPA mixing coefficient used for every admitted budget.
     pub kappa: f64,
+    /// Tokens per KV-arena block
+    /// ([`KvCache::DEFAULT_BLOCK_TOKENS`] unless overridden, e.g. by
+    /// `salaad serve --block-size`). Any block size decodes
+    /// bit-identically; smaller blocks waste less memory on short
+    /// rows, larger ones shrink the table.
+    pub block_tokens: usize,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
         ServerOptions { max_batch: 8,
                         max_wait: Duration::from_millis(10),
-                        kappa: 0.7 }
+                        kappa: 0.7,
+                        block_tokens: KvCache::DEFAULT_BLOCK_TOKENS }
     }
 }
 
@@ -155,6 +180,49 @@ pub struct ServeStats {
     /// Per-variant metadata bytes summed across admitted variants —
     /// the whole marginal cost of the capacity spectrum.
     pub marginal_bytes: usize,
+    /// Requests admitted while other rows were mid-generation — the
+    /// continuous scheduler's signature move (always 0 under the
+    /// batched fallback, and for requests co-admitted from idle).
+    pub admitted_mid_decode: u64,
+    /// Decode iterations executed (one `decode_rows` call per variant
+    /// with live rows counts once each).
+    pub decode_steps: u64,
+    /// Per-request queue wait in ms — client-side enqueue to
+    /// admission (the moment its prefill is issued). Feed to
+    /// [`Self::queue_wait_pct`].
+    pub queue_wait_ms: Vec<f64>,
+    /// Per-request serving latency in ms — admission to finish
+    /// (prefill + every decode step it rode in). Feed to
+    /// [`Self::decode_latency_pct`].
+    pub decode_latency_ms: Vec<f64>,
+    /// Tokens per block of the serving arena (0 until `run` executes).
+    pub arena_block_tokens: usize,
+    /// Arena blocks held by rows at the last scheduler iteration
+    /// (0 after a clean drain — every retired row frees its blocks).
+    pub arena_blocks_in_use: usize,
+    /// Recycled blocks sitting on the arena free list at the last
+    /// scheduler iteration.
+    pub arena_blocks_free: usize,
+    /// Most arena blocks ever simultaneously in use — the actual peak
+    /// KV footprint, to hold against [`Self::arena_blocks_contiguous`].
+    pub arena_blocks_high_water: usize,
+    /// Blocks the pre-arena per-row contiguous layout would have
+    /// reserved up front (`slots · ⌈seq_len/block⌉`) — the bound the
+    /// serve smoke keeps the high-water mark strictly under.
+    pub arena_blocks_contiguous: usize,
+}
+
+/// Rounded-index percentile of `samples` at `p ∈ [0, 1]`: sort and
+/// take `s[round((len−1)·p)]` (NaN-safe via `total_cmp`); 0.0 with no
+/// samples.
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((s.len() - 1) as f64 * p.clamp(0.0, 1.0)).round();
+    s[idx as usize]
 }
 
 impl ServeStats {
@@ -170,8 +238,26 @@ impl ServeStats {
             self.groups as f64 / self.batches as f64
         }
     }
+
+    /// Queue-wait percentile in ms (`p` in 0..=1, e.g. 0.99 → p99)
+    /// over every request served so far; 0.0 before the first retire.
+    pub fn queue_wait_pct(&self, p: f64) -> f64 {
+        percentile(&self.queue_wait_ms, p)
+    }
+
+    /// Serving-latency percentile in ms (`p` in 0..=1) over every
+    /// request served so far; 0.0 before the first retire.
+    pub fn decode_latency_pct(&self, p: f64) -> f64 {
+        percentile(&self.decode_latency_ms, p)
+    }
 }
 
+/// Budget-spectrum serving engine: one set of shared master factor
+/// stores, N zero-copy capacity [`VariantSpec`]s over them, and a
+/// continuous scheduler ([`Self::run`]) that admits requests into a
+/// paged KV arena as decode slots free up. Built once per model with
+/// [`Self::new`]; the spectrum can be grown ([`Self::admit_budget`])
+/// and shrunk ([`Self::retire`]) while live.
 pub struct Server<'a> {
     rt: &'a Runtime,
     cfg: ModelConfig,
@@ -190,6 +276,8 @@ pub struct Server<'a> {
     dense_selected: usize,
     /// HPA mixing coefficient used for every admitted budget.
     kappa: f64,
+    /// Tokens per KV-arena block for the continuous scheduler's cache.
+    block_tokens: usize,
     /// Variants sorted by strictly ascending parameter count. Among
     /// candidates with equal `params_count` (repeated or near-equal
     /// budget fractions) the **earliest admitted wins**: the full
@@ -198,6 +286,7 @@ pub struct Server<'a> {
     /// dedup regression test.
     pub variants: Vec<VariantSpec>,
     batcher: Batcher,
+    /// Total requests answered over this server's lifetime.
     pub served: u64,
     /// Packing + spectrum counters across every batch this server has
     /// run.
@@ -256,6 +345,7 @@ impl<'a> Server<'a> {
             dense_total,
             dense_selected,
             kappa: opts.kappa,
+            block_tokens: opts.block_tokens,
             variants: Vec::new(),
             batcher: Batcher::new(opts.max_batch, opts.max_wait),
             served: 0,
@@ -535,17 +625,37 @@ impl<'a> Server<'a> {
 
     /// Serve until the request channel closes. Runs on the caller's
     /// thread (the PJRT backend is not `Send`; the native backend
-    /// parallelizes internally); clients live on other threads. Each
-    /// batch is grouped by routed variant *only* — prompt lengths mix
-    /// freely inside a group thanks to the ragged left-padded prefill
-    /// — and groups run in ascending variant order (deterministic, so
-    /// serve stats and response interleaving reproduce across runs).
-    /// Every group runs as one packed KV-cached decode; `latency_ms`
-    /// is the group's model time, `queue_ms` each request's wait from
-    /// client-side enqueue to the start of its group.
+    /// parallelizes internally); clients live on other threads.
+    ///
+    /// On incremental backends this is the **continuous scheduler**
+    /// (see the module docs and [`Self::run_continuous`]): one paged
+    /// KV arena, per-iteration admit → decode → retire, late arrivals
+    /// entering as soon as a slot frees. `Response::latency_ms` is the
+    /// request's admission-to-finish time and `queue_ms` its
+    /// enqueue-to-admission wait. Backends without incremental
+    /// decoding run the group-and-drain fallback
+    /// ([`Self::run_batched`]), where `latency_ms` is the batch
+    /// group's model time. Both record the tail-latency samples and
+    /// counters in [`ServeStats`].
     pub fn run(&mut self, rx: Receiver<Request>, tx: Sender<Response>)
                -> Result<()> {
-        let incremental = self.rt.supports_incremental();
+        if self.rt.supports_incremental() {
+            self.run_continuous(rx, tx)
+        } else {
+            self.run_batched(rx, tx)
+        }
+    }
+
+    /// Group-and-drain fallback for backends without incremental
+    /// decoding: pull a batch, group by routed variant, run each group
+    /// to completion with the full-recompute decoder, repeat. No
+    /// request is admitted while another is decoding, which is exactly
+    /// the tail-latency failure mode the continuous path removes —
+    /// kept because correctness (and the PJRT fallback) do not need
+    /// the scheduler, and as the before-side of the comparison in
+    /// EXPERIMENTS.md §"Tail latency under continuous batching".
+    fn run_batched(&mut self, rx: Receiver<Request>,
+                   tx: Sender<Response>) -> Result<()> {
         while let Some(batch) = self.batcher.next_batch(&rx) {
             let mut prepped = Vec::with_capacity(batch.len());
             let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
@@ -563,39 +673,23 @@ impl<'a> Server<'a> {
                 *self.stats.served_by_variant
                     .entry(variant.params_count)
                     .or_default() += idxs.len() as u64;
-                if incremental && idxs.len() > 1 {
-                    self.stats.packed_rows += idxs.len() as u64;
-                    let mut lens: Vec<usize> = idxs.iter()
-                        .map(|&i| prepped[i].2.len()).collect();
-                    lens.sort_unstable();
-                    lens.dedup();
-                    if lens.len() > 1 {
-                        self.stats.mixed_len_groups += 1;
-                    }
-                }
                 let queue_ms: Vec<f64> = idxs.iter()
                     .map(|&i| batch[i].enqueued_at.elapsed()
                         .as_secs_f64() * 1e3)
                     .collect();
                 let t0 = Instant::now();
-                let tokens: Vec<Vec<u32>> = if incremental {
-                    let prompts: Vec<Vec<u32>> = idxs.iter()
-                        .map(|&i| prepped[i].2.clone()).collect();
-                    let max_new: Vec<usize> = idxs.iter()
-                        .map(|&i| batch[i].max_new_tokens).collect();
-                    self.generate_cached(variant, &prompts, &max_new)?
-                } else {
-                    idxs.iter()
-                        .map(|&i| self.generate_uncached(
-                            variant, &prepped[i].2,
-                            batch[i].max_new_tokens))
-                        .collect::<Result<_>>()?
-                };
+                let tokens: Vec<Vec<u32>> = idxs.iter()
+                    .map(|&i| self.generate_uncached(
+                        variant, &prepped[i].2,
+                        batch[i].max_new_tokens))
+                    .collect::<Result<_>>()?;
                 let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
                 for ((&i, toks), q) in
                     idxs.iter().zip(tokens).zip(queue_ms)
                 {
                     self.served += 1;
+                    self.stats.queue_wait_ms.push(q);
+                    self.stats.decode_latency_ms.push(latency_ms);
                     let _ = tx.send(Response {
                         id: batch[i].id,
                         tokens: toks,
@@ -606,6 +700,239 @@ impl<'a> Server<'a> {
                     });
                 }
             }
+        }
+        Ok(())
+    }
+
+    /// The continuous scheduler. Each loop iteration:
+    ///
+    /// 1. **Intake** — blocking [`Batcher::next_batch`] when every
+    ///    slot is idle (nothing to stall), non-blocking
+    ///    [`Batcher::drain_ready`] while rows are decoding.
+    /// 2. **Admit** — fill free slots from the pending queue in
+    ///    arrival order. The wave is grouped by routed variant; each
+    ///    group runs one ragged left-padded `prefill_into` against
+    ///    the shared arena and emits its first token. Groups run in
+    ///    ascending variant order (deterministic stats and
+    ///    interleaving run to run).
+    /// 3. **Decode** — one `decode_rows` per variant with live rows,
+    ///    emitting one token per row.
+    /// 4. **Retire** — rows that hit their budget send their
+    ///    [`Response`], record latency samples, and return their
+    ///    arena blocks to the free list, freeing the slot for the
+    ///    next admission wave.
+    ///
+    /// The loop ends when the channel is closed, the pending queue is
+    /// empty and every slot is idle. Per-request tokens are
+    /// bit-identical to [`Self::generate_cached`] of that request
+    /// alone: slot-subset execution and paged K/V reads replay solo
+    /// arithmetic exactly (pinned in `runtime::native` and in
+    /// `late_request_is_admitted_mid_decode_and_matches_solo` below).
+    fn run_continuous(&mut self, rx: Receiver<Request>,
+                      tx: Sender<Response>) -> Result<()> {
+        struct ActiveRow {
+            id: u64,
+            /// Routed variant index (stable during `run`: admit/retire
+            /// can't happen while the scheduler borrows the server).
+            vi: usize,
+            params_count: usize,
+            over: bool,
+            /// Token budget: `min(max_new, seq_len − prompt_len)`.
+            allowed: usize,
+            out: Vec<u32>,
+            /// Next token to feed, or negative once finished.
+            last: i32,
+            queue_ms: f64,
+            admitted_at: Instant,
+        }
+
+        let slots_n = self.batcher.max_batch;
+        let (t, v) = (self.cfg.seq_len, self.cfg.vocab);
+        let mut cache = KvCache::with_block_size(&self.cfg, slots_n,
+                                                 self.block_tokens);
+        self.stats.arena_block_tokens = cache.block_tokens();
+        self.stats.arena_blocks_contiguous = cache.blocks_contiguous();
+        let mut active: Vec<Option<ActiveRow>> =
+            (0..slots_n).map(|_| None).collect();
+        let mut pending: VecDeque<Request> = VecDeque::new();
+        let mut closed = false;
+
+        loop {
+            // ---- intake ----------------------------------------
+            let idle = active.iter().all(|s| s.is_none());
+            if !closed {
+                if idle && pending.is_empty() {
+                    match self.batcher.next_batch(&rx) {
+                        Some(batch) => {
+                            self.stats.batches += 1;
+                            pending.extend(batch);
+                        }
+                        None => closed = true,
+                    }
+                } else {
+                    let (more, done) = self.batcher.drain_ready(&rx);
+                    if !more.is_empty() {
+                        self.stats.batches += 1;
+                        pending.extend(more);
+                    }
+                    closed = done;
+                }
+            }
+            if closed && pending.is_empty() && idle {
+                break;
+            }
+
+            // ---- admit -----------------------------------------
+            // Occupancy *before* this wave: co-admissions from an
+            // idle arena are ordinary batching, not mid-decode entry.
+            let mid_flight = active.iter().any(|s| s.is_some());
+            let mut free: VecDeque<usize> = active.iter().enumerate()
+                .filter(|(_, s)| s.is_none())
+                .map(|(i, _)| i)
+                .collect();
+            let n_adm = free.len().min(pending.len());
+            if n_adm > 0 {
+                let wave: Vec<Request> =
+                    pending.drain(..n_adm).collect();
+                let mut prepped = Vec::with_capacity(wave.len());
+                let mut groups: BTreeMap<usize, Vec<usize>> =
+                    BTreeMap::new();
+                for (i, req) in wave.iter().enumerate() {
+                    let (vi, over) = self.route(req.budget_params);
+                    let prompt = self.prepare_prompt(
+                        &req.prompt, req.max_new_tokens);
+                    groups.entry(vi).or_default().push(i);
+                    prepped.push((vi, over, prompt));
+                }
+                for (vi, idxs) in &groups {
+                    let variant = &self.variants[*vi];
+                    self.stats.groups += 1;
+                    *self.stats.served_by_variant
+                        .entry(variant.params_count)
+                        .or_default() += idxs.len() as u64;
+                    if idxs.len() > 1 {
+                        self.stats.packed_rows += idxs.len() as u64;
+                        let mut lens: Vec<usize> = idxs.iter()
+                            .map(|&i| prepped[i].2.len()).collect();
+                        lens.sort_unstable();
+                        lens.dedup();
+                        if lens.len() > 1 {
+                            self.stats.mixed_len_groups += 1;
+                        }
+                    }
+                    if mid_flight {
+                        self.stats.admitted_mid_decode +=
+                            idxs.len() as u64;
+                    }
+                    let queue_ms: Vec<f64> = idxs.iter()
+                        .map(|&i| wave[i].enqueued_at.elapsed()
+                            .as_secs_f64() * 1e3)
+                        .collect();
+                    let as_i32: Vec<Vec<i32>> = idxs.iter()
+                        .map(|&i| prepped[i].2.iter()
+                            .map(|&x| x as i32).collect())
+                        .collect();
+                    let pack = PackedPrompts::pack(&as_i32)?;
+                    let t_max = pack.max_len();
+                    let slots: Vec<usize> = (0..idxs.len())
+                        .map(|_| free.pop_front().expect("free slot"))
+                        .collect();
+                    let admitted_at = Instant::now();
+                    let logits = self.rt.prefill_into(
+                        &self.cfg, &variant.params, &mut cache, &pack,
+                        &slots)?;
+                    for (j, (&i, &s)) in
+                        idxs.iter().zip(&slots).enumerate()
+                    {
+                        let req = &wave[i];
+                        let plen = prepped[i].2.len();
+                        let allowed =
+                            req.max_new_tokens.min(t - plen);
+                        let mut out = Vec::with_capacity(allowed);
+                        let mut last = -1i32;
+                        if allowed > 0 {
+                            // Left padding puts every row's last
+                            // prompt token in the final buffer column.
+                            let row = &logits.data
+                                [(j * t_max + t_max - 1) * v
+                                    ..(j * t_max + t_max) * v];
+                            let next = argmax_logit(row);
+                            out.push(next as u32);
+                            if allowed > 1 {
+                                last = next as i32;
+                            }
+                        }
+                        active[s] = Some(ActiveRow {
+                            id: req.id,
+                            vi: *vi,
+                            params_count: variant.params_count,
+                            over: prepped[i].1,
+                            allowed,
+                            out,
+                            last,
+                            queue_ms: queue_ms[j],
+                            admitted_at,
+                        });
+                    }
+                }
+            }
+
+            // ---- decode ----------------------------------------
+            let mut live: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (s, slot) in active.iter().enumerate() {
+                if let Some(row) = slot {
+                    if row.last >= 0 {
+                        live.entry(row.vi).or_default().push(s);
+                    }
+                }
+            }
+            for (vi, slots) in &live {
+                let variant = &self.variants[*vi];
+                let last: Vec<i32> = slots.iter()
+                    .map(|&s| active[s].as_ref()
+                        .expect("live slot").last)
+                    .collect();
+                let logits = self.rt.decode_rows(
+                    &self.cfg, &variant.params, &mut cache, &last,
+                    slots)?;
+                self.stats.decode_steps += 1;
+                for (j, &s) in slots.iter().enumerate() {
+                    let row = active[s].as_mut().expect("live slot");
+                    let next = argmax_logit(logits.row(j));
+                    row.out.push(next as u32);
+                    row.last = if row.out.len() < row.allowed {
+                        next as i32
+                    } else {
+                        -1
+                    };
+                }
+            }
+
+            // ---- retire ----------------------------------------
+            for (s, slot) in active.iter_mut().enumerate() {
+                if !matches!(slot, Some(r) if r.last < 0) {
+                    continue;
+                }
+                let row = slot.take().expect("matched Some");
+                cache.free_row(s);
+                let latency_ms =
+                    row.admitted_at.elapsed().as_secs_f64() * 1e3;
+                self.served += 1;
+                self.stats.queue_wait_ms.push(row.queue_ms);
+                self.stats.decode_latency_ms.push(latency_ms);
+                let _ = tx.send(Response {
+                    id: row.id,
+                    tokens: row.out,
+                    served_params: row.params_count,
+                    over_budget: row.over,
+                    latency_ms,
+                    queue_ms: row.queue_ms,
+                });
+            }
+            self.stats.arena_blocks_in_use = cache.blocks_in_use();
+            self.stats.arena_blocks_free = cache.blocks_free();
+            self.stats.arena_blocks_high_water =
+                cache.blocks_high_water();
         }
         Ok(())
     }
@@ -644,6 +971,9 @@ mod tests {
                         max_batch,
                         max_wait: Duration::from_millis(2),
                         kappa: 0.7,
+                        // Small enough that every test crosses block
+                        // boundaries and recycles blocks (seq_len 24).
+                        block_tokens: 4,
                     })
             .unwrap()
     }
@@ -931,6 +1261,69 @@ mod tests {
         assert_eq!(s.served_by_variant
                        .get(&server.variants[0].params_count),
                    Some(&4));
+    }
+
+    #[test]
+    fn late_request_is_admitted_mid_decode_and_matches_solo() {
+        // The tentpole behavior: with both decode slots busy, a short
+        // packmate finishing must free its slot for a waiting request
+        // *before* the long generation completes — and continuous
+        // scheduling must not perturb any request's tokens.
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[], 2);
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        // Pre-queue all three: no sleeps, fully deterministic. The
+        // first wave admits r0 (long) + r1 (short); r2 waits.
+        req_tx.send(Request::new(0, vec![1, 2, 3], 16, 0)).unwrap();
+        req_tx.send(Request::new(1, vec![4, 5], 2, 0)).unwrap();
+        req_tx.send(Request::new(2, vec![6, 7, 1, 2], 4, 0)).unwrap();
+        drop(req_tx);
+        server.run(req_rx, resp_tx).unwrap();
+        let got: Vec<Response> = resp_rx.iter().collect();
+        assert_eq!(got.len(), 3);
+        // Finish order proves mid-decode admission: r1 retires first,
+        // r2 enters its freed slot and also beats r0 to the finish.
+        let order: Vec<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2, 0],
+                   "r2 must finish before the in-flight long r0");
+        assert!(server.stats.admitted_mid_decode >= 1,
+                "r2's admission must count as mid-decode");
+        // Tokens are bit-identical to a solo cached decode per request.
+        let variant = &server.variants[0];
+        let sent: [(Vec<u32>, usize); 3] = [(vec![1, 2, 3], 16),
+                                            (vec![4, 5], 2),
+                                            (vec![6, 7, 1, 2], 4)];
+        for (id, (prompt, max_new)) in sent.iter().enumerate() {
+            let resp = got.iter().find(|r| r.id == id as u64).unwrap();
+            let p = server.prepare_prompt(prompt, *max_new);
+            let solo = server
+                .generate_cached(variant, &[p], &[*max_new])
+                .unwrap();
+            assert_eq!(resp.tokens, solo[0],
+                       "continuous scheduling changed request {id}'s \
+                        tokens");
+        }
+        // Occupancy telemetry: everything retired (all blocks back on
+        // the free list) and paging beat per-row contiguous capacity.
+        let s = &server.stats;
+        assert_eq!(s.arena_blocks_in_use, 0,
+                   "retired rows must return their blocks");
+        assert!(s.arena_blocks_high_water > 0);
+        assert!(s.arena_blocks_high_water < s.arena_blocks_contiguous,
+                "paged high-water {} not below contiguous {}",
+                s.arena_blocks_high_water, s.arena_blocks_contiguous);
+        assert_eq!(s.arena_block_tokens, 4);
+        // Tail-latency samples cover every request; r2's queue wait
+        // spans at least r1's whole in-flight service time.
+        assert_eq!(s.queue_wait_ms.len(), 3);
+        assert_eq!(s.decode_latency_ms.len(), 3);
+        assert!(s.queue_wait_pct(0.99) >= s.queue_wait_pct(0.5));
+        let r1 = got.iter().find(|r| r.id == 1).unwrap();
+        let r2 = got.iter().find(|r| r.id == 2).unwrap();
+        assert!(r2.queue_ms >= 0.9 * r1.latency_ms,
+                "r2 queued {}ms but r1 served for {}ms",
+                r2.queue_ms, r1.latency_ms);
     }
 
     #[test]

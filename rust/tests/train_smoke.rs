@@ -141,7 +141,7 @@ fn serve_smoke() {
         &rt, cfg.clone(), &tr.params, &tr.blocks, &tr.block_param_idx,
         &[0.3, 0.6],
         ServerOptions { max_batch: 4, max_wait: Duration::from_millis(5),
-                        kappa: 0.7 }).unwrap();
+                        ..ServerOptions::default() }).unwrap();
     // Variants are param-count sorted, deduplicated, strictly
     // ascending; at most full + one per requested budget.
     assert!(!server.variants.is_empty() && server.variants.len() <= 3);
