@@ -1,0 +1,131 @@
+//! The allow-marker protocol: `// salaad-lint: allow(<rule>, reason =
+//! "...")` suppresses one rule on one line of code.
+//!
+//! A trailing marker (code before the comment on the same line)
+//! applies to that line; a standalone marker line applies to the next
+//! line that contains actual code — blank and comment-only lines
+//! (including doc comments) are skipped on the way down. A marker with an
+//! unknown rule name, or a missing/empty reason, is itself a finding —
+//! the CI gate treats reason-less suppressions as violations.
+
+use crate::rules::{Finding, RULE_NAMES};
+use crate::source::Analysis;
+
+/// Parsed suppression table plus the findings produced by malformed
+/// markers themselves.
+pub struct Allows {
+    /// `(1-based line, rule)` pairs that are suppressed.
+    granted: Vec<(usize, &'static str)>,
+    /// Malformed-marker findings (`allow-marker` rule).
+    pub errors: Vec<Finding>,
+}
+
+impl Allows {
+    /// Is `rule` suppressed on `line` (1-based)?
+    pub fn covers(&self, line: usize, rule: &str) -> bool {
+        self.granted.iter().any(|&(l, r)| l == line && r == rule)
+    }
+}
+
+/// Scan every line comment of `an` for markers; resolve each to its
+/// target line.
+pub fn collect(an: &Analysis, path: &str) -> Allows {
+    let mut granted = Vec::new();
+    let mut errors = Vec::new();
+    for c in &an.comments {
+        let Some(at) = c.text.find("salaad-lint:") else { continue };
+        let line = an.line_of(c.start);
+        let rest = c.text[at + "salaad-lint:".len()..].trim_start();
+        match parse_marker(rest) {
+            Ok(rule) => {
+                let target = target_line(an, c.start, line);
+                granted.push((target, rule));
+            }
+            Err(msg) => errors.push(Finding {
+                path: path.to_string(),
+                line,
+                rule: "allow-marker",
+                msg,
+            }),
+        }
+    }
+    Allows { granted, errors }
+}
+
+/// Parse `allow(<rule>, reason = "...")`. Returns the (static) rule
+/// name or an error message describing what is malformed.
+fn parse_marker(rest: &str) -> Result<&'static str, String> {
+    let Some(args) = rest.strip_prefix("allow(") else {
+        return Err("marker must be `allow(<rule>, reason = \"...\")`"
+            .to_string());
+    };
+    let Some(close) = args.rfind(')') else {
+        return Err("unclosed allow(...) marker".to_string());
+    };
+    let args = &args[..close];
+    let (rule_txt, reason_txt) = match args.find(',') {
+        Some(comma) => (args[..comma].trim(), Some(args[comma + 1..].trim())),
+        None => (args.trim(), None),
+    };
+    let Some(rule) = RULE_NAMES.iter().copied().find(|r| *r == rule_txt)
+    else {
+        return Err(format!(
+            "unknown rule `{rule_txt}` in allow marker (expected one \
+             of: {})",
+            RULE_NAMES.join(", ")
+        ));
+    };
+    let Some(reason) = reason_txt else {
+        return Err(format!(
+            "allow({rule}) marker is missing its reason — every \
+             suppression must say why (reason = \"...\")"
+        ));
+    };
+    let Some(q) = reason.strip_prefix("reason") else {
+        return Err(format!(
+            "allow({rule}): expected `reason = \"...\"` after the rule"
+        ));
+    };
+    let q = q.trim_start();
+    let Some(q) = q.strip_prefix('=') else {
+        return Err(format!(
+            "allow({rule}): expected `reason = \"...\"` after the rule"
+        ));
+    };
+    let q = q.trim();
+    let body = q
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(q);
+    if body.trim().is_empty() {
+        return Err(format!(
+            "allow({rule}) marker has an empty reason — every \
+             suppression must say why"
+        ));
+    }
+    Ok(rule)
+}
+
+/// Resolve a marker to the 1-based line it suppresses.
+fn target_line(an: &Analysis, comment_start: usize, line: usize) -> usize {
+    let (ls, _) = an.line_span(comment_start);
+    let before = &an.masked[ls..comment_start];
+    if !before.trim().is_empty() {
+        return line; // trailing marker
+    }
+    // Standalone: first following line with real (masked) code.
+    let mut l = line; // 1-based current line index → 0-based next is `line`
+    while l < an.line_start.len() {
+        let start = an.line_start[l];
+        let end = if l + 1 < an.line_start.len() {
+            an.line_start[l + 1] - 1
+        } else {
+            an.masked.len()
+        };
+        if !an.masked[start..end.min(an.masked.len())].trim().is_empty() {
+            return l + 1;
+        }
+        l += 1;
+    }
+    line
+}

@@ -1,0 +1,305 @@
+//! Positive/negative fixtures for every rule, shared between the unit
+//! tests (`cargo test -p salaad-lint`) and the CLI's `--self-check`
+//! mode (run in CI before the tree scan, so a broken lexer can never
+//! silently wave the real tree through).
+//!
+//! Each fixture is a (name, pseudo-relative-path, source, expected
+//! findings) tuple; expectations are `(rule, line)` pairs and must
+//! match exactly — extra or missing findings both fail.
+
+use crate::rules::analyze;
+
+/// One fixture: name, scan-relative path, source, expected
+/// `(rule, 1-based line)` findings.
+pub struct Fixture {
+    /// Test name shown in self-check output.
+    pub name: &'static str,
+    /// Pseudo path relative to the scan root (drives rule scoping).
+    pub rel: &'static str,
+    /// Source text to lint.
+    pub src: &'static str,
+    /// Expected findings as `(rule, line)`, in any order.
+    pub expect: &'static [(&'static str, usize)],
+}
+
+/// The full fixture set.
+pub const FIXTURES: &[Fixture] = &[
+    Fixture {
+        name: "raw_accum_mul_loop_fires",
+        rel: "slr/fake.rs",
+        src: "//! Fixture.\n\
+              fn dot(a: &[f32], b: &[f32]) -> f32 {\n\
+              \x20   let mut acc = 0.0f32;\n\
+              \x20   for i in 0..a.len() {\n\
+              \x20       acc += a[i] * b[i];\n\
+              \x20   }\n\
+              \x20   acc\n\
+              }\n",
+        expect: &[("raw-accum", 5)],
+    },
+    Fixture {
+        name: "raw_accum_bare_running_sum_fires",
+        rel: "runtime/fake.rs",
+        src: "//! Fixture.\n\
+              fn total(xs: &[f32]) -> f32 {\n\
+              \x20   let mut t = 0.0;\n\
+              \x20   for x in xs {\n\
+              \x20       t += x;\n\
+              \x20   }\n\
+              \x20   t\n\
+              }\n",
+        expect: &[("raw-accum", 5)],
+    },
+    Fixture {
+        name: "raw_accum_sum_f32_and_fold_fire",
+        rel: "tensor/fake.rs",
+        src: "//! Fixture.\n\
+              fn s(xs: &[f32]) -> f32 {\n\
+              \x20   let a = xs.iter().sum::<f32>();\n\
+              \x20   let b = xs.iter().fold(0.0, |u, v| u + v);\n\
+              \x20   a + b\n\
+              }\n",
+        expect: &[("raw-accum", 3), ("raw-accum", 4)],
+    },
+    Fixture {
+        name: "raw_accum_clean_shapes_pass",
+        rel: "serve/fake.rs",
+        src: "//! Fixture: counters, f64 widening, dot8 routing, and a\n\
+              //! max-fold are all fine.\n\
+              fn ok(a: &[f32], b: &[f32]) -> f64 {\n\
+              \x20   let mut n = 0u64;\n\
+              \x20   let mut acc = 0.0f64;\n\
+              \x20   for i in 0..a.len() {\n\
+              \x20       n += 1;\n\
+              \x20       acc += a[i] as f64 * b[i] as f64;\n\
+              \x20   }\n\
+              \x20   let m = a.iter().copied().fold(f32::MIN, f32::max);\n\
+              \x20   acc + n as f64 + m as f64\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "raw_accum_test_code_exempt",
+        rel: "slr/fake.rs",
+        src: "//! Fixture.\n\
+              #[cfg(test)]\n\
+              mod tests {\n\
+              \x20   fn naive(a: &[f32]) -> f32 {\n\
+              \x20       let mut acc = 0.0;\n\
+              \x20       for x in a {\n\
+              \x20           acc += x;\n\
+              \x20       }\n\
+              \x20       acc\n\
+              \x20   }\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "raw_accum_allow_marker_with_reason",
+        rel: "slr/fake.rs",
+        src: "//! Fixture.\n\
+              fn kernel(a: &[f32], b: &[f32]) -> f32 {\n\
+              \x20   let mut acc = 0.0f32;\n\
+              \x20   for i in 0..a.len() {\n\
+              \x20       // salaad-lint: allow(raw-accum, reason = \
+              \"normative kernel\")\n\
+              \x20       acc += a[i] * b[i];\n\
+              \x20   }\n\
+              \x20   acc\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "allow_marker_without_reason_is_a_finding",
+        rel: "slr/fake.rs",
+        src: "//! Fixture.\n\
+              fn kernel(a: &[f32], b: &[f32]) -> f32 {\n\
+              \x20   let mut acc = 0.0f32;\n\
+              \x20   for i in 0..a.len() {\n\
+              \x20       acc += a[i] * b[i]; // salaad-lint: \
+              allow(raw-accum)\n\
+              \x20   }\n\
+              \x20   acc\n\
+              }\n",
+        expect: &[("allow-marker", 5), ("raw-accum", 5)],
+    },
+    Fixture {
+        name: "allow_marker_unknown_rule_is_a_finding",
+        rel: "slr/fake.rs",
+        src: "//! Fixture.\n\
+              // salaad-lint: allow(no-such-rule, reason = \"x\")\n\
+              pub fn f() {}\n",
+        expect: &[("allow-marker", 2), ("doc-gate", 3)],
+    },
+    Fixture {
+        name: "no_panic_unwrap_fires_outside_tests",
+        rel: "serve/fake.rs",
+        src: "//! Fixture.\n\
+              fn f(x: Option<u32>) -> u32 {\n\
+              \x20   x.unwrap()\n\
+              }\n\
+              #[cfg(test)]\n\
+              mod tests {\n\
+              \x20   fn g(x: Option<u32>) -> u32 {\n\
+              \x20       x.expect(\"test code is exempt\")\n\
+              \x20   }\n\
+              }\n",
+        expect: &[("no-panic-serve", 3)],
+    },
+    Fixture {
+        name: "no_panic_graceful_shapes_pass",
+        rel: "runtime/fake.rs",
+        src: "//! Fixture: unwrap_or and friends are graceful.\n\
+              fn f(x: Option<u32>) -> u32 {\n\
+              \x20   x.unwrap_or(0).max(x.unwrap_or_default())\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "no_panic_macros_fire",
+        rel: "serve/fake.rs",
+        src: "//! Fixture.\n\
+              fn f(ok: bool) {\n\
+              \x20   if !ok {\n\
+              \x20       panic!(\"boom\");\n\
+              \x20   }\n\
+              }\n",
+        expect: &[("no-panic-serve", 4)],
+    },
+    Fixture {
+        name: "no_panic_out_of_scope_dir_passes",
+        rel: "util/fake.rs",
+        src: "//! Fixture: util/ is outside the serving contract.\n\
+              fn f(x: Option<u32>) -> u32 {\n\
+              \x20   x.unwrap()\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "unsafe_outside_whitelist_fires",
+        rel: "runtime/other.rs",
+        src: "//! Fixture.\n\
+              fn f(p: *const u8) -> u8 {\n\
+              \x20   unsafe { *p }\n\
+              }\n",
+        expect: &[("unsafe-scope", 3)],
+    },
+    Fixture {
+        name: "unsafe_whitelisted_file_passes",
+        rel: "runtime/literal.rs",
+        src: "//! Fixture.\n\
+              fn f(p: *const u8) -> u8 {\n\
+              \x20   unsafe { *p }\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "lock_mutex_of_mut_fires",
+        rel: "util/fake.rs",
+        src: "//! Fixture.\n\
+              fn f(out: &mut Vec<u32>) {\n\
+              \x20   let m = std::sync::Mutex::new(&mut *out);\n\
+              \x20   drop(m);\n\
+              }\n",
+        expect: &[("lock-hygiene", 3)],
+    },
+    Fixture {
+        name: "lock_across_backend_call_fires",
+        rel: "coordinator/fake.rs",
+        src: "//! Fixture.\n\
+              fn step(m: &std::sync::Mutex<u32>, b: &dyn B) {\n\
+              \x20   let _g = m.lock();\n\
+              \x20   b.decode_rows();\n\
+              }\n",
+        expect: &[("lock-hygiene", 3)],
+    },
+    Fixture {
+        name: "lock_without_backend_call_passes",
+        rel: "runtime/fake.rs",
+        src: "//! Fixture: a cache guard with no backend call is fine.\n\
+              fn get(m: &std::sync::Mutex<u32>) -> u32 {\n\
+              \x20   *m.lock().unwrap_or_else(|p| p.into_inner())\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "doc_gate_undocumented_pub_fires",
+        rel: "slr/fake.rs",
+        src: "//! Fixture.\n\
+              pub struct S {\n\
+              \x20   /// Documented field.\n\
+              \x20   pub a: f32,\n\
+              \x20   pub b: f32,\n\
+              }\n\
+              pub fn f() {}\n",
+        expect: &[("doc-gate", 2), ("doc-gate", 5), ("doc-gate", 7)],
+    },
+    Fixture {
+        name: "doc_gate_documented_and_exempt_pass",
+        rel: "serve/fake.rs",
+        src: "//! Fixture.\n\
+              pub use std::time::Duration;\n\
+              pub mod x {}\n\
+              pub(crate) fn hidden() {}\n\
+              /// Documented.\n\
+              #[derive(Clone)]\n\
+              pub struct S {\n\
+              \x20   /// Documented.\n\
+              \x20   pub a: f32,\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "doc_gate_missing_module_doc_fires",
+        rel: "linalg/fake.rs",
+        src: "fn private_only() {}\n",
+        expect: &[("doc-gate", 1)],
+    },
+    Fixture {
+        name: "doc_gate_out_of_scope_dir_passes",
+        rel: "cli/fake.rs",
+        src: "pub fn undocumented_but_out_of_scope() {}\n",
+        expect: &[],
+    },
+];
+
+/// Run one fixture; returns a list of mismatch descriptions (empty on
+/// pass).
+pub fn check_fixture(f: &Fixture) -> Vec<String> {
+    let got = analyze(f.rel, f.rel, f.src);
+    let mut got_pairs: Vec<(&str, usize)> =
+        got.iter().map(|g| (g.rule, g.line)).collect();
+    got_pairs.sort();
+    let mut want: Vec<(&str, usize)> = f.expect.to_vec();
+    want.sort();
+    let mut errs = Vec::new();
+    if got_pairs != want {
+        errs.push(format!(
+            "{}: expected {:?}, got {:?}",
+            f.name,
+            want,
+            got.iter().map(|g| g.render()).collect::<Vec<_>>()
+        ));
+    }
+    errs
+}
+
+/// Run every fixture; returns all mismatches.
+pub fn self_check() -> Vec<String> {
+    let mut errs = Vec::new();
+    for f in FIXTURES {
+        errs.extend(check_fixture(f));
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_fixtures_pass() {
+        let errs = self_check();
+        assert!(errs.is_empty(), "{}", errs.join("\n"));
+    }
+}

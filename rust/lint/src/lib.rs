@@ -1,0 +1,25 @@
+//! `salaad-lint` — repo-specific static contract checks.
+//!
+//! The SALAAD tree's headline guarantee (one training run, a
+//! bit-identical capacity spectrum at every budget, served without
+//! falling over) rests on contracts no general-purpose tool checks:
+//! the normative `dot8`/`axpy8` accumulation order, a panic-free
+//! serve path, a single sanctioned `unsafe` site, lock-free decode
+//! scheduling, and rustdoc as the API contract. This crate enforces
+//! them as five lexical rules over a masked view of the source — see
+//! [`rules`] for the rules, [`source`] for the masking lexer, and
+//! [`allow`] for the `// salaad-lint: allow(<rule>, reason = "...")`
+//! suppression protocol.
+//!
+//! Deliberately dependency-free (the build environment has no crate
+//! registry access, so `syn` is not an option) and deliberately
+//! textual: the rules trade full parse fidelity for zero build cost
+//! and total predictability, and every heuristic is pinned by the
+//! fixtures in [`fixtures`], which both `cargo test` and the CLI's
+//! `--self-check` mode replay.
+
+pub mod allow;
+pub mod fixtures;
+pub mod rules;
+pub mod source;
+pub mod walk;

@@ -1,0 +1,55 @@
+//! CLI for `salaad-lint`: `cargo run -p salaad-lint -- [--self-check]
+//! [paths…]`.
+//!
+//! With no paths, lints `rust/src` (the workspace-root invocation CI
+//! uses). Prints `path:line: [rule] message` per finding and exits
+//! non-zero if anything fires — including malformed allow-markers, so
+//! a reason-less suppression can never merge. `--self-check` replays
+//! the fixture suite instead, proving the lexer and rules still catch
+//! what they claim to before the tree scan is trusted.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-check") {
+        let errs = salaad_lint::fixtures::self_check();
+        return if errs.is_empty() {
+            println!(
+                "salaad-lint --self-check: {} fixtures ok",
+                salaad_lint::fixtures::FIXTURES.len()
+            );
+            ExitCode::SUCCESS
+        } else {
+            for e in &errs {
+                eprintln!("self-check FAILED: {e}");
+            }
+            ExitCode::FAILURE
+        };
+    }
+    let roots: Vec<String> = if args.is_empty() {
+        vec!["rust/src".to_string()]
+    } else {
+        args
+    };
+    let mut findings = Vec::new();
+    let mut files = 0usize;
+    for root in &roots {
+        let (n, fs) = salaad_lint::walk::lint_root(Path::new(root));
+        files += n;
+        findings.extend(fs);
+    }
+    findings.sort();
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    if findings.is_empty() {
+        println!("salaad-lint: {files} files clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("salaad-lint: {} finding(s) in {files} files",
+                  findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,113 @@
+//! Rule `doc-gate`: every `pub` item in `slr/`, `serve/`, `runtime/`
+//! and `linalg/` carries a doc comment, and every file in those trees
+//! opens with `//!` module docs.
+//!
+//! The rustdoc on those modules is the normative API contract
+//! (ARCHITECTURE.md links into it); before this rule the guarantee
+//! was a patchwork of per-module `#![warn(missing_docs)]` islands.
+//! This gate extends it tree-wide without waiting for a compile:
+//!
+//! - `pub fn` / `struct` / `enum` / `trait` / `type` / `const` /
+//!   `static` / `union` (incl. `pub async fn`, `pub unsafe fn`) and
+//!   `pub` struct fields need a `///` (or `#[doc…]`) directly above,
+//!   with attribute lines, blank lines and plain comments skipped on
+//!   the way up;
+//! - `pub use` / `pub mod` re-exports and `pub(crate)` /
+//!   `pub(super)` restricted items are exempt (matching rustc's
+//!   `missing_docs` scope);
+//! - the first non-blank line of the file must start with `//!`.
+//!
+//! The textual pass is slightly stricter than rustc (it also flags
+//! `pub` members of private types); documenting those anyway costs
+//! one line and keeps the rule stateless.
+
+use super::{in_dirs, Finding};
+use crate::source::Analysis;
+
+const SCOPE: &[&str] = &["slr/", "serve/", "runtime/", "linalg/"];
+const RULE: &str = "doc-gate";
+
+const ITEM_KEYWORDS: &[&str] = &[
+    "fn", "struct", "enum", "trait", "type", "const", "static",
+    "union", "unsafe", "async",
+];
+
+/// Run the rule over one file.
+pub fn run(rel: &str, path: &str, an: &Analysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_dirs(rel, SCOPE) {
+        return out;
+    }
+    if let Some(first) = an.raw_lines.iter().find(|l| !l.trim().is_empty())
+    {
+        if !first.trim_start().starts_with("//!") {
+            out.push(Finding {
+                path: path.to_string(),
+                line: 1,
+                rule: RULE,
+                msg: "file must open with `//!` module docs".to_string(),
+            });
+        }
+    }
+    for (l, start) in an.line_start.iter().copied().enumerate() {
+        if an.is_test.get(start).copied().unwrap_or(false) {
+            continue;
+        }
+        let end = if l + 1 < an.line_start.len() {
+            an.line_start[l + 1] - 1
+        } else {
+            an.masked.len()
+        };
+        let line = an.masked[start..end.min(an.masked.len())].trim_start();
+        let Some(rest) = line.strip_prefix("pub") else { continue };
+        let rest = match rest.strip_prefix(' ') {
+            Some(r) => r.trim_start(),
+            None => continue, // `pub(crate)`, `publish`, …
+        };
+        let word: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        let is_item = ITEM_KEYWORDS.contains(&word.as_str());
+        let is_field = !is_item
+            && !word.is_empty()
+            && !matches!(word.as_str(), "use" | "mod" | "extern")
+            && rest[word.len()..].trim_start().starts_with(':');
+        if !is_item && !is_field {
+            continue;
+        }
+        if !has_doc_above(&an.raw_lines, l) {
+            out.push(Finding {
+                path: path.to_string(),
+                line: l + 1,
+                rule: RULE,
+                msg: format!(
+                    "undocumented pub {} — the rustdoc here is the \
+                     normative API contract; add a /// line",
+                    if is_field { "field" } else { word.as_str() }
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Walk upward from the line above `l`, skipping attributes, blank
+/// lines and plain comments, accepting a doc comment.
+fn has_doc_above(raw: &[String], l: usize) -> bool {
+    let mut j = l;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim_start();
+        if t.starts_with("///") || t.starts_with("#[doc") {
+            return true;
+        }
+        if t.is_empty() || t.starts_with("#[") || t.starts_with("#![")
+            || t.starts_with("//")
+        {
+            continue;
+        }
+        return false;
+    }
+    false
+}

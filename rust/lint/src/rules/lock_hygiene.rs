@@ -1,0 +1,97 @@
+//! Rule `lock-hygiene`: no `Mutex` guard held across a backend call,
+//! and no `Mutex::new(&mut …)` smuggling.
+//!
+//! Two shapes, both learned the hard way in the scheduler loop:
+//!
+//! 1. **Guard across a backend call** — a function that takes
+//!    `.lock()` *and* calls into `Backend::prefill_into` /
+//!    `decode_rows` / `forward_*` / `loss_and_grads` serializes every
+//!    worker behind one guard (or deadlocks if the backend re-enters).
+//!    The paged-KV decode loop must stay lock-free; shared state is
+//!    passed by value or split per worker.
+//! 2. **`Mutex::new(&mut out)`** — wrapping a `&mut` in a `Mutex` to
+//!    satisfy the borrow checker across scoped threads. The cure is
+//!    per-slot channels or `split_at_mut` (see `util/parallel.rs`).
+//!
+//! The check is per-`fn`: any `.lock(` whose innermost enclosing
+//! function body also contains a backend-call token fires. Locking in
+//! helpers that do no backend work (e.g. the RoPE table cache) passes.
+
+use super::{find_all, Finding};
+use crate::source::Analysis;
+
+/// Tokens that mark a backend call on the scheduler/decode path.
+pub const BACKEND_TOKENS: &[&str] = &[
+    "prefill_into",
+    "decode_rows",
+    ".prefill(",
+    ".decode_step(",
+    "forward_logits",
+    "forward_model",
+    "forward_resolved",
+    "loss_and_grads",
+    "eval_loss",
+];
+
+const RULE: &str = "lock-hygiene";
+
+/// Run the rule over one file.
+pub fn run(_rel: &str, path: &str, an: &Analysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let s = &an.masked;
+    let b = s.as_bytes();
+    for i in find_all(s, "Mutex::new") {
+        if an.is_test[i] {
+            continue;
+        }
+        let mut j = i + "Mutex::new".len();
+        j = skip_ws(b, j);
+        if j < b.len() && b[j] == b'(' {
+            j = skip_ws(b, j + 1);
+            if j < b.len() && b[j] == b'&' {
+                j = skip_ws(b, j + 1);
+                if s[j..].starts_with("mut") {
+                    out.push(Finding {
+                        path: path.to_string(),
+                        line: an.line_of(i),
+                        rule: RULE,
+                        msg: "Mutex::new(&mut …) — use per-slot \
+                              channels or split_at_mut instead of \
+                              wrapping a unique borrow in a lock"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+    for i in find_all(s, ".lock(") {
+        if an.is_test[i] {
+            continue;
+        }
+        let Some((o, c)) = an.enclosing_fn(i) else { continue };
+        let body = &s[o..c];
+        if let Some(tok) =
+            BACKEND_TOKENS.iter().find(|t| body.contains(*t))
+        {
+            out.push(Finding {
+                path: path.to_string(),
+                line: an.line_of(i),
+                rule: RULE,
+                msg: format!(
+                    ".lock() in a function that calls the backend \
+                     ({tok}) — a guard held across a backend call \
+                     serializes the decode loop; restructure or add \
+                     an allow marker"
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn skip_ws(b: &[u8], mut j: usize) -> usize {
+    while j < b.len() && (b[j] == b' ' || b[j] == b'\n') {
+        j += 1;
+    }
+    j
+}

@@ -1,0 +1,84 @@
+//! The five repo contracts, as lexical rules over [`Analysis`] views.
+//!
+//! Each rule module exposes `run(rel, path, an) -> Vec<Finding>`;
+//! [`analyze`] wires them together with the allow-marker table from
+//! [`crate::allow`]. `rel` is the path relative to the scan root
+//! (`rust/src`), used for scoping; `path` is the display path printed
+//! in diagnostics.
+
+pub mod doc_gate;
+pub mod lock_hygiene;
+pub mod no_panic_serve;
+pub mod raw_accum;
+pub mod unsafe_scope;
+
+use crate::allow;
+use crate::source::Analysis;
+
+/// Every rule an allow-marker may name.
+pub const RULE_NAMES: &[&str] = &[
+    "raw-accum",
+    "no-panic-serve",
+    "unsafe-scope",
+    "lock-hygiene",
+    "doc-gate",
+];
+
+/// One diagnostic: file, 1-based line, rule, message.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Display path (as given on the command line).
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule name (one of [`RULE_NAMES`] or `allow-marker`).
+    pub rule: &'static str,
+    /// Human-readable description with the suggested fix.
+    pub msg: String,
+}
+
+impl Finding {
+    /// `path:line: [rule] msg` — the grep/editor-clickable form.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule,
+                self.msg)
+    }
+}
+
+/// Analyze one file: run every rule, subtract allow-marker grants, add
+/// malformed-marker findings. `rel` uses `/` separators.
+pub fn analyze(rel: &str, path: &str, src: &str) -> Vec<Finding> {
+    let an = Analysis::of(src);
+    let allows = allow::collect(&an, path);
+    let mut out = allows.errors;
+    let mut raw = Vec::new();
+    raw.extend(raw_accum::run(rel, path, &an));
+    raw.extend(no_panic_serve::run(rel, path, &an));
+    raw.extend(unsafe_scope::run(rel, path, &an));
+    raw.extend(lock_hygiene::run(rel, path, &an));
+    raw.extend(doc_gate::run(rel, path, &an));
+    for f in raw {
+        if !allows.covers(f.line, f.rule) {
+            out.push(f);
+        }
+    }
+    out.sort();
+    out
+}
+
+/// All byte offsets where `needle` occurs in `hay`.
+pub fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + 1;
+    }
+    out
+}
+
+/// Does `rel` live under any of the given top-level dirs (each given
+/// with a trailing slash)?
+pub fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}

@@ -1,0 +1,102 @@
+//! Rule `no-panic-serve`: no panicking calls in non-test code under
+//! `serve/` and `runtime/`.
+//!
+//! A long-running server must degrade, not die: a client hanging up, a
+//! malformed request, or a poisoned lock on the decode path has to
+//! become a counted [`ServeStats`] error or a `Result`, never an
+//! `unwrap()`. Flags `.unwrap()`, `.expect(...)`, `panic!`, `todo!`
+//! and `unimplemented!` in non-`#[cfg(test)]` code. `unwrap_or` /
+//! `unwrap_or_else` / `unwrap_or_default` are graceful and exempt.
+//! Documented programmer-error invariants carry an allow marker with
+//! the reason; dynamic invariants belong in `debug_invariant!` (free
+//! in release builds) instead.
+//!
+//! [`ServeStats`]: ../../salaad/serve/struct.ServeStats.html
+
+use super::{find_all, in_dirs, Finding};
+use crate::source::Analysis;
+
+const SCOPE: &[&str] = &["serve/", "runtime/"];
+const RULE: &str = "no-panic-serve";
+
+/// Run the rule over one file.
+pub fn run(rel: &str, path: &str, an: &Analysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_dirs(rel, SCOPE) {
+        return out;
+    }
+    let s = &an.masked;
+    let b = s.as_bytes();
+    for i in find_all(s, ".unwrap") {
+        if an.is_test[i] {
+            continue;
+        }
+        // `.unwrap` then `()` — not `.unwrap_or*`.
+        let mut j = i + ".unwrap".len();
+        j = skip_ws(b, j);
+        if j < b.len() && b[j] == b'(' {
+            let k = skip_ws(b, j + 1);
+            if k < b.len() && b[k] == b')' {
+                out.push(finding(path, an.line_of(i),
+                                 ".unwrap() on the serve/runtime path"));
+            }
+        }
+    }
+    for i in find_all(s, ".expect") {
+        if an.is_test[i] {
+            continue;
+        }
+        let j = skip_ws(b, i + ".expect".len());
+        if j < b.len() && b[j] == b'(' {
+            out.push(finding(path, an.line_of(i),
+                             ".expect(...) on the serve/runtime path"));
+        }
+    }
+    for word in ["panic", "todo", "unimplemented"] {
+        for i in word_bangs(s, word) {
+            if an.is_test[i] {
+                continue;
+            }
+            out.push(finding(path, an.line_of(i),
+                             "panicking macro on the serve/runtime \
+                              path"));
+        }
+    }
+    out
+}
+
+fn finding(path: &str, line: usize, what: &str) -> Finding {
+    Finding {
+        path: path.to_string(),
+        line,
+        rule: RULE,
+        msg: format!(
+            "{what} — return a Result, count it in ServeStats, use \
+             debug_invariant!, or add `// salaad-lint: \
+             allow(no-panic-serve, reason = \"...\")`"
+        ),
+    }
+}
+
+fn skip_ws(b: &[u8], mut j: usize) -> usize {
+    while j < b.len() && (b[j] == b' ' || b[j] == b'\n') {
+        j += 1;
+    }
+    j
+}
+
+/// Offsets of `word` occurrences that are word-bounded on the left and
+/// followed (after optional whitespace) by `!`.
+fn word_bangs(s: &str, word: &str) -> Vec<usize> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    for i in find_all(s, word) {
+        let pre_ok = i == 0
+            || !(b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_');
+        let j = skip_ws(b, i + word.len());
+        if pre_ok && j < b.len() && b[j] == b'!' {
+            out.push(i);
+        }
+    }
+    out
+}

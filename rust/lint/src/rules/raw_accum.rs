@@ -1,0 +1,150 @@
+//! Rule `raw-accum`: no raw f32 accumulation outside `linalg/`.
+//!
+//! The bit-identical capacity spectrum only holds because every f32
+//! reduction on the inference path goes through the normative
+//! `linalg::dot8` / `axpy8` / `axpy8x4` kernels, whose accumulation
+//! order is pinned by golden tests. A plain `acc += a[i] * b[i]` loop
+//! in a new kernel silently re-orders the sum and breaks bit-exactness
+//! between budgets. This rule flags, in non-test code under `runtime/`,
+//! `serve/`, `slr/` and `tensor/`:
+//!
+//! - a `+=` statement inside a `for`/`while`/`loop` body whose RHS
+//!   contains a binary `*` (a multiply-accumulate), unless the
+//!   statement widens with `as f64` (f64 accumulation is outside the
+//!   f32 contract — training-loss statistics do this deliberately);
+//! - a bare `acc += x` where both sides are single identifiers
+//!   (optionally `*`-dereferenced) — the classic running-sum shape;
+//! - `.sum::<f32>(` anywhere (iterator reduction with unpinned order);
+//! - `.fold(0.0` with a `+` later on the line (an additive fold; the
+//!   order-safe `fold(f32::NEG_INFINITY, f32::max)` shape is fine).
+//!
+//! Integer counters (`self.stats.groups += 1`) and indexed
+//! non-multiply updates don't match either shape and pass untouched.
+//! Genuine normative kernels and training-path scatter-adds carry
+//! `// salaad-lint: allow(raw-accum, reason = "...")`.
+
+use super::{find_all, in_dirs, Finding};
+use crate::source::Analysis;
+
+const SCOPE: &[&str] = &["runtime/", "serve/", "slr/", "tensor/"];
+const RULE: &str = "raw-accum";
+
+/// Run the rule over one file.
+pub fn run(rel: &str, path: &str, an: &Analysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_dirs(rel, SCOPE) {
+        return out;
+    }
+    let s = &an.masked;
+    for i in find_all(s, "+=") {
+        if an.is_test[i] || an.loop_depth[i] == 0 {
+            continue;
+        }
+        let start = stmt_start(s, i);
+        let end = match s[i..].find(';') {
+            Some(p) => i + p,
+            None => (i + 400).min(s.len()),
+        };
+        let stmt = &s[start..end];
+        if stmt.contains("as f64") {
+            continue;
+        }
+        let lhs = s[start..i].trim();
+        let rhs = s[i + 2..end].trim();
+        let flagged = has_binary_star(rhs)
+            || (is_bare_operand(lhs) && is_bare_operand(rhs));
+        if flagged {
+            out.push(Finding {
+                path: path.to_string(),
+                line: an.line_of(i),
+                rule: RULE,
+                msg: "raw f32 accumulation in a loop outside linalg/ — \
+                      route through linalg::dot8/axpy8, widen with `as \
+                      f64`, or add `// salaad-lint: allow(raw-accum, \
+                      reason = \"...\")`"
+                    .to_string(),
+            });
+        }
+    }
+    for i in find_all(s, ".sum::<f32>") {
+        if an.is_test[i] {
+            continue;
+        }
+        out.push(Finding {
+            path: path.to_string(),
+            line: an.line_of(i),
+            rule: RULE,
+            msg: ".sum::<f32>() has no pinned accumulation order — \
+                  route through linalg::dot8 or add an allow marker"
+                .to_string(),
+        });
+    }
+    for i in find_all(s, ".fold(0.0") {
+        if an.is_test[i] {
+            continue;
+        }
+        let (_, le) = an.line_span(i);
+        if s[i..le].contains('+') {
+            out.push(Finding {
+                path: path.to_string(),
+                line: an.line_of(i),
+                rule: RULE,
+                msg: "additive fold from 0.0 has no pinned accumulation \
+                      order — route through linalg kernels or add an \
+                      allow marker"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Byte offset of the start of the statement containing `i`: one past
+/// the previous `;`, `{` or `}`.
+fn stmt_start(s: &str, i: usize) -> usize {
+    let b = s.as_bytes();
+    let mut j = i;
+    while j > 0 {
+        let c = b[j - 1];
+        if c == b';' || c == b'{' || c == b'}' {
+            return j;
+        }
+        j -= 1;
+    }
+    0
+}
+
+/// Does `rhs` contain a `*` used as a binary operator (its previous
+/// non-whitespace char ends a value: identifier, `]`, `)`, or a
+/// literal)?
+fn has_binary_star(rhs: &str) -> bool {
+    let b = rhs.as_bytes();
+    for (k, &c) in b.iter().enumerate() {
+        if c != b'*' {
+            continue;
+        }
+        let mut j = k;
+        while j > 0 && (b[j - 1] == b' ' || b[j - 1] == b'\n') {
+            j -= 1;
+        }
+        if j == 0 {
+            continue; // leading deref
+        }
+        let p = b[j - 1];
+        if p.is_ascii_alphanumeric() || p == b'_' || p == b']'
+            || p == b')' || p == b'"'
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is `t` a single identifier, optionally behind `*` derefs — the
+/// shape of a running-sum accumulator?
+fn is_bare_operand(t: &str) -> bool {
+    let t = t.trim_start_matches('*').trim();
+    !t.is_empty()
+        && t.bytes().all(|c| c.is_ascii_alphanumeric() || c == b'_')
+        && !t.as_bytes()[0].is_ascii_digit()
+}

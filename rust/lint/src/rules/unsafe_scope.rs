@@ -1,0 +1,50 @@
+//! Rule `unsafe-scope`: `unsafe` only in the explicit whitelist.
+//!
+//! The workspace denies `unsafe_code` (`[workspace.lints]`), and the
+//! single sanctioned escape hatch is the byte-cast in
+//! `runtime/literal.rs`, which documents its safety argument inline
+//! and opts out with `#[allow(unsafe_code)]`. This rule is the
+//! redundant textual check: any `unsafe` token outside the whitelist
+//! is flagged even if a future edit also weakens the compiler-level
+//! deny. Extending the whitelist is a reviewed change to WHITELIST
+//! here plus the inline safety doc at the new site.
+
+use super::{find_all, Finding};
+use crate::source::Analysis;
+
+/// Files (relative to the scan root) allowed to contain `unsafe`.
+pub const WHITELIST: &[&str] = &["runtime/literal.rs"];
+
+const RULE: &str = "unsafe-scope";
+
+/// Run the rule over one file.
+pub fn run(rel: &str, path: &str, an: &Analysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if WHITELIST.contains(&rel) {
+        return out;
+    }
+    let s = &an.masked;
+    let b = s.as_bytes();
+    for i in find_all(s, "unsafe") {
+        if an.is_test[i] {
+            continue;
+        }
+        let pre_ok = i == 0
+            || !(b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_');
+        let end = i + "unsafe".len();
+        let post_ok = end >= b.len()
+            || !(b[end].is_ascii_alphanumeric() || b[end] == b'_');
+        if pre_ok && post_ok {
+            out.push(Finding {
+                path: path.to_string(),
+                line: an.line_of(i),
+                rule: RULE,
+                msg: "`unsafe` outside the whitelist \
+                      (runtime/literal.rs) — see ARCHITECTURE.md \
+                      §Normative contracts"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}

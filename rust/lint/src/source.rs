@@ -1,0 +1,510 @@
+//! Lossless-enough lexical analysis of a Rust source file.
+//!
+//! `salaad-lint` deliberately does not parse Rust. It builds a *masked*
+//! view of the source — string/char literals and comments blanked out,
+//! everything else byte-for-byte in place — plus a handful of per-byte
+//! structural maps (test regions, loop-nesting depth, `fn` body spans)
+//! that the rules in [`crate::rules`] pattern-match against. This keeps
+//! the pass dependency-free (the container that grows this repo has no
+//! network, so `syn` is off the table) and fast enough to run on every
+//! `cargo test`.
+//!
+//! The masking lexer understands: line comments, nested block comments,
+//! string literals (including `r#"…"#` raw strings and `b"…"` byte
+//! strings), char/byte-char literals vs. lifetimes, and preserves
+//! newlines so byte offsets map to line numbers. Non-ASCII characters
+//! (which in this tree occur only inside comments and strings) are
+//! blanked as well, so the masked text is pure ASCII and byte offsets
+//! are character offsets.
+
+/// One `//…` line comment: its byte offset in the source and its raw
+/// text (including the leading slashes). Allow-markers are parsed from
+/// these; block comments are blanked and dropped.
+pub struct Comment {
+    /// Byte offset of the first `/` in the (masked) source.
+    pub start: usize,
+    /// Raw comment text up to, not including, the newline.
+    pub text: String,
+}
+
+/// Structural view of one source file. All vectors indexed by byte
+/// offset into `masked` are exactly `masked.len()` long.
+pub struct Analysis {
+    /// Source with comments/strings blanked; same length as the input.
+    pub masked: String,
+    /// Original source split into lines (for doc-comment checks).
+    pub raw_lines: Vec<String>,
+    /// Byte offset of the start of each line in `masked`.
+    pub line_start: Vec<usize>,
+    /// Per byte: inside a `#[cfg(test)]`/`#[test]` item?
+    pub is_test: Vec<bool>,
+    /// Per byte: number of enclosing `for`/`while`/`loop` bodies.
+    pub loop_depth: Vec<u16>,
+    /// `(open_brace, close_brace)` byte offsets of every `fn` body.
+    pub fn_bodies: Vec<(usize, usize)>,
+    /// All `//` line comments, in source order.
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+impl Analysis {
+    /// Run the masking lexer and the structural passes over `src`.
+    pub fn of(src: &str) -> Analysis {
+        let (masked, comments) = mask(src);
+        let b = masked.as_bytes();
+        let n = b.len();
+        let mut line_start = vec![0usize];
+        let mut i = 0;
+        while i < n {
+            if b[i] == b'\n' {
+                line_start.push(i + 1);
+            }
+            i += 1;
+        }
+        let is_test = test_regions(&masked);
+        let (loop_depth, fn_bodies) = structure(&masked);
+        Analysis {
+            masked,
+            raw_lines: src.lines().map(|l| l.to_string()).collect(),
+            line_start,
+            is_test,
+            loop_depth,
+            fn_bodies,
+            comments,
+        }
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_start.binary_search(&off) {
+            Ok(l) => l + 1,
+            Err(l) => l,
+        }
+    }
+
+    /// 0-based byte range `[start, end)` of the line containing `off`
+    /// (not including the newline).
+    pub fn line_span(&self, off: usize) -> (usize, usize) {
+        let l = self.line_of(off) - 1;
+        let start = self.line_start[l];
+        let end = if l + 1 < self.line_start.len() {
+            self.line_start[l + 1] - 1
+        } else {
+            self.masked.len()
+        };
+        (start, end)
+    }
+
+    /// Innermost `fn` body containing `off`, if any.
+    pub fn enclosing_fn(&self, off: usize) -> Option<(usize, usize)> {
+        self.fn_bodies
+            .iter()
+            .copied()
+            .filter(|&(o, c)| o < off && off < c)
+            .min_by_key(|&(o, c)| c - o)
+    }
+}
+
+/// Blank out comments, strings, and char literals; collect line
+/// comments. The returned string has the same byte length as `src`
+/// would after replacing every non-ASCII char with a space (the lexer
+/// operates on chars and emits one ASCII byte per char).
+fn mask(src: &str) -> (String, Vec<Comment>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = vec![b' '; n];
+    let mut comments = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            out[i] = b'\n';
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            comments.push(Comment { start, text });
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/'
+                {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        out[i] = b'\n';
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i = skip_plain_string(&chars, i, &mut out);
+        } else if c == 'r'
+            && !(i > 0 && chars[i - 1].is_ascii_alphanumeric()
+                 || i > 0 && chars[i - 1] == '_')
+            && raw_string_hashes(&chars, i + 1).is_some()
+        {
+            let hashes = raw_string_hashes(&chars, i + 1).unwrap_or(0);
+            out[i] = b'r';
+            i = skip_raw_string(&chars, i + 1, hashes, &mut out);
+        } else if c == 'b'
+            && !(i > 0 && (chars[i - 1].is_ascii_alphanumeric()
+                           || chars[i - 1] == '_'))
+            && i + 1 < n
+        {
+            out[i] = b'b';
+            if chars[i + 1] == '"' {
+                i = skip_plain_string(&chars, i + 1, &mut out);
+            } else if chars[i + 1] == '\'' {
+                i = skip_char_literal(&chars, i + 1, &mut out);
+            } else if chars[i + 1] == 'r'
+                && raw_string_hashes(&chars, i + 2).is_some()
+            {
+                let hashes = raw_string_hashes(&chars, i + 2).unwrap_or(0);
+                out[i + 1] = b'r';
+                i = skip_raw_string(&chars, i + 2, hashes, &mut out);
+            } else {
+                i += 1;
+            }
+        } else if c == '\'' {
+            if is_char_literal(&chars, i) {
+                i = skip_char_literal(&chars, i, &mut out);
+            } else {
+                // Lifetime tick: keep as code.
+                out[i] = b'\'';
+                i += 1;
+            }
+        } else {
+            out[i] = if c.is_ascii() { c as u8 } else { b' ' };
+            i += 1;
+        }
+    }
+    // SAFETY-free: `out` is all ASCII by construction.
+    (String::from_utf8_lossy(&out).into_owned(), comments)
+}
+
+/// Number of `#`s if `chars[at..]` begins a raw-string opener
+/// (`#*"`), else None.
+fn raw_string_hashes(chars: &[char], at: usize) -> Option<usize> {
+    let mut j = at;
+    while j < chars.len() && chars[j] == '#' {
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some(j - at)
+    } else {
+        None
+    }
+}
+
+/// Skip a `"…"` literal starting at the opening quote; keeps the
+/// quotes in the mask (content blanked, newlines preserved). Returns
+/// the index just past the closing quote.
+fn skip_plain_string(chars: &[char], open: usize, out: &mut [u8]) -> usize {
+    out[open] = b'"';
+    let mut i = open + 1;
+    while i < chars.len() {
+        match chars[i] {
+            // Escapes, including the `\<newline>` string continuation:
+            // the newline must survive masking or every later line
+            // number drifts.
+            '\\' => {
+                if i + 1 < chars.len() && chars[i + 1] == '\n' {
+                    out[i + 1] = b'\n';
+                }
+                i += 2;
+            }
+            '"' => {
+                out[i] = b'"';
+                return i + 1;
+            }
+            '\n' => {
+                out[i] = b'\n';
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip `#*"…"#*` starting at the first `#` (or the quote); `hashes`
+/// is the opener's hash count. Returns the index past the closer.
+fn skip_raw_string(chars: &[char], at: usize, hashes: usize,
+                   out: &mut [u8]) -> usize {
+    let mut i = at;
+    // Opener: hashes then quote.
+    while i < chars.len() && chars[i] == '#' {
+        out[i] = b'#';
+        i += 1;
+    }
+    if i < chars.len() {
+        out[i] = b'"';
+        i += 1;
+    }
+    while i < chars.len() {
+        if chars[i] == '"' {
+            let mut k = 0;
+            while k < hashes
+                && i + 1 + k < chars.len()
+                && chars[i + 1 + k] == '#'
+            {
+                k += 1;
+            }
+            if k == hashes {
+                out[i] = b'"';
+                for slot in out.iter_mut().skip(i + 1).take(hashes) {
+                    *slot = b'#';
+                }
+                return i + 1 + hashes;
+            }
+        }
+        if chars[i] == '\n' {
+            out[i] = b'\n';
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Is the `'` at `at` the start of a char literal (vs. a lifetime)?
+fn is_char_literal(chars: &[char], at: usize) -> bool {
+    if at + 1 >= chars.len() {
+        return false;
+    }
+    if chars[at + 1] == '\\' {
+        return true;
+    }
+    at + 2 < chars.len() && chars[at + 2] == '\'' && chars[at + 1] != '\''
+}
+
+/// Skip a char/byte-char literal starting at the opening tick.
+/// Handles escapes including `'\u{…}'`. Returns the index past the
+/// closing tick.
+fn skip_char_literal(chars: &[char], open: usize, out: &mut [u8]) -> usize {
+    let mut i = open + 1;
+    if i < chars.len() && chars[i] == '\\' {
+        i += 2; // skip the escape lead; scan to the closing tick
+        while i < chars.len() && chars[i] != '\'' && i - open < 12 {
+            i += 1;
+        }
+    } else if i < chars.len() {
+        i += 1;
+    }
+    if i < chars.len() && chars[i] == '\'' {
+        return i + 1;
+    }
+    // Malformed / not actually a literal: emit the tick and move on.
+    out[open] = b'\'';
+    open + 1
+}
+
+/// Mark the byte ranges covered by `#[cfg(test)] …` / `#[test] …`
+/// items (attribute through the matching close brace, or the
+/// terminating semicolon).
+fn test_regions(masked: &str) -> Vec<bool> {
+    let b = masked.as_bytes();
+    let n = b.len();
+    let mut out = vec![false; n];
+    let mut from = 0;
+    loop {
+        let Some(p) = masked[from..].find("#[") else { break };
+        let attr_start = from + p;
+        // Bracket-balanced attribute body.
+        let mut depth = 0i32;
+        let mut j = attr_start + 1;
+        let mut attr_end = n;
+        while j < n {
+            match b[j] {
+                b'[' => depth += 1,
+                b']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        attr_end = j + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        from = attr_end.min(n);
+        let body = &masked[attr_start + 2..attr_end.saturating_sub(1)];
+        if !attr_is_test(body) {
+            continue;
+        }
+        // Item extent: first `;` or brace-matched `{…}` at
+        // paren/bracket depth 0 after the attribute.
+        let mut pd = 0i32;
+        let mut k = attr_end;
+        let mut item_end = n;
+        while k < n {
+            match b[k] {
+                b'(' | b'[' => pd += 1,
+                b')' | b']' => pd -= 1,
+                b';' if pd == 0 => {
+                    item_end = k + 1;
+                    break;
+                }
+                b'{' if pd == 0 => {
+                    item_end = match_brace(b, k);
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for slot in out.iter_mut().take(item_end).skip(attr_start) {
+            *slot = true;
+        }
+        from = item_end.max(from);
+    }
+    out
+}
+
+/// Does an attribute body (text between `#[` and `]`) gate on test?
+/// Accepts `test` and `cfg(… test …)`; rejects `cfg_attr(…)` and
+/// `cfg(not(test))` is out of scope for this tree (checked absent).
+fn attr_is_test(body: &str) -> bool {
+    let t = body.trim();
+    if t == "test" {
+        return true;
+    }
+    let Some(rest) = t.strip_prefix("cfg") else { return false };
+    if !rest.trim_start().starts_with('(') {
+        return false;
+    }
+    contains_word(rest, "test")
+}
+
+/// Word-boundary substring search.
+pub fn contains_word(hay: &str, word: &str) -> bool {
+    let b = hay.as_bytes();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(word) {
+        let at = from + p;
+        let pre_ok = at == 0 || !is_ident(b[at - 1]);
+        let end = at + word.len();
+        let post_ok = end >= b.len() || !is_ident(b[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// Index just past the `}` matching the `{` at `open` (or `len` if
+/// unbalanced).
+fn match_brace(b: &[u8], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    b.len()
+}
+
+/// One pass over the masked text computing per-byte loop depth and
+/// `fn` body spans. A `{` opens a loop body iff the preceding control
+/// keyword resolved to a loop: `while`/`loop` directly, `for` only if
+/// an `in` follows it before the brace (so `impl Trait for Type {`
+/// does not count).
+fn structure(masked: &str) -> (Vec<u16>, Vec<(usize, usize)>) {
+    #[derive(PartialEq)]
+    enum Pending {
+        None,
+        ForSeen,
+        LoopPending,
+    }
+    let b = masked.as_bytes();
+    let n = b.len();
+    let mut depth_at = vec![0u16; n];
+    let mut fn_bodies = Vec::new();
+    let mut brace_stack: Vec<(bool, bool, usize)> = Vec::new();
+    let mut cur_depth = 0u16;
+    let mut paren = 0i32;
+    let mut pending = Pending::None;
+    let mut fn_pending = false;
+    let mut i = 0;
+    while i < n {
+        if i < depth_at.len() {
+            depth_at[i] = cur_depth;
+        }
+        let c = b[i];
+        if is_ident(c) && (i == 0 || !is_ident(b[i - 1])) {
+            let mut j = i + 1;
+            while j < n && is_ident(b[j]) {
+                j += 1;
+            }
+            match &masked[i..j] {
+                "for" => pending = Pending::ForSeen,
+                "while" | "loop" => pending = Pending::LoopPending,
+                "in" if pending == Pending::ForSeen => {
+                    pending = Pending::LoopPending
+                }
+                "fn" => fn_pending = true,
+                _ => {}
+            }
+            for slot in depth_at.iter_mut().take(j).skip(i) {
+                *slot = cur_depth;
+            }
+            i = j;
+            continue;
+        }
+        match c {
+            b'(' | b'[' => paren += 1,
+            b')' | b']' => paren -= 1,
+            b';' if paren == 0 => {
+                pending = Pending::None;
+                fn_pending = false;
+            }
+            b'{' => {
+                let is_loop = pending == Pending::LoopPending && paren == 0;
+                let is_fn = fn_pending && paren == 0;
+                brace_stack.push((is_loop, is_fn, i));
+                if is_loop {
+                    cur_depth += 1;
+                }
+                if is_fn {
+                    fn_pending = false;
+                }
+                pending = Pending::None;
+            }
+            b'}' => {
+                if let Some((was_loop, was_fn, open)) = brace_stack.pop() {
+                    if was_loop {
+                        cur_depth = cur_depth.saturating_sub(1);
+                    }
+                    if was_fn {
+                        fn_bodies.push((open, i));
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    (depth_at, fn_bodies)
+}

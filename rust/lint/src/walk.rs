@@ -1,0 +1,57 @@
+//! Filesystem walk + top-level lint driver shared by the CLI and the
+//! whole-tree integration test.
+
+use crate::rules::{analyze, Finding};
+use std::path::{Path, PathBuf};
+
+/// Collect every `*.rs` file under `root` (or `root` itself if it is
+/// a file), sorted for deterministic output.
+pub fn rs_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if root.is_dir() {
+        collect(root, &mut out);
+    } else {
+        out.push(root.to_path_buf());
+    }
+    out.sort();
+    out
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            collect(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Lint every `*.rs` file under `root`. Returns `(files_scanned,
+/// findings)`; unreadable files produce a finding rather than an
+/// abort, so CI can never skip a file silently.
+pub fn lint_root(root: &Path) -> (usize, Vec<Finding>) {
+    let mut findings = Vec::new();
+    let files = rs_files(root);
+    let n = files.len();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .map(|p| p.to_string_lossy().replace('\\', "/"))
+            .unwrap_or_else(|_| f.to_string_lossy().into_owned());
+        let display = f.to_string_lossy().into_owned();
+        match std::fs::read_to_string(f) {
+            Ok(src) => findings.extend(analyze(&rel, &display, &src)),
+            Err(e) => findings.push(Finding {
+                path: display,
+                line: 1,
+                rule: "allow-marker",
+                msg: format!("unreadable source file: {e}"),
+            }),
+        }
+    }
+    findings.sort();
+    (n, findings)
+}

@@ -1,0 +1,32 @@
+//! The whole-tree gate: `cargo test -p salaad-lint` fails if any
+//! contract rule fires on `rust/src` — the same scan CI runs via
+//! `cargo run -p salaad-lint`, so the contracts are enforced even for
+//! contributors who only run the test suite.
+
+use std::path::PathBuf;
+
+#[test]
+fn repo_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("lint crate lives under rust/")
+        .join("src");
+    assert!(root.is_dir(), "missing source root {}", root.display());
+    let (files, findings) = salaad_lint::walk::lint_root(&root);
+    assert!(files > 30, "suspiciously few files scanned: {files}");
+    let rendered: Vec<String> =
+        findings.iter().map(|f| f.render()).collect();
+    assert!(
+        findings.is_empty(),
+        "salaad-lint found {} contract violation(s) in {} files:\n{}",
+        findings.len(),
+        files,
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn self_check_fixtures_pass() {
+    let errs = salaad_lint::fixtures::self_check();
+    assert!(errs.is_empty(), "{}", errs.join("\n"));
+}

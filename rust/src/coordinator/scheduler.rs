@@ -66,27 +66,43 @@ pub fn run_admm_phase(blocks: &mut [SlrBlock], xs: &[Tensor],
                     .collect())
             })
             .collect();
-        let out = std::sync::Mutex::new(&mut results);
-        let secs = std::sync::Mutex::new(&mut worker_secs);
+        // Each worker returns (worker id, busy secs, finished blocks)
+        // through its join handle; the spawning thread seats results
+        // after joining. No Mutex-of-&mut, no lock held across the
+        // update (salaad-lint rule `lock-hygiene`).
         std::thread::scope(|scope| {
-            for (w, items) in work {
-                let out = &out;
-                let secs = &secs;
-                let xs = &xs;
-                let rank_caps = &rank_caps;
-                scope.spawn(move || {
-                    let tw = std::time::Instant::now();
-                    for (i, mut block) in items {
-                        let mut rng =
-                            Rng::named(&format!("admm.{}", block.name),
-                                       seed);
-                        let st = admm_update(&mut block, &xs[i], j_iters,
-                                             rank_caps[i], gamma,
-                                             &mut rng);
-                        out.lock().unwrap()[i] = Some((block, st));
+            let handles: Vec<_> = work
+                .into_iter()
+                .map(|(w, items)| {
+                    let xs = &xs;
+                    let rank_caps = &rank_caps;
+                    scope.spawn(move || {
+                        let tw = std::time::Instant::now();
+                        let mut done = Vec::with_capacity(items.len());
+                        for (i, mut block) in items {
+                            let mut rng = Rng::named(
+                                &format!("admm.{}", block.name), seed);
+                            let st = admm_update(&mut block, &xs[i],
+                                                 j_iters, rank_caps[i],
+                                                 gamma, &mut rng);
+                            done.push((i, block, st));
+                        }
+                        (w, tw.elapsed().as_secs_f64(), done)
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok((w, busy, done)) => {
+                        worker_secs[w] = busy;
+                        for (i, block, st) in done {
+                            results[i] = Some((block, st));
+                        }
                     }
-                    secs.lock().unwrap()[w] = tw.elapsed().as_secs_f64();
-                });
+                    // A worker panic is a real bug in admm_update;
+                    // surface it instead of fabricating results.
+                    Err(e) => std::panic::resume_unwind(e),
+                }
             }
         });
     }

@@ -23,6 +23,7 @@ use crate::util::Json;
 
 /// One compiled HLO entrypoint.
 pub struct Executable {
+    /// Entrypoint name as listed in the artifact manifest.
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -53,13 +54,17 @@ impl Executable {
 /// Artifact-directory-backed backend: manifest + executable cache on one
 /// owner thread (`PjRtClient` is `Rc`-backed, not `Send`).
 pub struct PjrtBackend {
+    /// The PJRT CPU client executables run on.
     pub client: xla::PjRtClient,
+    /// Artifact directory holding HLO protos + manifest.
     pub dir: PathBuf,
+    /// Parsed artifacts/manifest.json (configs, entrypoints).
     pub manifest: Json,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
 
 impl PjrtBackend {
+    /// Open the artifact directory and bring up a PJRT CPU client.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest = Json::parse_file(&dir.join("manifest.json"))
@@ -79,6 +84,7 @@ impl PjrtBackend {
         ModelConfig::from_manifest(name, j)
     }
 
+    /// Model-config names listed in the manifest, sorted by key.
     pub fn config_names(&self) -> Vec<String> {
         self.manifest
             .get("configs")
@@ -148,6 +154,7 @@ impl PjrtBackend {
         Ok(lits)
     }
 
+    /// Load the golden fixtures JSON recorded at artifact-build time.
     pub fn fixtures(&self) -> Result<Json> {
         Json::parse_file(&self.dir.join("fixtures.json"))
     }

@@ -1,10 +1,22 @@
 //! Host `Tensor` ⇄ `xla::Literal` marshalling.
+//!
+//! **Unsafe whitelist.** This module is the *only* place in the tree
+//! allowed to contain `unsafe` — enforced twice: statically by
+//! salaad-lint's `unsafe-scope` rule (`rust/lint/src/rules/
+//! unsafe_scope.rs`) and by the workspace-level `unsafe_code = "deny"`
+//! lint, which every other module inherits without an `allow`. The
+//! single unsafe block below is a byte-view over plain-old-data
+//! numeric slices for zero-copy FFI marshalling into XLA literals; new
+//! unsafe code anywhere else must either go through safe
+//! abstractions or argue its way into this whitelist (update the
+//! rule's `WHITELIST` plus this header in the same change).
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
 /// View a typed slice as raw bytes (single-copy literal creation; the
 /// XLA side copies once from this view).
+#[allow(unsafe_code)]
 fn as_bytes<T>(data: &[T]) -> &[u8] {
     // SAFETY: plain-old-data numeric slices; alignment of u8 is 1.
     unsafe {

@@ -147,7 +147,7 @@ impl PackedPrompts {
         for (b, &l) in row_lens.iter().enumerate() {
             ensure!(l > 0, "prompt row {b} is empty");
         }
-        let max_len = row_lens.iter().copied().max().unwrap();
+        let max_len = row_lens.iter().copied().max().unwrap_or(0);
         let mut tokens = vec![0i32; prompts.len() * max_len];
         for (b, p) in prompts.iter().enumerate() {
             let p = p.as_ref();
@@ -451,8 +451,12 @@ impl Runtime {
     pub fn native() -> Runtime {
         let mut configs = BTreeMap::new();
         for name in ModelConfig::builtin_names() {
-            configs.insert(name.to_string(),
-                           ModelConfig::builtin(name).unwrap());
+            // Names come from the builtin registry itself, so the
+            // lookup cannot fail; a hypothetical miss just omits the
+            // config rather than panicking.
+            if let Ok(cfg) = ModelConfig::builtin(name) {
+                configs.insert(name.to_string(), cfg);
+            }
         }
         Runtime {
             backend: Box::new(NativeBackend::new()),

@@ -187,6 +187,11 @@ pub struct ServeStats {
     /// Decode iterations executed (one `decode_rows` call per variant
     /// with live rows counts once each).
     pub decode_steps: u64,
+    /// Responses that could not be delivered because the client hung
+    /// up (response channel closed) before its request finished. The
+    /// request is still served to completion and counted in the
+    /// latency samples; only the delivery is dropped — never a panic.
+    pub dropped_responses: u64,
     /// Per-request queue wait in ms — client-side enqueue to
     /// admission (the moment its prefill is issued). Feed to
     /// [`Self::queue_wait_pct`].
@@ -435,6 +440,17 @@ impl<'a> Server<'a> {
     }
 
     fn refresh_byte_stats(&mut self) {
+        // Called on every variant-set change (new / admit_budget /
+        // retire), so it doubles as the checkpoint for the spectrum's
+        // ordering contract: `route`'s partition-point logic and the
+        // `served_by_variant` keying both assume strictly ascending
+        // parameter counts (dedup forbids equality).
+        crate::debug_invariant!(
+            self.variants.windows(2)
+                .all(|w| w[0].params_count < w[1].params_count),
+            "variant spectrum not strictly ascending: {:?}",
+            self.variants.iter().map(|v| v.params_count)
+                .collect::<Vec<_>>());
         self.stats.shared_bytes = self.shared_bytes();
         self.stats.marginal_bytes = self.marginal_bytes();
     }
@@ -690,14 +706,18 @@ impl<'a> Server<'a> {
                     self.served += 1;
                     self.stats.queue_wait_ms.push(q);
                     self.stats.decode_latency_ms.push(latency_ms);
-                    let _ = tx.send(Response {
+                    let resp = Response {
                         id: batch[i].id,
                         tokens: toks,
                         served_params: variant.params_count,
                         over_budget: prepped[i].1,
                         latency_ms,
                         queue_ms: q,
-                    });
+                    };
+                    if tx.send(resp).is_err() {
+                        // Client hung up: count, keep serving.
+                        self.stats.dropped_responses += 1;
+                    }
                 }
             }
         }
@@ -806,6 +826,27 @@ impl<'a> Server<'a> {
                 }
                 for (vi, idxs) in &groups {
                     let variant = &self.variants[*vi];
+                    // Seat the group before touching any stats: the
+                    // wave is sized to the free-slot count (`n_adm`),
+                    // so every row must find a seat — enforced in
+                    // debug builds; a release build with the invariant
+                    // broken returns the unseated tail to the queue
+                    // head instead of panicking the serving thread.
+                    let n_seat = free.len().min(idxs.len());
+                    let slots: Vec<usize> =
+                        free.drain(..n_seat).collect();
+                    crate::debug_invariant!(
+                        slots.len() == idxs.len(),
+                        "admission wave over-committed: group of {} \
+                         rows found only {} free slots",
+                        idxs.len(), slots.len());
+                    for &i in idxs[slots.len()..].iter().rev() {
+                        pending.push_front(wave[i].clone());
+                    }
+                    let idxs = &idxs[..slots.len()];
+                    if idxs.is_empty() {
+                        continue;
+                    }
                     self.stats.groups += 1;
                     *self.stats.served_by_variant
                         .entry(variant.params_count)
@@ -834,9 +875,6 @@ impl<'a> Server<'a> {
                         .collect();
                     let pack = PackedPrompts::pack(&as_i32)?;
                     let t_max = pack.max_len();
-                    let slots: Vec<usize> = (0..idxs.len())
-                        .map(|_| free.pop_front().expect("free slot"))
-                        .collect();
                     let admitted_at = Instant::now();
                     let logits = self.rt.prefill_into(
                         &self.cfg, &variant.params, &mut cache, &pack,
@@ -878,26 +916,38 @@ impl<'a> Server<'a> {
             }
 
             // ---- decode ----------------------------------------
-            let mut live: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            // Snapshot (slot, feed-token) pairs per variant so the
+            // decode call needs no second look into `active` — the
+            // rows it reads cannot have been retired in between.
+            let mut live: BTreeMap<usize, Vec<(usize, i32)>> =
+                BTreeMap::new();
             for (s, slot) in active.iter().enumerate() {
                 if let Some(row) = slot {
                     if row.last >= 0 {
-                        live.entry(row.vi).or_default().push(s);
+                        live.entry(row.vi).or_default()
+                            .push((s, row.last));
                     }
                 }
             }
-            for (vi, slots) in &live {
+            for (vi, rows) in &live {
                 let variant = &self.variants[*vi];
-                let last: Vec<i32> = slots.iter()
-                    .map(|&s| active[s].as_ref()
-                        .expect("live slot").last)
-                    .collect();
+                let slots: Vec<usize> =
+                    rows.iter().map(|&(s, _)| s).collect();
+                let last: Vec<i32> =
+                    rows.iter().map(|&(_, l)| l).collect();
                 let logits = self.rt.decode_rows(
                     &self.cfg, &variant.params, &mut cache, &last,
-                    slots)?;
+                    &slots)?;
                 self.stats.decode_steps += 1;
                 for (j, &s) in slots.iter().enumerate() {
-                    let row = active[s].as_mut().expect("live slot");
+                    // A seated row cannot vanish mid-step; if it ever
+                    // did, skip its token rather than panic the
+                    // serving thread.
+                    let Some(row) = active[s].as_mut() else {
+                        crate::debug_invariant!(
+                            false, "decode slot {s} emptied mid-step");
+                        continue;
+                    };
                     let next = argmax_logit(logits.row(j));
                     row.out.push(next as u32);
                     row.last = if row.out.len() < row.allowed {
@@ -913,21 +963,31 @@ impl<'a> Server<'a> {
                 if !matches!(slot, Some(r) if r.last < 0) {
                     continue;
                 }
-                let row = slot.take().expect("matched Some");
+                // The matches! above saw Some, so take() yields it;
+                // spelled as let-else so the retire loop carries no
+                // panic path.
+                let Some(row) = slot.take() else {
+                    continue;
+                };
                 cache.free_row(s);
                 let latency_ms =
                     row.admitted_at.elapsed().as_secs_f64() * 1e3;
                 self.served += 1;
                 self.stats.queue_wait_ms.push(row.queue_ms);
                 self.stats.decode_latency_ms.push(latency_ms);
-                let _ = tx.send(Response {
+                let resp = Response {
                     id: row.id,
                     tokens: row.out,
                     served_params: row.params_count,
                     over_budget: row.over,
                     latency_ms,
                     queue_ms: row.queue_ms,
-                });
+                };
+                if tx.send(resp).is_err() {
+                    // Client hung up mid-flight: the work is done and
+                    // the samples recorded; only delivery is dropped.
+                    self.stats.dropped_responses += 1;
+                }
             }
             self.stats.arena_blocks_in_use = cache.blocks_in_use();
             self.stats.arena_blocks_free = cache.blocks_free();
@@ -1143,6 +1203,29 @@ mod tests {
                        .get(&server.variants.last().unwrap()
                            .params_count),
                    Some(&1));
+    }
+
+    #[test]
+    fn client_disconnect_mid_flight_is_counted_not_fatal() {
+        // A client that hangs up before its response lands must not
+        // panic the serving thread: the request still runs to
+        // completion, its latency samples are recorded, and the
+        // undeliverable response increments `dropped_responses`.
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[0.5], 2);
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        for i in 0..3 {
+            req_tx.send(Request::new(i, vec![1, 2, 3], 2, 0)).unwrap();
+        }
+        drop(req_tx);
+        drop(resp_rx); // every send from here on hits a closed channel
+        server.run(req_rx, resp_tx).unwrap();
+        assert_eq!(server.stats.dropped_responses, 3,
+                   "each undeliverable response must be counted");
+        assert_eq!(server.stats.queue_wait_ms.len(), 3,
+                   "disconnected requests still serve to completion");
+        assert_eq!(server.served, 3);
     }
 
     #[test]

@@ -18,11 +18,15 @@ use crate::util::Rng;
 /// Outcome statistics of one structural phase on one block.
 #[derive(Clone, Debug)]
 pub struct AdmmStats {
+    /// Block name (matches the config param name).
     pub name: String,
     /// ‖X − L − S‖_F after the update (δ_i, Appendix F).
     pub recon_error: f64,
+    /// Retained rank of L after the update.
     pub rank: usize,
+    /// Effective rank ratio Γ_L^γ after the update.
     pub rank_ratio: f64,
+    /// Density Υ_S after the update.
     pub density: f64,
     /// Whether the SVT took the randomized fast path.
     pub randomized_svd: bool,

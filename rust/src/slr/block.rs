@@ -13,14 +13,22 @@ use crate::util::Rng;
 /// Threshold below which an S entry counts as a structural zero.
 pub const S_EPS: f32 = 1e-12;
 
+/// Per-block ADMM state: the factored surrogate L = U·diag(s)·Vᵀ, the
+/// sparse residual S, the scaled dual Y, and the regularization
+/// weights the I-controller steers (Alg. 1 of the paper).
 #[derive(Clone, Debug)]
 pub struct SlrBlock {
+    /// Block name (matches the config param name).
     pub name: String,
+    /// Output dimension (rows of W).
     pub n: usize,
+    /// Input dimension (columns of W).
     pub m: usize,
     /// Low-rank factors: u (n×r), s (r), v (m×r). r may be 0.
     pub u: Tensor,
+    /// Singular values of L, non-increasing; length is the rank r.
     pub s: Vec<f32>,
+    /// Right factor V (m×r).
     pub v: Tensor,
     /// Sparse residual, stored dense (content is sparse; accounting uses
     /// nnz — see DESIGN.md §3 on the simulator's memory model).
@@ -29,6 +37,7 @@ pub struct SlrBlock {
     pub y: Tensor,
     /// Nuclear / ℓ1 regularization weights (the I-controller's state).
     pub alpha: f64,
+    /// ℓ1 weight β (shrinkage strength on S).
     pub beta: f64,
     /// Block-wise penalty from the scaling law (Eq. 7).
     pub rho: f64,
@@ -59,6 +68,7 @@ impl SlrBlock {
         }
     }
 
+    /// Retained rank of L (number of stored singular values).
     pub fn rank(&self) -> usize {
         self.s.len()
     }
@@ -147,6 +157,7 @@ impl SlrBlock {
         density(&self.sp.data, S_EPS)
     }
 
+    /// Structural non-zeros of S (entries above [`S_EPS`]).
     pub fn nnz(&self) -> usize {
         self.sp.nnz(S_EPS)
     }

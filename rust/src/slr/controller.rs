@@ -14,6 +14,8 @@
 
 use super::block::SlrBlock;
 
+/// Integral controller driving (α, β) toward the target structure
+/// (Γ̂, Υ̂) — Eq. 6 of the paper.
 #[derive(Clone, Debug)]
 pub struct IController {
     /// Target effective rank ratio Γ̂.
@@ -22,17 +24,21 @@ pub struct IController {
     pub target_density: f64,
     /// Energy coverage γ for the rank measurement.
     pub gamma: f64,
+    /// Integral gain on the rank error (step for α).
     pub delta_alpha: f64,
+    /// Integral gain on the density error (step for β).
     pub delta_beta: f64,
 }
 
 impl IController {
+    /// Build a controller from explicit targets and gains.
     pub fn new(target_rank_ratio: f64, target_density: f64, gamma: f64,
                delta_alpha: f64, delta_beta: f64) -> Self {
         IController { target_rank_ratio, target_density, gamma,
                       delta_alpha, delta_beta }
     }
 
+    /// Build a controller from the run config's targets and gains.
     pub fn from_config(cfg: &crate::config::SalaadConfig) -> Self {
         IController::new(cfg.target_rank_ratio, cfg.target_density,
                          cfg.gamma, cfg.delta_alpha, cfg.delta_beta)

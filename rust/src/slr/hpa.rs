@@ -22,13 +22,17 @@ use anyhow::{bail, Result};
 /// The derived plan for a budget.
 #[derive(Clone, Debug)]
 pub struct HpaPlan {
+    /// Compression ratio κ = budget / removable pool.
     pub kappa: f64,
     /// Parameters requested for removal.
     pub budget: usize,
+    /// Fraction of the removal taken from the low-rank pool.
     pub phi_l: f64,
+    /// Fraction of the removal taken from the sparse pool.
     pub phi_s: f64,
     /// Removable pools.
     pub c_l: usize,
+    /// Removable sparse pool (total S entries).
     pub c_s: usize,
 }
 
@@ -90,9 +94,13 @@ impl BlockCuts {
 /// Accounting of an applied plan.
 #[derive(Clone, Debug)]
 pub struct HpaReport {
+    /// The plan that was applied.
     pub plan: HpaPlan,
+    /// Parameters actually removed (≤ plan.budget after clamping).
     pub removed: usize,
+    /// Deployable parameter count before the cut.
     pub params_before: usize,
+    /// Deployable parameter count after the cut.
     pub params_after: usize,
 }
 

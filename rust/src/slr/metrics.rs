@@ -18,6 +18,7 @@ pub fn effective_rank_ratio(s: &[f32], gamma: f64, min_dim: usize) -> f64 {
     }
     let mut acc = 0.0;
     for (k, v) in sorted.iter().enumerate() {
+        // salaad-lint: allow(raw-accum, reason = "f64 energy-coverage accumulator for a structural metric (rank-ratio), not f32 inference arithmetic")
         acc += v;
         if acc / total >= gamma {
             return (k + 1) as f64 / min_dim as f64;

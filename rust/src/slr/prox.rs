@@ -29,8 +29,11 @@ pub fn soft_threshold_assign(z: &mut Tensor, tau: f32) {
 /// Result of singular-value thresholding: factored L with only the
 /// surviving (shrunk) singular values.
 pub struct SvtResult {
+    /// Left factor U (n×r), surviving columns only.
     pub u: Tensor,
+    /// Shrunk singular values, non-increasing, all positive.
     pub s: Vec<f32>,
+    /// Right factor V (m×r), surviving columns only.
     pub v: Tensor,
     /// True when the randomized path was used (perf accounting).
     pub randomized: bool,

@@ -12,22 +12,30 @@ use super::prox::{soft_threshold_assign, svt};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
+/// Converged RPCA decomposition W ≈ L + S with L = U·diag(s)·Vᵀ.
 #[derive(Clone, Debug)]
 pub struct RpcaResult {
+    /// Left factor U (n×r).
     pub u: Tensor,
+    /// Singular values of L, non-increasing.
     pub s: Vec<f32>,
+    /// Right factor V (m×r).
     pub v: Tensor,
+    /// Sparse component S, stored dense.
     pub sp: Tensor,
+    /// ADMM iterations actually run before convergence/cutoff.
     pub iters: usize,
     /// Final relative constraint violation ‖W−L−S‖_F / ‖W‖_F.
     pub resid: f64,
 }
 
 impl RpcaResult {
+    /// Retained rank of L.
     pub fn rank(&self) -> usize {
         self.s.len()
     }
 
+    /// Effective rank ratio Γ_L^γ of L.
     pub fn rank_ratio(&self, gamma: f64) -> f64 {
         let min_dim = self.u.nrows().min(self.sp.ncols());
         effective_rank_ratio(&self.s, gamma, min_dim)

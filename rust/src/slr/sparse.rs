@@ -90,7 +90,46 @@ impl CsrMatrix {
             }
             indptr.push(indices.len() as u32);
         }
-        CsrMatrix { n, m, indptr, indices, values }
+        let out = CsrMatrix { n, m, indptr, indices, values };
+        crate::debug_invariant!(
+            out.validate().is_ok(),
+            "from_dense built an invalid CSR: {}",
+            out.validate().unwrap_err());
+        out
+    }
+
+    /// Check every struct-level invariant (see the type docs) in
+    /// O(nnz), returning the first violation. The kernels assume these
+    /// hold and stay check-free; construction seams run this instead —
+    /// [`Self::from_dense`] under `debug_assertions`, `FactorStore::
+    /// new` unconditionally (cold path, and the store is about to be
+    /// shared immutably with every view carved from it).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.indptr.len() == self.n + 1,
+                "indptr len {} != n+1 = {}",
+                self.indptr.len(), self.n + 1);
+        ensure!(self.indptr[0] == 0, "indptr[0] = {}", self.indptr[0]);
+        ensure!(self.indices.len() == self.values.len(),
+                "indices len {} != values len {}",
+                self.indices.len(), self.values.len());
+        ensure!(self.indptr[self.n] as usize == self.values.len(),
+                "indptr[n] = {} != nnz = {}",
+                self.indptr[self.n], self.values.len());
+        for i in 0..self.n {
+            let (lo, hi) = (self.indptr[i] as usize,
+                            self.indptr[i + 1] as usize);
+            ensure!(lo <= hi, "indptr decreases at row {i}");
+            for k in lo..hi {
+                ensure!((self.indices[k] as usize) < self.m,
+                        "row {i}: column {} out of range {}",
+                        self.indices[k], self.m);
+                ensure!(k == lo || self.indices[k - 1] < self.indices[k],
+                        "row {i}: columns not strictly ascending \
+                         ({} then {})",
+                        self.indices[k - 1], self.indices[k]);
+            }
+        }
+        Ok(())
     }
 
     /// Stored entry count.
@@ -136,6 +175,7 @@ impl CsrMatrix {
                             self.indptr[i + 1] as usize);
             let mut acc = 0.0f32;
             for k in lo..hi {
+                // salaad-lint: allow(raw-accum, reason = "normative CSR contract: ascending-column per-row accumulation with one rounding step per stored entry")
                 acc += self.values[k] * x[self.indices[k] as usize];
             }
             y[i] = acc;
@@ -164,6 +204,7 @@ impl CsrMatrix {
                                 self.indptr[i + 1] as usize);
                 let mut acc = 0.0f32;
                 for k in lo..hi {
+                    // salaad-lint: allow(raw-accum, reason = "normative CSR contract: ascending-column per-row accumulation with one rounding step per stored entry")
                     acc += self.values[k]
                         * xrow[self.indices[k] as usize];
                 }
@@ -233,6 +274,7 @@ impl FactorStore {
                 "V shape {:?} != [{m}, {r}]", v.shape);
         ensure!(sp.n == n && sp.m == m,
                 "S is {}x{}, factors are {n}x{m}", sp.n, sp.m);
+        sp.validate()?;
         if !s.is_sorted_by(|a, b| a >= b) {
             // Stable descending sort — the same comparator and
             // stability `hpa::apply` has always used, so a store built
@@ -255,6 +297,12 @@ impl FactorStore {
             s = ss;
             v = sv;
         }
+        // The prefix-view contract: every budget's spectrum must be a
+        // plain prefix of this vector, so it has to leave construction
+        // non-increasing (total_cmp order, NaN-tolerant).
+        crate::debug_invariant!(
+            s.is_sorted_by(|a, b| a.total_cmp(b).is_ge()),
+            "FactorStore spectrum not non-increasing after sort");
         let nnz = sp.nnz();
         // Stable ascending-|value| sort over CSR entry order; entry
         // `order[p]` is the (p+1)-th smallest, so its magnitude rank
@@ -574,6 +622,7 @@ impl FactoredLinear {
                 let mut acc = 0.0f32;
                 for e in lo..hi {
                     if st.mag_rank[e] < cut {
+                        // salaad-lint: allow(raw-accum, reason = "normative CSR contract over the magnitude cut: must round exactly like spmm_t of the materialized cut")
                         acc += st.sp.values[e]
                             * xrow[st.sp.indices[e] as usize];
                     }
@@ -598,6 +647,7 @@ impl FactoredLinear {
                 continue;
             }
             for (j, o) in out.iter_mut().enumerate() {
+                // salaad-lint: allow(raw-accum, reason = "ascending-k rank-1 update mirrors axpy8's normative order; strided V access rules out the slice kernel")
                 *o += c * st.v.data[j * r + kk];
             }
         }

@@ -7,6 +7,7 @@ impl Tensor {
     pub fn add_assign(&mut self, other: &Tensor) {
         debug_assert_eq!(self.shape, other.shape);
         for (a, b) in self.data.iter_mut().zip(&other.data) {
+            // salaad-lint: allow(raw-accum, reason = "elementwise training-path add, one term per slot — not a reduction; inference accumulation routes through linalg::axpy8")
             *a += *b;
         }
     }
@@ -28,6 +29,7 @@ impl Tensor {
     pub fn axpy(&mut self, s: f32, other: &Tensor) {
         debug_assert_eq!(self.shape, other.shape);
         for (a, b) in self.data.iter_mut().zip(&other.data) {
+            // salaad-lint: allow(raw-accum, reason = "elementwise optimizer update on the training path, not a reduction; inference accumulation routes through linalg::axpy8")
             *a += s * *b;
         }
     }

@@ -1,0 +1,68 @@
+//! `debug_invariant!` — debug-build internal-invariant checks.
+//!
+//! The serving stack bans panics on the hot path (`salaad-lint` rule
+//! `no-panic-serve`), but structural invariants — "the admission wave
+//! never exceeds the free-slot count", "no arena block appears in two
+//! block tables" — still deserve loud failures during development.
+//! `debug_invariant!` squares the two: it panics with a formatted
+//! message when `debug_assertions` are on (tests, `cargo test`, dev
+//! profiles) and compiles to nothing in release builds, where the call
+//! site must degrade gracefully instead (requeue, skip, count).
+//!
+//! Unlike `debug_assert!`, the name marks the *contract*: everything
+//! asserted through this macro is an internal invariant the static
+//! pass (`salaad-lint`) and the dynamic self-checks
+//! ([`crate::runtime::KvCache::check_invariants`],
+//! `CsrMatrix::validate`) jointly maintain — grep for it to enumerate
+//! the runtime side of the repo's contract surface.
+
+/// Assert an internal invariant in debug builds; free in release.
+///
+/// ```
+/// use salaad::debug_invariant;
+/// let free_slots = 4;
+/// let wave = 3;
+/// debug_invariant!(wave <= free_slots);
+/// debug_invariant!(wave <= free_slots,
+///                  "wave {} over-commits {} slots", wave, free_slots);
+/// ```
+#[macro_export]
+macro_rules! debug_invariant {
+    ($cond:expr $(,)?) => {
+        if cfg!(debug_assertions) && !$cond {
+            // Reached only under debug_assertions: a violated internal
+            // invariant must fail the test run, not limp onward.
+            ::std::panic!(concat!("invariant violated: ",
+                                  stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if cfg!(debug_assertions) && !$cond {
+            ::std::panic!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn passing_invariant_is_silent() {
+        debug_invariant!(1 + 1 == 2);
+        debug_invariant!(true, "never formatted {}", 42);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore)]
+    fn failing_invariant_panics_under_debug_assertions() {
+        let caught = std::panic::catch_unwind(|| {
+            debug_invariant!(1 > 2, "custom message {}", 7);
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert_eq!(msg, "custom message 7");
+        let caught = std::panic::catch_unwind(|| {
+            debug_invariant!(false);
+        });
+        let msg = *caught.unwrap_err().downcast::<&str>().unwrap();
+        assert!(msg.contains("invariant violated"), "{msg}");
+    }
+}

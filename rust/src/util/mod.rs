@@ -10,6 +10,7 @@ pub mod json;
 pub mod timer;
 pub mod parallel;
 pub mod prop;
+pub mod invariant;
 
 pub use rng::Rng;
 pub use json::Json;

@@ -30,6 +30,11 @@ pub fn parallel_for(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
 }
 
 /// Parallel map collecting results in index order.
+///
+/// Workers stream `(index, result)` pairs over a channel and the
+/// calling thread seats them — no shared `&mut`, no lock wrapped
+/// around user code (salaad-lint rule `lock-hygiene` bans the old
+/// `Mutex::new(&mut out)` pattern).
 pub fn parallel_map<T, R>(items: &[T], workers: usize,
                           f: impl Fn(&T) -> R + Sync) -> Vec<R>
 where
@@ -37,14 +42,32 @@ where
     R: Send,
 {
     let n = items.len();
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    {
-        let slots = std::sync::Mutex::new(&mut out);
-        parallel_for(n, workers, |i| {
-            let r = f(&items[i]);
-            slots.lock().unwrap()[i] = Some(r);
-        });
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.iter().map(f).collect();
     }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let tx = tx.clone();
+            let f = &f;
+            scope.spawn(move || {
+                let mut i = w;
+                while i < n {
+                    // The receiver outlives the scope, so send only
+                    // fails if the collector already panicked — then
+                    // dropping the result is moot anyway.
+                    let _ = tx.send((i, f(&items[i])));
+                    i += workers;
+                }
+            });
+        }
+        drop(tx); // collector ends once every worker clone hangs up
+        while let Ok((i, r)) = rx.recv() {
+            out[i] = Some(r);
+        }
+    });
     out.into_iter().map(|x| x.unwrap()).collect()
 }
 
