@@ -428,6 +428,34 @@ fn main() {
                     std::hint::black_box(resp_rx.iter().count());
                 });
             }
+            // Self-speculative decode at 64 tokens: the default
+            // drafter (smallest admitted budget's cuts — a zero-copy
+            // view over the same master stores) proposes k tokens per
+            // round, the full variant verifies. Hold against
+            // serve/decode64_cached_nano, the non-speculative 64-token
+            // baseline of the same prompt — the decode-speedup
+            // protocol in EXPERIMENTS.md §Self-speculative decoding.
+            if scale == "nano" && rt.supports_incremental() {
+                let drafter = server.carve_drafter(None).unwrap();
+                let master = server.variants.last().unwrap();
+                for k in [4usize, 8] {
+                    b.bench(&format!("serve/speculate_k{k}_nano"), || {
+                        std::hint::black_box(
+                            server.generate_speculative(
+                                master, &drafter, &prompt, 64, k)
+                                .unwrap());
+                    });
+                }
+                let spec = server
+                    .generate_speculative(master, &drafter, &prompt,
+                                          64, 4)
+                    .unwrap();
+                eprintln!("nano speculate k=4: {} drafted, {} \
+                           accepted ({:.0}%), {} rounds for {} tokens",
+                          spec.counters.drafted, spec.counters.accepted,
+                          spec.counters.acceptance_rate() * 100.0,
+                          spec.counters.rounds, spec.tokens.len());
+            }
         }
 
         // One short SALAAD training step sequence (fully end-to-end).

@@ -261,6 +261,35 @@ pub const FIXTURES: &[Fixture] = &[
         src: "pub fn undocumented_but_out_of_scope() {}\n",
         expect: &[],
     },
+    Fixture {
+        name: "speculate_path_violations_fire",
+        rel: "serve/speculate.rs",
+        src: "//! Fixture: the speculative-decode path sits inside both\n\
+              //! the raw-accum and no-panic-serve contracts.\n\
+              fn verify(logits: &[f32], k: Option<usize>) -> f32 {\n\
+              \x20   let n = k.unwrap();\n\
+              \x20   let mut acc = 0.0f32;\n\
+              \x20   for i in 0..n {\n\
+              \x20       acc += logits[i] * logits[i];\n\
+              \x20   }\n\
+              \x20   acc\n\
+              }\n",
+        expect: &[("no-panic-serve", 4), ("raw-accum", 7)],
+    },
+    Fixture {
+        name: "speculate_path_clean_shapes_pass",
+        rel: "serve/speculate.rs",
+        src: "//! Fixture: the shapes the real speculate.rs uses — u64\n\
+              //! counters and an agreeing-prefix scan — stay clean.\n\
+              fn accept(drafts: &[i32], masters: &[i32],\n\
+              \x20         drafted: &mut u64) -> usize {\n\
+              \x20   *drafted += drafts.len() as u64;\n\
+              \x20   drafts.iter().zip(masters)\n\
+              \x20       .take_while(|(d, m)| d == m)\n\
+              \x20       .count()\n\
+              }\n",
+        expect: &[],
+    },
 ];
 
 /// Run one fixture; returns a list of mismatch descriptions (empty on

@@ -65,6 +65,20 @@ impl Args {
         }
     }
 
+    /// Optional float flag: `None` when absent (no default exists),
+    /// parse failures surfaced — the shape `--draft-frac` needs, where
+    /// absence means "derive from the serving spectrum" rather than
+    /// any particular number.
+    pub fn opt_f64_flag(&self, key: &str) -> Result<Option<f64>> {
+        match self.flag(key) {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key} expects a number, got {v}")),
+            None => Ok(None),
+        }
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
     }
@@ -117,6 +131,17 @@ mod tests {
     fn bad_number_errors() {
         let a = Args::parse(&argv("x --steps abc")).unwrap();
         assert!(a.usize_flag("steps", 0).is_err());
+    }
+
+    #[test]
+    fn optional_float_flag() {
+        let a = Args::parse(&argv("serve nano --draft-frac 0.8"))
+            .unwrap();
+        assert_eq!(a.opt_f64_flag("draft-frac").unwrap(), Some(0.8));
+        assert_eq!(a.opt_f64_flag("missing").unwrap(), None);
+        let b = Args::parse(&argv("serve nano --draft-frac abc"))
+            .unwrap();
+        assert!(b.opt_f64_flag("draft-frac").is_err());
     }
 
     #[test]

@@ -34,7 +34,7 @@ USAGE:
   salaad compress <ckpt-dir> [--budget-frac F] [--kappa K] [--out DIR]
   salaad serve <scale> [--steps N] [--requests N] [--mixed-lens]
                [--admit F1,F2,...] [--spectrum] [--burst]
-               [--block-size N]
+               [--block-size N] [--speculate K] [--draft-frac F]
   salaad exp <id|all> [--scale S] [--steps N] [--seed N] [--out DIR]
              [--no-cache] [--verbose]
 
@@ -244,6 +244,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // trade-off.
     let block_tokens = args.usize_flag(
         "block-size", ServerOptions::default().block_tokens)?;
+    // --speculate K: after the plain run, re-serve the identical
+    // schedule with self-speculative decoding (a zero-extra-weight
+    // drafter view proposing K tokens per verify round) and hard-fail
+    // unless the outputs are token-identical, the acceptance rate is
+    // positive, and the drafted/accepted/rejected counters are
+    // consistent — the CI smoke for the speculation path.
+    let speculate_k = args.usize_flag("speculate", 0)?;
+    // --draft-frac F: removal fraction for the drafter's cuts (same
+    // semantics as --admit fractions); default reuses the smallest
+    // admitted variant as the drafter.
+    let draft_frac: Option<f64> = args.opt_f64_flag("draft-frac")?;
     // --admit F1,F2,…: extra budget fractions carved at runtime.
     let admit_fracs: Vec<f64> = match args.flag("admit") {
         Some(list) => list.split(',')
@@ -346,44 +357,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_requests
     };
 
-    let (req_tx, req_rx) = std::sync::mpsc::channel();
-    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    // Deterministic request schedule, precomputed so the --speculate
+    // comparison can replay the *identical* traffic: (id, prompt,
+    // max_new, budget) per request.
     let vocab = cfg.vocab as u64;
-    let producer = std::thread::spawn(move || {
+    let schedule: Vec<(u64, Vec<u32>, usize, usize)> = {
         let mut rng = salaad::util::Rng::new(42);
-        for i in 0..n_requests as u64 {
-            // Mixed-lens/burst traffic varies the prompt length so
-            // requests routed to the same variant land in one ragged
-            // pack; plain traffic keeps the original fixed length.
-            let plen = if mixed_lens || burst {
-                4 + (i as usize * 5) % 23
-            } else {
-                12
-            };
-            // Burst traffic also staggers generation lengths, so rows
-            // retire at different decode steps and later requests
-            // enter the freed slots while packmates are mid-flight.
-            let max_new = if burst {
-                2 + (i as usize * 7) % 15
-            } else {
-                4
-            };
-            let prompt: Vec<u32> = (0..plen)
-                .map(|_| rng.next_below(vocab) as u32)
-                .collect();
-            let budget = budgets[(i as usize) % budgets.len()];
-            req_tx.send(Request::new(i, prompt, max_new, budget))
+        (0..n_requests as u64)
+            .map(|i| {
+                // Mixed-lens/burst traffic varies the prompt length so
+                // requests routed to the same variant land in one
+                // ragged pack; plain traffic keeps the original fixed
+                // length.
+                let plen = if mixed_lens || burst {
+                    4 + (i as usize * 5) % 23
+                } else {
+                    12
+                };
+                // Burst traffic also staggers generation lengths, so
+                // rows retire at different decode steps and later
+                // requests enter the freed slots while packmates are
+                // mid-flight.
+                let max_new = if burst {
+                    2 + (i as usize * 7) % 15
+                } else {
+                    4
+                };
+                let prompt: Vec<u32> = (0..plen)
+                    .map(|_| rng.next_below(vocab) as u32)
+                    .collect();
+                (i, prompt, max_new, budgets[(i as usize) % budgets.len()])
+            })
+            .collect()
+    };
+    // Every request is already in the channel when the batcher starts,
+    // so batch composition (and the --mixed-lens packing assertion
+    // below) is deterministic instead of racing the 10 ms batch
+    // deadline on a loaded box.
+    let send_all = |tx: &std::sync::mpsc::Sender<Request>| {
+        for (id, prompt, max_new, budget) in &schedule {
+            tx.send(Request::new(*id, prompt.clone(), *max_new,
+                                 *budget))
                 .unwrap();
         }
-    });
-    // Drain the producer before serving: every request is already in
-    // the channel when the batcher starts, so batch composition (and
-    // the --mixed-lens packing assertion below) is deterministic
-    // instead of racing the 10 ms batch deadline on a loaded box.
-    producer.join().unwrap();
+    };
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    send_all(&req_tx);
+    drop(req_tx);
     server.run(req_rx, resp_tx)?;
     let mut lat = Vec::new();
     let mut n_resp = 0usize;
+    let mut tokens_by_id = std::collections::BTreeMap::new();
     for r in resp_rx.iter() {
         println!("req {:>3} served by {:>8}-param variant in {:.1} ms \
                   (queued {:.1} ms){}: {:?}",
@@ -391,6 +416,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  if r.over_budget { " OVER BUDGET" } else { "" },
                  r.tokens);
         lat.push(r.latency_ms);
+        tokens_by_id.insert(r.id, r.tokens);
         n_resp += 1;
     }
     lat.sort_by(f64::total_cmp);
@@ -494,6 +520,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
                   {}/{} blocks, queue-wait p99 {:.1} ms",
                  s.admitted_mid_decode, s.arena_blocks_high_water,
                  s.arena_blocks_contiguous, s.queue_wait_pct(0.99));
+    }
+    if speculate_k > 0 && rt.supports_incremental() {
+        // Re-serve the identical schedule with self-speculative
+        // decoding and gate hard: (a) every request's tokens must be
+        // identical to the plain run above (greedy verification makes
+        // drafting invisible to the output), (b) some drafts must have
+        // been accepted, (c) the counters must balance.
+        server.enable_speculation(speculate_k, draft_frac)?;
+        let drafter_params = server.speculation()
+            .map(|sp| sp.drafter.params_count)
+            .unwrap_or(0);
+        eprintln!("re-serving the schedule speculatively (k = \
+                   {speculate_k}, {drafter_params}-param drafter)…");
+        let (req_tx, req_rx) = std::sync::mpsc::channel();
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        send_all(&req_tx);
+        drop(req_tx);
+        server.run(req_rx, resp_tx)?;
+        let mut n_spec = 0usize;
+        for r in resp_rx.iter() {
+            let baseline = tokens_by_id.get(&r.id);
+            anyhow::ensure!(
+                baseline == Some(&r.tokens),
+                "speculative decode diverged on request {}: {:?} vs \
+                 plain {:?} — greedy verification must be \
+                 token-identical",
+                r.id, r.tokens, baseline);
+            n_spec += 1;
+        }
+        anyhow::ensure!(n_spec == n_requests,
+                        "speculative run served {n_spec}/{n_requests} \
+                         requests");
+        let s = &server.stats;
+        println!("speculation: {} drafted, {} accepted, {} rejected, \
+                  {} rolled back over {} rounds (acceptance {:.1}%), \
+                  spec latency p50 {:.1} ms p99 {:.1} ms",
+                 s.spec.drafted, s.spec.accepted, s.spec.rejected,
+                 s.spec.rollback_tokens, s.spec.rounds,
+                 100.0 * s.acceptance_rate(),
+                 s.spec_latency_pct(0.5), s.spec_latency_pct(0.99));
+        anyhow::ensure!(s.spec.drafted > 0 && s.acceptance_rate() > 0.0,
+                        "speculation drafted {} tokens with acceptance \
+                         rate {} — the drafter never helped",
+                        s.spec.drafted, s.acceptance_rate());
+        anyhow::ensure!(s.spec.consistent(),
+                        "speculation counters inconsistent: {} drafted \
+                         != {} accepted + {} rejected",
+                        s.spec.drafted, s.spec.accepted,
+                        s.spec.rejected);
+        anyhow::ensure!(s.spec_latency_ms.len() == n_requests,
+                        "speculative latency samples incomplete: {} \
+                         for {n_requests} requests",
+                        s.spec_latency_ms.len());
+        println!("speculate OK: {n_spec} requests token-identical to \
+                  the plain run, zero extra weight bytes for the \
+                  drafter");
+    } else if speculate_k > 0 {
+        eprintln!("backend `{}` has no incremental decoding; \
+                   --speculate ignored", rt.backend_name());
     }
     println!("serve OK: {n_resp}/{n_requests} responses, {} budgets \
               served zero-copy from one shared factor store",

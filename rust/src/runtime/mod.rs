@@ -435,6 +435,29 @@ pub trait Backend {
         bail!("backend `{}` does not support incremental decoding",
               self.name())
     }
+
+    /// Append `new_lens[b]` tokens to cache row `slots[b]` in one
+    /// multi-token pass — the **verify step** of self-speculative
+    /// decoding. Unlike [`Self::prefill_into`] the target rows may
+    /// already hold positions: appends start at each row's current
+    /// length. `tokens` is a row-major `slots.len() × t_new` buffer
+    /// with each row's real tokens right-aligned (`t_new −
+    /// new_lens[b]` leading pad slots, never read); the returned
+    /// logits cover every buffer position (`(slots.len()·t_new,
+    /// vocab)`, pad rows all-zero), so the caller reads one next-token
+    /// distribution per appended position. Per-row/per-position
+    /// arithmetic is independent, making a k-token pass bit-identical
+    /// to k sequential [`Self::decode_rows`] steps of the same tokens
+    /// — the property that keeps speculative greedy decode
+    /// token-identical to non-speculative decode.
+    fn extend_rows(&self, cfg: &ModelConfig, params: &ModelParams,
+                   cache: &mut KvCache, tokens: &[i32],
+                   new_lens: &[usize], slots: &[usize])
+                   -> Result<Tensor> {
+        let _ = (cfg, params, cache, tokens, new_lens, slots);
+        bail!("backend `{}` does not support incremental decoding",
+              self.name())
+    }
 }
 
 /// Backend + config registry: the object the rest of the crate holds.
@@ -596,6 +619,16 @@ impl Runtime {
                        cache: &mut KvCache, last: &[i32],
                        slots: &[usize]) -> Result<Tensor> {
         self.backend.decode_rows(cfg, params, cache, last, slots)
+    }
+
+    /// Ragged multi-token append to possibly non-empty cache rows —
+    /// the speculative verify pass. See [`Backend::extend_rows`].
+    pub fn extend_rows(&self, cfg: &ModelConfig, params: &ModelParams,
+                       cache: &mut KvCache, tokens: &[i32],
+                       new_lens: &[usize], slots: &[usize])
+                       -> Result<Tensor> {
+        self.backend.extend_rows(cfg, params, cache, tokens, new_lens,
+                                 slots)
     }
 }
 

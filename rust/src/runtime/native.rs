@@ -134,6 +134,29 @@ impl Backend for NativeBackend {
                       Some(active.as_slice()), Some(slots))
     }
 
+    fn extend_rows(&self, cfg: &ModelConfig, params: &ModelParams,
+                   cache: &mut KvCache, tokens: &[i32],
+                   new_lens: &[usize], slots: &[usize])
+                   -> Result<Tensor> {
+        ensure!(!slots.is_empty(), "extend_rows called with no rows");
+        ensure!(new_lens.len() == slots.len(),
+                "extend_rows expects one length per slot ({} != {})",
+                new_lens.len(), slots.len());
+        ensure!(tokens.len() % slots.len() == 0,
+                "token buffer {} not divisible into {} rows",
+                tokens.len(), slots.len());
+        ensure!(new_lens.iter().any(|&l| l > 0),
+                "extend_rows called with every row empty");
+        // Slot distinctness/range, per-row capacity and token-range
+        // checks happen inside forward_model; unlike prefill_into the
+        // target rows may already hold positions — appends start at
+        // each row's current length, which is exactly the multi-token
+        // verify step speculative decoding needs.
+        let mv = resolve_model(cfg, params)?;
+        forward_model(cfg, &mv, cache, tokens, slots.len(),
+                      Some(new_lens), Some(slots))
+    }
+
     fn decode_step(&self, cfg: &ModelConfig, params: &ModelParams,
                    cache: &mut KvCache, last: &[i32]) -> Result<Tensor> {
         ensure!(last.len() == cache.rows(),
@@ -859,6 +882,33 @@ impl KvCache {
         crate::debug_invariant!(
             self.check_invariants().is_ok(),
             "paged arena corrupted after free_row({b}): {:?}",
+            self.check_invariants().err());
+    }
+
+    /// Roll row `b` back to `new_len` filled positions — the KV
+    /// rollback of self-speculative decoding: after a verify pass
+    /// rejects a draft suffix, the appended positions past the last
+    /// accepted token are discarded so the row's cache is exactly what
+    /// a never-drafted decode would hold. Blocks past
+    /// `⌈new_len/block_tokens⌉` return to the free list; stale values
+    /// inside the kept tail block are harmless under the arena's
+    /// recycling contract (every readable slot is overwritten at
+    /// append time before `lens` advances past it — see `free`).
+    /// `new_len` at or above the current length, or an out-of-range
+    /// row, is a no-op — rollback sits on the serving path and must
+    /// not panic.
+    pub fn truncate_row(&mut self, b: usize, new_len: usize) {
+        if b >= self.rows || new_len >= self.lens[b] {
+            return;
+        }
+        let keep = new_len.div_ceil(self.bsz).min(self.tables[b].len());
+        let surplus = self.tables[b].split_off(keep);
+        self.free.extend(surplus);
+        self.lens[b] = new_len;
+        crate::debug_invariant!(
+            self.check_invariants().is_ok(),
+            "paged arena corrupted after truncate_row({b}, {new_len}): \
+             {:?}",
             self.check_invariants().err());
     }
 

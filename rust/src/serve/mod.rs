@@ -30,6 +30,16 @@
 //! request-latency percentiles plus arena occupancy, so the
 //! tail-latency win is measured rather than asserted.
 //!
+//! With [`Server::enable_speculation`] the scheduler decodes
+//! **self-speculatively** ([`speculate`]): a cheap low-cut drafter
+//! view — prefix cuts over the *same* shared master stores, zero
+//! extra weight bytes — proposes k tokens per round and the routed
+//! variant verifies them in one batched multi-token pass, accepting
+//! the longest greedy-matching prefix and rolling both KV arenas
+//! back past the first mismatch. Output tokens are unchanged
+//! (token-identical to never drafting); only the master pass count
+//! and the [`ServeStats::spec`] counters move.
+//!
 //! Threading: the PJRT backend is not `Send` (and the native backend
 //! parallelizes internally), so the server runs on its owner thread
 //! and talks to clients over std::sync::mpsc channels (the offline
@@ -93,8 +103,10 @@
 pub mod request;
 pub mod batcher;
 pub mod server;
+pub mod speculate;
 
 pub use request::{Request, Response};
 pub use batcher::Batcher;
 pub use server::{argmax_logit, Server, ServerOptions, ServeStats,
-                 VariantSpec, BUILTIN_BUDGET_FRACS};
+                 Speculation, VariantSpec, BUILTIN_BUDGET_FRACS};
+pub use speculate::{spec_round, SpecCounters, SpecDecode, SpecRow};

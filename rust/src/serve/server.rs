@@ -39,10 +39,11 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::batcher::Batcher;
 use super::request::{Request, Response};
+use super::speculate::{spec_round, SpecCounters, SpecDecode, SpecRow};
 use crate::config::ModelConfig;
 use crate::runtime::{KvCache, ModelParams, PackedPrompts, ParamValue,
                      Runtime};
@@ -215,6 +216,14 @@ pub struct ServeStats {
     /// reserved up front (`slots · ⌈seq_len/block⌉`) — the bound the
     /// serve smoke keeps the high-water mark strictly under.
     pub arena_blocks_contiguous: usize,
+    /// Self-speculative decoding counters (drafted / accepted /
+    /// rejected / rolled-back tokens and verify rounds); all zero
+    /// unless [`Server::enable_speculation`] was on while serving.
+    pub spec: SpecCounters,
+    /// Per-request serving latency in ms for requests decoded while
+    /// speculation was enabled (a subset of
+    /// [`Self::decode_latency_ms`]). Feed to [`Self::spec_latency_pct`].
+    pub spec_latency_ms: Vec<f64>,
 }
 
 /// Rounded-index percentile of `samples` at `p ∈ [0, 1]`: sort and
@@ -255,6 +264,19 @@ impl ServeStats {
     pub fn decode_latency_pct(&self, p: f64) -> f64 {
         percentile(&self.decode_latency_ms, p)
     }
+
+    /// Fraction of drafted tokens the master accepted; 0.0 when no
+    /// speculative decoding happened (never NaN — see
+    /// [`SpecCounters::acceptance_rate`]).
+    pub fn acceptance_rate(&self) -> f64 {
+        self.spec.acceptance_rate()
+    }
+
+    /// Speculative-request latency percentile in ms (`p` in 0..=1);
+    /// 0.0 when no request was served speculatively.
+    pub fn spec_latency_pct(&self, p: f64) -> f64 {
+        percentile(&self.spec_latency_ms, p)
+    }
 }
 
 /// Budget-spectrum serving engine: one set of shared master factor
@@ -290,12 +312,28 @@ pub struct Server<'a> {
     /// runtime [`Self::admit_budget`] calls in call order — see the
     /// dedup regression test.
     pub variants: Vec<VariantSpec>,
+    /// Self-speculative decoding state; `None` (the default) decodes
+    /// one token per row per step. See [`Self::enable_speculation`].
+    speculate: Option<Speculation>,
     batcher: Batcher,
     /// Total requests answered over this server's lifetime.
     pub served: u64,
     /// Packing + spectrum counters across every batch this server has
     /// run.
     pub stats: ServeStats,
+}
+
+/// Enabled self-speculative decoding: the draft depth plus the carved
+/// drafter variant. The drafter is an ordinary [`VariantSpec`] — prefix
+/// views over the *same* shared master stores as every serving variant,
+/// so enabling speculation adds no weight memory, only the drafter's
+/// small KV arena at serve time.
+pub struct Speculation {
+    /// Draft tokens proposed per verify round (k ≥ 1).
+    pub k: usize,
+    /// The drafter: a low-cut zero-copy variant sharing the master
+    /// factor stores.
+    pub drafter: VariantSpec,
 }
 
 /// NaN-safe greedy argmax over one logit row. `total_cmp` gives a total
@@ -352,6 +390,7 @@ impl<'a> Server<'a> {
             kappa: opts.kappa,
             block_tokens: opts.block_tokens,
             variants: Vec::new(),
+            speculate: None,
             batcher: Batcher::new(opts.max_batch, opts.max_wait),
             served: 0,
             stats: ServeStats::default(),
@@ -408,6 +447,70 @@ impl<'a> Server<'a> {
         self.variants.remove(vi);
         self.refresh_byte_stats();
         Ok(())
+    }
+
+    /// Assemble a zero-copy variant from explicit per-block cuts
+    /// (aligned with [`Self::masters`]), without admitting it to the
+    /// serving spectrum — the public face of the internal carve used
+    /// by [`Self::admit_budget`], here so drafters (including
+    /// degenerate rank-0/nnz-0 edges) can be built for speculation and
+    /// its tests.
+    pub fn carve_variant(&self, cuts: Vec<BlockCuts>)
+                         -> Result<VariantSpec> {
+        self.variant_from_cuts(cuts)
+    }
+
+    /// Carve the speculation drafter: with `draft_frac = Some(f)` the
+    /// cuts come from an HPA plan removing fraction `f` of the
+    /// removable pool (same semantics as [`Self::admit_budget`]),
+    /// nested under the smallest admitted variant so the drafter never
+    /// out-ranks any verifier it drafts for; with `None` the smallest
+    /// admitted variant's own cuts are reused (the cheapest capacity
+    /// point already serving traffic). Either way the result is prefix
+    /// views over the shared master stores — zero extra weight bytes.
+    pub fn carve_drafter(&self, draft_frac: Option<f64>)
+                         -> Result<VariantSpec> {
+        ensure!(!self.variants.is_empty(), "no variants admitted");
+        let smallest = &self.variants[0];
+        let cuts = match draft_frac {
+            Some(f) => {
+                let mut c = hpa::draft_cuts(&self.shapes, self.kappa,
+                                            f)?;
+                for (ci, m) in c.iter_mut().zip(&smallest.cuts) {
+                    *ci = ci.nested_under(m);
+                }
+                c
+            }
+            None => smallest.cuts.clone(),
+        };
+        self.variant_from_cuts(cuts)
+    }
+
+    /// Turn on self-speculative decoding: every continuous-scheduler
+    /// decode iteration drafts `k` tokens per row with the carved
+    /// drafter (see [`Self::carve_drafter`]) and verifies them in one
+    /// batched master pass. Output tokens are unchanged — greedy
+    /// verification is token-identical to decoding without a drafter —
+    /// only the step count and [`ServeStats::spec`] counters move.
+    /// Ignored by the non-incremental fallback ([`Self::run`] routes
+    /// it to the batched loop, which cannot draft).
+    pub fn enable_speculation(&mut self, k: usize,
+                              draft_frac: Option<f64>) -> Result<()> {
+        ensure!(k >= 1, "speculation depth k must be >= 1, got {k}");
+        let drafter = self.carve_drafter(draft_frac)?;
+        self.speculate = Some(Speculation { k, drafter });
+        Ok(())
+    }
+
+    /// Turn self-speculative decoding back off (the drafter's view
+    /// metadata is freed; the shared stores are untouched).
+    pub fn disable_speculation(&mut self) {
+        self.speculate = None;
+    }
+
+    /// The active speculation state, if enabled.
+    pub fn speculation(&self) -> Option<&Speculation> {
+        self.speculate.as_ref()
     }
 
     /// The shared master stores (param index + store per SLR block)
@@ -604,6 +707,76 @@ impl<'a> Server<'a> {
         Ok(outs)
     }
 
+    /// Self-speculative KV-cached greedy decode of one prompt: the
+    /// `drafter` proposes up to `k` tokens per round from its own
+    /// 1-row paged cache, the `variant` (master) verifies them in one
+    /// multi-token [`crate::runtime::Runtime::extend_rows`] pass, the
+    /// longest agreeing prefix is accepted and both caches roll back
+    /// past the first mismatch (see [`super::speculate`]). Emitted
+    /// tokens are **bit-identical** to [`Self::generate_cached`] of the
+    /// master alone — every emitted token is a master argmax — so this
+    /// trades nothing but drafter FLOPs for fewer master passes.
+    /// Degenerate drafters (equal to the master, or rank-0/nnz-0
+    /// garbage) stay correct; they just draft perfectly or uselessly.
+    /// The prompt must be pre-clamped with [`Self::prepare_prompt`].
+    pub fn generate_speculative(&self, variant: &VariantSpec,
+                                drafter: &VariantSpec, prompt: &[u32],
+                                max_new: usize, k: usize)
+                                -> Result<SpecDecode> {
+        ensure!(k >= 1, "speculation depth k must be >= 1, got {k}");
+        let t = self.cfg.seq_len;
+        ensure!(!prompt.is_empty() && prompt.len() < t,
+                "prompt length {} outside 1..{t} (prepare_prompt?)",
+                prompt.len());
+        let mut counters = SpecCounters::default();
+        let allowed = max_new.min(t - prompt.len());
+        if allowed == 0 {
+            return Ok(SpecDecode { tokens: Vec::new(), counters });
+        }
+        let as_i32: Vec<i32> =
+            prompt.iter().map(|&x| x as i32).collect();
+        let pack = PackedPrompts::pack(&[as_i32])?;
+        let mut mcache = KvCache::with_block_size(&self.cfg, 1,
+                                                  self.block_tokens);
+        let mut dcache = KvCache::with_block_size(&self.cfg, 1,
+                                                  self.block_tokens);
+        let logits = self.rt.prefill_into(&self.cfg, &variant.params,
+                                          &mut mcache, &pack, &[0])?;
+        // The drafter prefills the same prompt into its own arena; its
+        // logits are irrelevant (the first token is the master's).
+        self.rt.prefill_into(&self.cfg, &drafter.params, &mut dcache,
+                             &pack, &[0])?;
+        let v = self.cfg.vocab;
+        let plen = prompt.len();
+        let first =
+            argmax_logit(&logits.data[(plen - 1) * v..plen * v]);
+        let mut out = vec![first as u32];
+        let mut last = first as i32;
+        while out.len() < allowed {
+            let rows = [SpecRow { slot: 0, last, emitted: out.len(),
+                                  allowed }];
+            let emitted = spec_round(self.rt, &self.cfg,
+                                     &variant.params, &drafter.params,
+                                     &mut mcache, &mut dcache, &rows,
+                                     k, &mut counters)?;
+            match emitted.first().and_then(|ts| ts.last().copied()) {
+                Some(m) => {
+                    out.extend_from_slice(&emitted[0]);
+                    last = m as i32;
+                }
+                None => {
+                    // A round that emits nothing cannot make progress;
+                    // spec_round's contract says this is unreachable,
+                    // but the serving path must not loop forever or
+                    // panic if it ever regresses.
+                    bail!("speculative round emitted no tokens at \
+                           {} of {allowed}", out.len());
+                }
+            }
+        }
+        Ok(SpecDecode { tokens: out, counters })
+    }
+
     /// Full-recompute greedy decode (the seed serving loop): re-pads
     /// the sequence to `seq_len` and runs a whole forward per emitted
     /// token. Kept as the fallback for backends without incremental
@@ -770,6 +943,13 @@ impl<'a> Server<'a> {
         let (t, v) = (self.cfg.seq_len, self.cfg.vocab);
         let mut cache = KvCache::with_block_size(&self.cfg, slots_n,
                                                  self.block_tokens);
+        // With speculation on, the drafter mirrors the master arena
+        // slot for slot (same geometry, its own pools) — the only
+        // marginal memory speculation costs, since the drafter's
+        // weights are views over the same shared stores.
+        let mut dcache: Option<KvCache> = self.speculate.is_some()
+            .then(|| KvCache::with_block_size(&self.cfg, slots_n,
+                                              self.block_tokens));
         self.stats.arena_block_tokens = cache.block_tokens();
         self.stats.arena_blocks_contiguous = cache.blocks_contiguous();
         let mut active: Vec<Option<ActiveRow>> =
@@ -879,6 +1059,17 @@ impl<'a> Server<'a> {
                     let logits = self.rt.prefill_into(
                         &self.cfg, &variant.params, &mut cache, &pack,
                         &slots)?;
+                    if let (Some(sp), Some(dc)) =
+                        (&self.speculate, dcache.as_mut())
+                    {
+                        // Mirror the prompt into the drafter arena at
+                        // the same slots; its prefill logits are
+                        // irrelevant (the first token below is the
+                        // master's, as in the non-speculative path).
+                        self.rt.prefill_into(&self.cfg,
+                                             &sp.drafter.params, dc,
+                                             &pack, &slots)?;
+                    }
                     for (j, (&i, &s)) in
                         idxs.iter().zip(&slots).enumerate()
                     {
@@ -931,6 +1122,52 @@ impl<'a> Server<'a> {
             }
             for (vi, rows) in &live {
                 let variant = &self.variants[*vi];
+                if let (Some(sp), Some(dc)) =
+                    (&self.speculate, dcache.as_mut())
+                {
+                    // Speculative step: draft up to k tokens per row
+                    // with the shared-store drafter, verify the whole
+                    // group in one ragged master pass, roll both
+                    // arenas back past the first mismatch. Emits ≥1
+                    // master token per row per iteration — admission
+                    // still interleaves every loop turn, just at a
+                    // coarser token granularity.
+                    let mut srows = Vec::with_capacity(rows.len());
+                    for &(s, l) in rows {
+                        // A seated row cannot vanish mid-step; if it
+                        // ever did, skip it rather than panic the
+                        // serving thread.
+                        let Some(r) = active[s].as_ref() else {
+                            crate::debug_invariant!(
+                                false,
+                                "decode slot {s} emptied mid-step");
+                            continue;
+                        };
+                        srows.push(SpecRow { slot: s, last: l,
+                                             emitted: r.out.len(),
+                                             allowed: r.allowed });
+                    }
+                    if srows.is_empty() {
+                        continue;
+                    }
+                    let emitted = spec_round(
+                        self.rt, &self.cfg, &variant.params,
+                        &sp.drafter.params, &mut cache, dc, &srows,
+                        sp.k, &mut self.stats.spec)?;
+                    self.stats.decode_steps += 1;
+                    for (sr, toks) in srows.iter().zip(&emitted) {
+                        let Some(row) = active[sr.slot].as_mut() else {
+                            continue;
+                        };
+                        row.out.extend_from_slice(toks);
+                        row.last = match toks.last() {
+                            Some(&m) if row.out.len() < row.allowed =>
+                                m as i32,
+                            _ => -1,
+                        };
+                    }
+                    continue;
+                }
                 let slots: Vec<usize> =
                     rows.iter().map(|&(s, _)| s).collect();
                 let last: Vec<i32> =
@@ -970,11 +1207,17 @@ impl<'a> Server<'a> {
                     continue;
                 };
                 cache.free_row(s);
+                if let Some(dc) = dcache.as_mut() {
+                    dc.free_row(s);
+                }
                 let latency_ms =
                     row.admitted_at.elapsed().as_secs_f64() * 1e3;
                 self.served += 1;
                 self.stats.queue_wait_ms.push(row.queue_ms);
                 self.stats.decode_latency_ms.push(latency_ms);
+                if self.speculate.is_some() {
+                    self.stats.spec_latency_ms.push(latency_ms);
+                }
                 let resp = Response {
                     id: row.id,
                     tokens: row.out,
@@ -1458,5 +1701,51 @@ mod tests {
                     v.resident_bytes(), server.shared_bytes(),
                     v.marginal_bytes());
         }
+    }
+
+    /// The percentile helper must be total on degenerate sample sets:
+    /// no samples → 0.0 (not a panic or NaN), one sample → that sample
+    /// at every p, and out-of-range p clamps instead of indexing out
+    /// of bounds.
+    #[test]
+    fn percentile_empty_and_single_sample_edges() {
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5,
+                       "single sample must dominate at p={p}");
+        }
+        // p outside [0, 1] clamps to the extremes.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], -0.5), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 7.0), 3.0);
+        // Unsorted input is sorted internally.
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 0.0), 1.0);
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 1.0), 3.0);
+    }
+
+    /// Acceptance-rate and spec-latency stats must be well-defined
+    /// (0.0, never NaN/panic) on a server that never speculated —
+    /// the state every plain run reports from.
+    #[test]
+    fn spec_stats_guard_division_by_zero() {
+        let zero = SpecCounters::default();
+        assert_eq!(zero.acceptance_rate(), 0.0);
+        assert!(zero.consistent(), "all-zero counters must balance");
+
+        let stats = ServeStats::default();
+        assert_eq!(stats.acceptance_rate(), 0.0,
+                   "no speculation must read as 0.0, not NaN");
+        assert_eq!(stats.spec_latency_pct(0.5), 0.0);
+        assert_eq!(stats.spec_latency_pct(0.99), 0.0);
+
+        // One accepted draft out of one is a 100% rate; the latency
+        // percentile with a single sample is that sample.
+        let mut c = SpecCounters::default();
+        c.drafted = 4;
+        c.accepted = 3;
+        c.rejected = 1;
+        assert!(c.consistent());
+        assert!((c.acceptance_rate() - 0.75).abs() < 1e-12);
     }
 }

@@ -1,0 +1,224 @@
+//! Self-speculative decoding over the budget spectrum: a cheap
+//! low-rank/low-nnz *drafter* view proposes k tokens per round and the
+//! full-capacity *master* verifies them in one batched multi-token
+//! pass, accepting the longest greedy-matching prefix and rolling both
+//! KV caches back past the first mismatch.
+//!
+//! Because PR 5 made every budget a `{rank_k, nnz_cut}` prefix view
+//! over one shared `Arc<FactorStore>`, the drafter costs **zero extra
+//! weight memory** — drafter and verifier read the same master store;
+//! only the drafter's small paged KV arena is marginal. No other
+//! system gets a free drafter this way.
+//!
+//! # The round, precisely
+//!
+//! One [`spec_round`] call covers a group of rows sharing one master
+//! variant. Per row, with `l` the last emitted token (not yet in
+//! either cache), `len0 = prompt_len + out_len − 1` the current length
+//! of *both* caches, and `k' = min(k, allowed − out_len) ≥ 1` the
+//! remaining draft budget:
+//!
+//! 1. **Draft** — k' drafter `decode_rows` steps feed
+//!    `l, d₁, …, d_{k'−1}` and emit `d₁ … d_{k'}`; the drafter cache
+//!    grows to `len0 + k'`.
+//! 2. **Verify** — ONE master [`crate::runtime::Runtime::extend_rows`]
+//!    pass feeds the same `[l, d₁, …, d_{k'−1}]` (ragged,
+//!    right-aligned across the group) and its position-j logits give
+//!    the master's own next tokens `m₁ … m_{k'}`.
+//! 3. **Accept** — with `j*` the first j where `d_j ≠ m_j` (k'+1 if
+//!    none), emit `m₁ … m_e` for `e = min(j*, k')`. Every emitted
+//!    token is a *master* argmax, which is why speculative output is
+//!    token-identical to never having drafted.
+//! 4. **Rollback** — truncate both caches to `len0 + e`
+//!    ([`crate::runtime::KvCache::truncate_row`]); the kept positions
+//!    hold `l, d₁ … d_{e−1} = l, m₁ … m_{e−1}` (matches by
+//!    construction), restoring the invariant
+//!    `cache_len = prompt_len + out_len − 1` with `m_e` the next `l`.
+//!
+//! Every round emits at least one token, so decoding terminates; the
+//! counters satisfy `drafted == accepted + rejected` and
+//! `rollback = rejected − 1` on mismatch rounds (`0` on full-accept
+//! rounds), which the `--speculate` CI smoke asserts.
+
+use anyhow::{ensure, Result};
+
+use super::server::argmax_logit;
+use crate::config::ModelConfig;
+use crate::runtime::{KvCache, ModelParams, Runtime};
+
+/// Lifetime counters of the speculative decoder, embedded in
+/// [`super::ServeStats`]. All token-granular: one drafted token is
+/// either accepted (the master agreed) or rejected (the master
+/// overrode it), never both, so `drafted == accepted + rejected`
+/// always — [`Self::consistent`] checks it and the CI smoke gates on
+/// it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecCounters {
+    /// Draft tokens proposed by the drafter across every round.
+    pub drafted: u64,
+    /// Draft tokens the master's verify pass agreed with.
+    pub accepted: u64,
+    /// Draft tokens the master overrode (the first mismatch of a round
+    /// plus the speculated suffix behind it).
+    pub rejected: u64,
+    /// KV positions rolled back across both caches (`rejected − 1` per
+    /// mismatch round: the mismatch position itself is *kept*, rewritten
+    /// as the master's token).
+    pub rollback_tokens: u64,
+    /// Verify rounds executed (one batched `extend_rows` pass each).
+    pub rounds: u64,
+}
+
+impl SpecCounters {
+    /// Fraction of drafted tokens the master accepted; 0.0 when
+    /// nothing was drafted (the divide-by-zero guard the stats
+    /// surface needs — a server with speculation enabled but no
+    /// traffic must report 0, not NaN).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Bookkeeping identity: every drafted token is either accepted or
+    /// rejected.
+    pub fn consistent(&self) -> bool {
+        self.drafted == self.accepted + self.rejected
+    }
+
+    /// Accumulate another counter set (e.g. per-request counters into
+    /// server-lifetime stats).
+    pub fn merge(&mut self, other: &SpecCounters) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.rejected += other.rejected;
+        self.rollback_tokens += other.rollback_tokens;
+        self.rounds += other.rounds;
+    }
+}
+
+/// A standalone speculative decode's result: the emitted tokens (bit-
+/// identical to the master decoding alone) plus the round counters.
+#[derive(Clone, Debug)]
+pub struct SpecDecode {
+    /// Greedy output tokens — token-identical to
+    /// `Server::generate_cached` of the master variant alone.
+    pub tokens: Vec<u32>,
+    /// Draft/accept/rollback accounting for this request.
+    pub counters: SpecCounters,
+}
+
+/// One in-flight row's view of a verify round. `slot` indexes the
+/// same row in *both* the master and drafter arenas (the scheduler
+/// keeps them in lockstep); `last` is the newest emitted token (not
+/// yet appended to either cache); `emitted`/`allowed` are the row's
+/// output progress and total budget.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecRow {
+    /// Arena row in both caches.
+    pub slot: usize,
+    /// Last emitted token, to be fed first.
+    pub last: i32,
+    /// Tokens emitted so far (`out.len()`).
+    pub emitted: usize,
+    /// Total token budget (`min(max_new, seq_len − prompt_len)`).
+    pub allowed: usize,
+}
+
+/// One draft→verify→accept/rollback round for a group of rows sharing
+/// one master variant (see the module docs for the exact indexing).
+/// Returns the tokens emitted per row this round — between 1 and
+/// `min(k, allowed − emitted)` each, all master argmaxes. Both caches
+/// are left truncated to exactly the never-drafted state for the new
+/// output length. Counters accumulate into `counters`.
+///
+/// Every row must be active: `last ≥ 0` and `emitted < allowed`.
+pub fn spec_round(rt: &Runtime, cfg: &ModelConfig, master: &ModelParams,
+                  drafter: &ModelParams, mcache: &mut KvCache,
+                  dcache: &mut KvCache, rows: &[SpecRow], k: usize,
+                  counters: &mut SpecCounters)
+                  -> Result<Vec<Vec<u32>>> {
+    ensure!(k >= 1, "speculation depth k must be >= 1, got {k}");
+    ensure!(!rows.is_empty(), "spec_round called with no rows");
+    let n = rows.len();
+    let mut kp = Vec::with_capacity(n);
+    for r in rows {
+        ensure!(r.last >= 0, "row at slot {} fed a finished sentinel",
+                r.slot);
+        ensure!(r.emitted < r.allowed,
+                "row at slot {} has no remaining budget ({} of {})",
+                r.slot, r.emitted, r.allowed);
+        kp.push(k.min(r.allowed - r.emitted));
+    }
+    let kmax = kp.iter().copied().max().unwrap_or(0);
+
+    // ---- draft: k' sequential drafter steps per row ----------------
+    // Rows whose draft budget is exhausted ride the pack as idle
+    // sentinels, exactly like finished rows of an ordinary decode.
+    let slots: Vec<usize> = rows.iter().map(|r| r.slot).collect();
+    let mut feed: Vec<i32> = rows.iter().map(|r| r.last).collect();
+    let mut drafts: Vec<Vec<i32>> =
+        kp.iter().map(|&b| Vec::with_capacity(b)).collect();
+    for j in 0..kmax {
+        let step: Vec<i32> = (0..n)
+            .map(|b| if j < kp[b] { feed[b] } else { -1 })
+            .collect();
+        let logits = rt.decode_rows(cfg, drafter, dcache, &step,
+                                    &slots)?;
+        for b in 0..n {
+            if j < kp[b] {
+                let d = argmax_logit(logits.row(b)) as i32;
+                drafts[b].push(d);
+                feed[b] = d;
+            }
+        }
+    }
+
+    // ---- verify: one ragged multi-token master pass ----------------
+    // Row b feeds [l, d₁ … d_{k'−1}] right-aligned in a kmax-wide
+    // buffer; the logit after fed position j is the master's m_{j+1}.
+    let v = cfg.vocab;
+    let mut toks = vec![0i32; n * kmax];
+    for b in 0..n {
+        let off = kmax - kp[b];
+        toks[b * kmax + off] = rows[b].last;
+        for j in 1..kp[b] {
+            toks[b * kmax + off + j] = drafts[b][j - 1];
+        }
+    }
+    let logits = rt.extend_rows(cfg, master, mcache, &toks, &kp,
+                                &slots)?;
+    counters.rounds += 1;
+
+    // ---- accept + rollback -----------------------------------------
+    let mut out = Vec::with_capacity(n);
+    for b in 0..n {
+        let off = kmax - kp[b];
+        let masters: Vec<u32> = (0..kp[b])
+            .map(|j| {
+                let p = b * kmax + off + j;
+                argmax_logit(&logits.data[p * v..(p + 1) * v]) as u32
+            })
+            .collect();
+        // Leading agreement between the drafter's d_j and the
+        // master's m_j; the first disagreement caps the emit.
+        let matched = drafts[b].iter().zip(&masters)
+            .take_while(|(d, m)| **d == **m as i32)
+            .count();
+        let e = (matched + 1).min(kp[b]);
+        counters.drafted += kp[b] as u64;
+        counters.accepted += matched as u64;
+        counters.rejected += (kp[b] - matched) as u64;
+        counters.rollback_tokens += (kp[b] - e) as u64;
+        // Both caches sit at len0 + k' right now; the never-drafted
+        // state for the new output length is len0 + e.
+        let s = rows[b].slot;
+        let target = mcache.row_len(s) - (kp[b] - e);
+        mcache.truncate_row(s, target);
+        dcache.truncate_row(s, target);
+        out.push(masters[..e].to_vec());
+    }
+    Ok(out)
+}

@@ -89,6 +89,30 @@ impl BlockCuts {
     pub fn param_count(&self, shape: &BlockShape) -> usize {
         slr_param_count(self.rank_k, shape.n, shape.m, self.nnz_cut)
     }
+
+    /// Component-wise minimum — nests `self` under `other`. Used by
+    /// the self-speculative drafter so its cuts are always a prefix of
+    /// the variant they draft for (a drafter can never out-rank its
+    /// verifier).
+    pub fn nested_under(&self, other: &BlockCuts) -> Self {
+        BlockCuts { rank_k: self.rank_k.min(other.rank_k),
+                    nnz_cut: self.nnz_cut.min(other.nnz_cut) }
+    }
+}
+
+/// Drafter cuts for self-speculative decoding: plan the removal of
+/// `frac` of the removable pool at mixing κ (same semantics as
+/// `Server::admit_budget` — larger `frac`, cheaper drafter) and return
+/// the per-block prefix cuts. Because the cuts are prefixes of the
+/// same magnitude-ordered master store the full model serves from,
+/// the drafter costs **zero extra weight memory** — only its small KV
+/// cache is marginal. `frac` is clamped to `[0, 0.95]` exactly like
+/// `admit_budget`, so a degenerate `frac = 0` still yields a working
+/// (if useless — it *is* the master) drafter.
+pub fn draft_cuts(shapes: &[BlockShape], kappa: f64, frac: f64)
+                  -> Result<Vec<BlockCuts>> {
+    let plan_ = plan_frac_shapes(shapes, kappa, frac.clamp(0.0, 0.95))?;
+    Ok(cuts(shapes, &plan_))
 }
 
 /// Accounting of an applied plan.

@@ -17,7 +17,7 @@ use salaad::config::ModelConfig;
 use salaad::runtime::{ModelParams, PackedPrompts, ParamValue, Runtime};
 use salaad::serve::{argmax_logit, Request, Server, ServerOptions,
                     BUILTIN_BUDGET_FRACS};
-use salaad::slr::{FactoredLinear, SlrBlock};
+use salaad::slr::{BlockCuts, FactoredLinear, SlrBlock};
 
 /// Synthetic developed SLR blocks over the selected 2-D parameters,
 /// paired with their indices into `cfg.params`.
@@ -215,6 +215,100 @@ fn admit_budget_round_trips_on_a_live_server() {
                                       &tokens, 1).unwrap();
     let want = rt.forward_logits_model(&cfg, &mat, &tokens, 1).unwrap();
     assert_bits_equal(&got, &want, "admitted variant logits");
+}
+
+/// Self-speculative decoding across the whole budget spectrum: every
+/// (verifier variant × drafter cut) pairing — the default drafter, one
+/// per builtin budget fraction, the degenerate drafter == verifier,
+/// and the rank-0/nnz-0 edge — must emit tokens identical to the
+/// verifier decoding alone, at nano and micro. The drafters are all
+/// prefix views over the same shared master stores, so this is also
+/// the zero-extra-weights claim exercised end to end.
+#[test]
+fn speculative_decode_matches_solo_across_the_budget_spectrum() {
+    let rt = Runtime::native();
+    for scale in ["nano", "micro"] {
+        let cfg = rt.model_config(scale).unwrap();
+        let (blocks, idx) = synthetic_blocks(&cfg, 8, 0.05);
+        let params = cfg.init_params(2);
+        let server = Server::new(&rt, cfg.clone(), &params, &blocks,
+                                 &idx, BUILTIN_BUDGET_FRACS,
+                                 ServerOptions::default())
+            .unwrap();
+        let raw: Vec<u32> = fixed_tokens(&cfg, 8).iter()
+            .map(|&t| t as u32)
+            .collect();
+        let prompt = server.prepare_prompt(&raw, 10);
+
+        // Drafter pool: the default (smallest admitted variant's own
+        // cuts) plus one drafter per builtin budget fraction — every
+        // one a zero-copy view set sharing the verifier's masters.
+        let mut drafters = vec![("default".to_string(),
+                                 server.carve_drafter(None).unwrap())];
+        for &f in BUILTIN_BUDGET_FRACS {
+            drafters.push((format!("frac{f}"),
+                           server.carve_drafter(Some(f)).unwrap()));
+        }
+        for (_, d) in &drafters {
+            assert!(d.marginal_bytes() * 10
+                        < server.master_store_bytes(),
+                    "{scale}: drafter is not metadata-scale");
+        }
+
+        for variant in &server.variants {
+            let solo = server
+                .generate_cached(variant, &[prompt.clone()], &[10])
+                .unwrap();
+            for (label, drafter) in &drafters {
+                for k in [2usize, 5] {
+                    let spec = server
+                        .generate_speculative(variant, drafter,
+                                              &prompt, 10, k)
+                        .unwrap();
+                    assert_eq!(
+                        spec.tokens, solo[0],
+                        "{scale} variant {} drafter {label} k={k}: \
+                         speculation changed the tokens",
+                        variant.params_count);
+                    assert!(spec.counters.consistent(),
+                            "{scale} drafter {label}: counters do not \
+                             balance");
+                    assert!(spec.counters.drafted > 0);
+                }
+            }
+        }
+
+        if scale != "nano" {
+            continue;
+        }
+        // Degenerate edges, pinned at nano. Drafter == verifier: the
+        // verify pass must accept every draft (a single reject would
+        // mean extend_rows diverged bit-wise from decode_rows).
+        let full = server.variants.last().unwrap();
+        let twin = server.carve_variant(full.cuts.clone()).unwrap();
+        let spec = server
+            .generate_speculative(full, &twin, &prompt, 10, 4)
+            .unwrap();
+        let solo = server
+            .generate_cached(full, &[prompt.clone()], &[10])
+            .unwrap();
+        assert_eq!(spec.tokens, solo[0]);
+        assert_eq!(spec.counters.rejected, 0,
+                   "drafter == master must accept everything");
+        assert_eq!(spec.counters.rollback_tokens, 0);
+        // rank-0/nnz-0 drafter: the blocks vanish entirely; decoding
+        // must fall through gracefully (identity holds, no panic).
+        let zero = server
+            .carve_variant(vec![BlockCuts { rank_k: 0, nnz_cut: 0 };
+                                server.masters().len()])
+            .unwrap();
+        let spec = server
+            .generate_speculative(full, &zero, &prompt, 10, 4)
+            .unwrap();
+        assert_eq!(spec.tokens, solo[0],
+                   "rank-0/nnz-0 drafter changed the tokens");
+        assert!(spec.counters.consistent());
+    }
 }
 
 #[test]

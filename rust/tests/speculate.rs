@@ -1,0 +1,408 @@
+//! Self-speculative decoding: the token-identity and rollback gates.
+//!
+//! The whole feature rests on two properties, and this harness pins
+//! both end to end:
+//!
+//! - **Rollback is invisible.** Truncating a paged KV row after a
+//!   rejected draft must restore the arena's invariants *and* the
+//!   bits: re-decoding from the truncated state is bit-identical to
+//!   never having drafted (property-tested over random block sizes,
+//!   draft depths and mismatch positions).
+//! - **Speculation is invisible.** Greedy speculative decode emits
+//!   tokens identical to the master decoding alone — for random
+//!   prompts/budgets/k, for the degenerate drafter == master edge
+//!   (which must accept everything), for rank-0/nnz-0 garbage drafters
+//!   (which must reject and roll back, never panic), and at the server
+//!   level through the continuous scheduler with mid-decode admission.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use salaad::config::ModelConfig;
+use salaad::runtime::{KvCache, ModelParams, PackedPrompts, Runtime};
+use salaad::serve::{Request, Response, Server, ServerOptions};
+use salaad::slr::{BlockCuts, SlrBlock};
+use salaad::tensor::Tensor;
+use salaad::util::{prop, Rng};
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig::from_geometry("tiny", 32, 8, 1, 2, 16, 24, 2)
+}
+
+/// A tiny server over synthetic developed blocks (attention
+/// projections only), block_tokens 4 so every decode crosses block
+/// boundaries.
+fn tiny_server(rt: &Runtime, fracs: &[f64], max_batch: usize)
+               -> Server<'_> {
+    let cfg = tiny_cfg();
+    let params = cfg.init_params(0);
+    let mut blocks = Vec::new();
+    let mut idx = Vec::new();
+    for name in cfg.blocks(true, false) {
+        let shape = cfg.shape_of(&name).unwrap().to_vec();
+        blocks.push(SlrBlock::random(&name, shape[0], shape[1], 3,
+                                     0.1, 0));
+        idx.push(cfg.param_index(&name).unwrap());
+    }
+    Server::new(rt, cfg, &params, &blocks, &idx, fracs,
+                ServerOptions { max_batch,
+                                max_wait: Duration::from_millis(2),
+                                kappa: 0.7,
+                                block_tokens: 4 })
+        .unwrap()
+}
+
+fn assert_bits_equal(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape mismatch");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{what}: element {i} diverged ({x} vs {y})");
+    }
+}
+
+/// Pre-queue a deterministic schedule, drain the server, and return
+/// responses sorted by id.
+fn run_schedule(server: &mut Server,
+                schedule: &[(u64, Vec<u32>, usize, usize)])
+                -> Vec<Response> {
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    for (id, prompt, max_new, budget) in schedule {
+        req_tx.send(Request::new(*id, prompt.clone(), *max_new,
+                                 *budget))
+            .unwrap();
+    }
+    drop(req_tx);
+    server.run(req_rx, resp_tx).unwrap();
+    let mut got: Vec<Response> = resp_rx.iter().collect();
+    got.sort_by_key(|r| r.id);
+    got
+}
+
+/// The rollback primitive itself: after feeding a row k junk tokens
+/// (a rejected draft), `truncate_row` back to the pre-draft length
+/// must (a) keep the arena's block accounting invariants, (b) report
+/// the pre-draft length, and (c) make every subsequent decode step
+/// bit-identical to a run that never drafted — across random block
+/// sizes, prompt lengths, draft depths and positions.
+#[test]
+fn truncate_after_reject_restores_invariants_and_bits() {
+    prop::check("spec_truncate_restores_bits", 10, |rng| {
+        // `Runtime` holds a `Box<dyn Backend>` (not RefUnwindSafe), so
+        // everything is built inside the closure.
+        let rt = Runtime::native();
+        let cfg = tiny_cfg();
+        let params =
+            ModelParams::from_dense(&cfg.init_params(rng.next_below(1 << 20)));
+        let bsz = prop::dim(rng, 1, 8);
+        let plen = prop::dim(rng, 2, 6);
+        let n1 = prop::dim(rng, 1, 4); // decode steps before the draft
+        let k = prop::dim(rng, 1, 5);  // junk draft positions
+        let n2 = prop::dim(rng, 1, 5); // decode steps after rollback
+        // plen + n1 + k + n2 ≤ 20 < seq_len 24: never out of headroom.
+        let vocab = cfg.vocab as u64;
+        let prompt: Vec<i32> = (0..plen)
+            .map(|_| rng.next_below(vocab) as i32)
+            .collect();
+        // One shared token script so reference and subject feed
+        // identical inputs at every step.
+        let script: Vec<i32> = (0..n1 + n2)
+            .map(|_| rng.next_below(vocab) as i32)
+            .collect();
+        let junk: Vec<i32> = (0..k)
+            .map(|_| rng.next_below(vocab) as i32)
+            .collect();
+        let pack = PackedPrompts::equal(&prompt, 1).unwrap();
+
+        // Reference: never drafts.
+        let mut rcache = KvCache::with_block_size(&cfg, 1, bsz);
+        rt.prefill_into(&cfg, &params, &mut rcache, &pack, &[0])
+            .unwrap();
+        let ref_logits: Vec<Tensor> = script.iter()
+            .map(|&tok| rt.decode_rows(&cfg, &params, &mut rcache,
+                                       &[tok], &[0])
+                .unwrap())
+            .collect();
+
+        // Subject: same start, then a rejected k-token draft.
+        let mut cache = KvCache::with_block_size(&cfg, 1, bsz);
+        rt.prefill_into(&cfg, &params, &mut cache, &pack, &[0])
+            .unwrap();
+        for (j, &tok) in script[..n1].iter().enumerate() {
+            let got = rt.decode_rows(&cfg, &params, &mut cache, &[tok],
+                                     &[0])
+                .unwrap();
+            assert_bits_equal(&got, &ref_logits[j],
+                              &format!("pre-draft step {j}"));
+        }
+        let len_before = cache.row_len(0);
+        assert_eq!(len_before, plen + n1);
+        let blocks_before = cache.blocks_in_use();
+        for &tok in &junk {
+            rt.decode_rows(&cfg, &params, &mut cache, &[tok], &[0])
+                .unwrap();
+        }
+        assert_eq!(cache.row_len(0), len_before + k);
+
+        // Reject everything: roll back to the pre-draft state.
+        cache.truncate_row(0, len_before);
+        cache.check_invariants()
+            .unwrap_or_else(|e| panic!("arena invariants broken after \
+                                        truncate: {e}"));
+        assert_eq!(cache.row_len(0), len_before,
+                   "truncate_row did not restore the length");
+        assert!(cache.blocks_in_use() <= blocks_before + 1,
+                "truncate kept the draft's surplus blocks");
+
+        // Resuming must be bit-identical to never having drafted —
+        // including the steps that overwrite the junk's recycled
+        // positions.
+        for (j, &tok) in script[n1..].iter().enumerate() {
+            let got = rt.decode_rows(&cfg, &params, &mut cache, &[tok],
+                                     &[0])
+                .unwrap();
+            assert_bits_equal(&got, &ref_logits[n1 + j],
+                              &format!("post-rollback step {j}"));
+        }
+    });
+}
+
+/// Random prompts, budgets, drafter fractions and draft depths:
+/// speculative decode must emit exactly `generate_cached`'s tokens and
+/// keep its counters balanced.
+#[test]
+fn speculative_decode_is_token_identical_for_random_inputs() {
+    prop::check("speculative_token_identity", 8, |rng| {
+        let rt = Runtime::native();
+        let server = tiny_server(&rt, &[0.3, 0.6], 4);
+        let k = prop::dim(rng, 1, 6);
+        let frac = rng.next_range_f64(0.0, 0.9);
+        let drafter = server.carve_drafter(Some(frac)).unwrap();
+        let vi = rng.next_below(server.variants.len() as u64) as usize;
+        let variant = &server.variants[vi];
+        let max_new = prop::dim(rng, 1, 12);
+        let raw: Vec<u32> = (0..prop::dim(rng, 1, 10))
+            .map(|_| rng.next_below(32) as u32)
+            .collect();
+        let prompt = server.prepare_prompt(&raw, max_new);
+        let spec = server
+            .generate_speculative(variant, &drafter, &prompt, max_new,
+                                  k)
+            .unwrap();
+        let solo = server
+            .generate_cached(variant, &[prompt], &[max_new])
+            .unwrap();
+        assert_eq!(spec.tokens, solo[0],
+                   "speculation changed the tokens (k={k}, \
+                    frac={frac:.3}, variant {vi})");
+        assert!(spec.counters.consistent(),
+                "drafted {} != accepted {} + rejected {}",
+                spec.counters.drafted, spec.counters.accepted,
+                spec.counters.rejected);
+        assert!(spec.counters.drafted > 0);
+        assert!(spec.counters.rounds > 0);
+    });
+}
+
+/// Degenerate drafter == master: every draft is the master's own
+/// argmax, so the verify pass must accept everything — zero rejects,
+/// zero rollback. This pins the normative bit-identity between one
+/// multi-token `extend_rows` pass and k sequential `decode_rows`
+/// steps: a single rounding difference would surface as a reject.
+#[test]
+fn drafter_equal_to_master_accepts_every_draft() {
+    let rt = Runtime::native();
+    let server = tiny_server(&rt, &[0.5], 4);
+    let full = server.variants.last().unwrap();
+    let drafter = server.carve_variant(full.cuts.clone()).unwrap();
+    let prompt = server.prepare_prompt(&[3, 1, 4, 1, 5], 12);
+    let spec = server
+        .generate_speculative(full, &drafter, &prompt, 12, 4)
+        .unwrap();
+    let solo = server
+        .generate_cached(full, &[prompt], &[12])
+        .unwrap();
+    assert_eq!(spec.tokens, solo[0]);
+    assert_eq!(spec.tokens.len(), 12);
+    let c = spec.counters;
+    assert!(c.consistent());
+    assert_eq!(c.rejected, 0,
+               "a drafter identical to the master was rejected: \
+                extend_rows diverged from decode_rows");
+    assert_eq!(c.rollback_tokens, 0);
+    assert_eq!(c.accepted, c.drafted);
+    assert!(c.drafted > 0);
+    // Full acceptance means k+1 tokens per round (+1 for the prefill
+    // token): far fewer verify rounds than tokens.
+    assert!(c.rounds < spec.tokens.len() as u64);
+}
+
+/// Worst-case drafters must degrade gracefully, never corrupt output:
+/// a rank-0/nnz-0 drafter (its SLR blocks vanish entirely) and a
+/// drafter with a zeroed head (a constant context-independent
+/// prediction) both keep token identity; the constant drafter's
+/// mismatches exercise the reject-and-rollback path deterministically.
+#[test]
+fn garbage_drafters_force_rollback_without_breaking_identity() {
+    let rt = Runtime::native();
+    let server = tiny_server(&rt, &[0.5], 4);
+    let full = server.variants.last().unwrap();
+    let prompt = server.prepare_prompt(&[2, 7, 1, 8, 2, 8], 10);
+    let solo = server
+        .generate_cached(full, &[prompt.clone()], &[10])
+        .unwrap();
+
+    // Edge 1: all cuts zero — the cheapest view the spectrum can
+    // express. Must not panic, must not change tokens.
+    let zero_cuts =
+        vec![BlockCuts { rank_k: 0, nnz_cut: 0 };
+             server.masters().len()];
+    let zeroed = server.carve_variant(zero_cuts).unwrap();
+    let spec = server
+        .generate_speculative(full, &zeroed, &prompt, 10, 4)
+        .unwrap();
+    assert_eq!(spec.tokens, solo[0],
+               "rank-0/nnz-0 drafter changed the tokens");
+    assert!(spec.counters.consistent());
+
+    // Edge 2: zeroed drafter head — every logit row is all-equal, so
+    // the drafter predicts one fixed index regardless of context
+    // (`argmax_logit` is deterministic on ties). Unless the master
+    // emits exactly that token at every drafted position, the verify
+    // pass must reject at least once and roll both caches back;
+    // tokens still must not move.
+    let mut const_drafter = server.carve_variant(
+        server.variants.last().unwrap().cuts.clone())
+        .unwrap();
+    let hidx = tiny_cfg().param_index("lm_head").unwrap();
+    let hshape = tiny_cfg().shape_of("lm_head").unwrap().to_vec();
+    const_drafter.params.values[hidx] =
+        salaad::runtime::ParamValue::Dense(std::sync::Arc::new(
+            Tensor::zeros(&hshape)));
+    let spec = server
+        .generate_speculative(full, &const_drafter, &prompt, 10, 4)
+        .unwrap();
+    assert_eq!(spec.tokens, solo[0],
+               "constant drafter changed the tokens");
+    let c = spec.counters;
+    assert!(c.consistent());
+    // Position 0 comes from the prefill, so only tokens 1.. were ever
+    // draft-covered.
+    let const_tok =
+        salaad::serve::argmax_logit(&vec![0.0f32; 32]) as u32;
+    if solo[0][1..].iter().any(|&t| t != const_tok) {
+        assert!(c.rejected >= 1,
+                "a garbage drafter was never rejected");
+        assert!(c.acceptance_rate() < 1.0);
+    }
+}
+
+/// Server-level identity gate: the continuous scheduler with
+/// speculation enabled — drafter arena mirroring the master arena,
+/// group verify rounds, mid-decode admission interleaving — must
+/// deliver exactly the tokens of a plain run of the identical
+/// schedule.
+#[test]
+fn continuous_scheduler_speculation_is_token_invisible() {
+    let rt = Runtime::native();
+    let mut server = tiny_server(&rt, &[0.4, 0.7], 3);
+    // 10 mixed-everything requests over 3 slots: varied prompt
+    // lengths, staggered budgets (one long row pins its slot so later
+    // admissions are mid-decode), and budgets snapping to different
+    // variants so verify rounds run per variant group.
+    let mut rng = Rng::new(7);
+    let n_var = server.variants.len();
+    let schedule: Vec<(u64, Vec<u32>, usize, usize)> = (0..10u64)
+        .map(|i| {
+            let plen = 2 + (i as usize * 3) % 9;
+            let max_new = if i == 0 { 12 } else { 1 + (i as usize * 5) % 6 };
+            let prompt: Vec<u32> = (0..plen)
+                .map(|_| rng.next_below(32) as u32)
+                .collect();
+            let budget = if i % 3 == 0 { 0 } else {
+                server.variants[i as usize % n_var].params_count
+            };
+            (i, prompt, max_new, budget)
+        })
+        .collect();
+
+    let plain = run_schedule(&mut server, &schedule);
+    assert_eq!(plain.len(), 10);
+    assert_eq!(server.stats.spec.drafted, 0,
+               "plain run must not draft");
+    assert!(server.stats.spec_latency_ms.is_empty());
+
+    server.enable_speculation(3, None).unwrap();
+    assert!(server.speculation().is_some());
+    let spec = run_schedule(&mut server, &schedule);
+    assert_eq!(spec.len(), 10);
+    for (p, s) in plain.iter().zip(&spec) {
+        assert_eq!(p.id, s.id);
+        assert_eq!(p.tokens, s.tokens,
+                   "speculation changed request {}'s tokens", p.id);
+        assert_eq!(p.served_params, s.served_params,
+                   "speculation changed request {}'s routing", p.id);
+    }
+    let st = &server.stats;
+    assert!(st.spec.drafted > 0, "speculative run never drafted");
+    assert!(st.spec.consistent(),
+            "drafted {} != accepted {} + rejected {}",
+            st.spec.drafted, st.spec.accepted, st.spec.rejected);
+    assert!(st.acceptance_rate() > 0.0,
+            "the shared-store drafter never agreed with its master");
+    assert_eq!(st.spec_latency_ms.len(), 10,
+               "every speculative request must record a latency \
+                sample");
+    assert!(st.spec_latency_pct(0.99) >= st.spec_latency_pct(0.5));
+    // Composition with continuous batching: admission still happened
+    // mid-decode, and both arenas drained cleanly.
+    assert!(st.admitted_mid_decode >= 1,
+            "speculation must not serialize the scheduler");
+    assert_eq!(st.arena_blocks_in_use, 0,
+               "retired rows must return master and drafter blocks");
+
+    // Speculation can be switched back off on the live server.
+    server.disable_speculation();
+    assert!(server.speculation().is_none());
+    let drafted_before = server.stats.spec.drafted;
+    let again = run_schedule(&mut server, &schedule);
+    for (p, a) in plain.iter().zip(&again) {
+        assert_eq!(p.tokens, a.tokens);
+    }
+    assert_eq!(server.stats.spec.drafted, drafted_before,
+               "disabled speculation still drafted");
+}
+
+/// `enable_speculation` argument validation and drafter nesting: an
+/// explicit `--draft-frac` drafter never out-ranks the smallest
+/// admitted variant (its cuts are clamped under it block-wise).
+#[test]
+fn drafter_carving_nests_under_the_smallest_variant() {
+    let rt = Runtime::native();
+    let mut server = tiny_server(&rt, &[0.3, 0.6], 4);
+    assert!(server.enable_speculation(0, None).is_err(),
+            "k = 0 must be rejected");
+    // Even a frac *smaller* than every admitted budget (an expensive
+    // drafter) is clamped under the smallest variant.
+    for frac in [0.0, 0.2, 0.5, 0.9, 2.0] {
+        let drafter = server.carve_drafter(Some(frac)).unwrap();
+        let smallest = &server.variants[0];
+        for (d, m) in drafter.cuts.iter().zip(&smallest.cuts) {
+            assert!(d.rank_k <= m.rank_k && d.nnz_cut <= m.nnz_cut,
+                    "drafter cut {d:?} out-ranks verifier cut {m:?} \
+                     at frac {frac}");
+        }
+        assert!(drafter.params_count <= smallest.params_count);
+    }
+    // Default drafter: the smallest admitted variant's own cuts.
+    let default = server.carve_drafter(None).unwrap();
+    assert_eq!(default.cuts, server.variants[0].cuts);
+    // And the drafter is zero-copy: views over the same masters, so
+    // its marginal bytes are metadata-scale, far below the store.
+    assert!(default.marginal_bytes() * 10
+                < server.master_store_bytes(),
+            "drafter marginal {}B not metadata-scale vs master {}B",
+            default.marginal_bytes(), server.master_store_bytes());
+    server.enable_speculation(4, Some(0.8)).unwrap();
+    assert_eq!(server.speculation().unwrap().k, 4);
+}
