@@ -13,7 +13,8 @@ use salaad::config::{SalaadConfig, TrainConfig};
 use salaad::coordinator::{Method, Trainer};
 use salaad::data::Tokenizer;
 use salaad::runtime::Runtime;
-use salaad::serve::{Request, Server, ServerOptions};
+use salaad::serve::{ControlEffect, ControlPlane, Request, Server,
+                    ServerOptions};
 use salaad::util::Rng;
 
 fn main() -> Result<()> {
@@ -35,7 +36,17 @@ fn main() -> Result<()> {
                         ..ServerOptions::default() })?;
     // Every budget is a zero-copy view over one shared factor store —
     // carving one more on the live server costs O(blocks) integers.
-    server.admit_budget(0.5)?;
+    // All runtime reconfiguration flows through one seam: a
+    // `ControlPlane` command executed by `Server::apply`, whose
+    // `ControlEffect` reports what actually changed.
+    match server.apply(ControlPlane::AdmitBudget { frac: 0.5 })? {
+        ControlEffect::Admitted { index, params_count, created } => {
+            println!("admitted 0.5 removal -> variant {index} \
+                      ({params_count} params, {})",
+                     if created { "freshly carved" } else { "deduped" });
+        }
+        _ => unreachable!("AdmitBudget reports Admitted"),
+    }
     for v in &server.variants {
         println!("deployed variant: {:>8} params, marginal {:>6} B \
                   ({} factored views; a standalone copy would be {} B)",

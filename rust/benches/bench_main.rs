@@ -29,7 +29,8 @@ use salaad::coordinator::{run_admm_phase, Method, Trainer};
 use salaad::data::BatchLoader;
 use salaad::linalg::{jacobi_svd, matmul, matmul_nt, matmul_tn, rand_svd};
 use salaad::runtime::{ModelParams, PackedPrompts, Runtime};
-use salaad::serve::{Request, Server, ServerOptions};
+use salaad::serve::{AutoscaleConfig, ControlPlane, Request, Server,
+                    ServerOptions};
 use salaad::slr::prox::{soft_threshold_assign, svt};
 use salaad::slr::{hpa, rpca::rpca, SlrBlock};
 use salaad::tensor::Tensor;
@@ -427,6 +428,46 @@ fn main() {
                     server.run(req_rx, resp_tx).unwrap();
                     std::hint::black_box(resp_rx.iter().count());
                 });
+                // The same burst with the closed-loop controller in
+                // the scheduler: the delta over continuous_burst_nano
+                // is the price of windowed telemetry polls plus any
+                // mid-run carve/retire the trace triggers. Armed
+                // fresh each iteration so every run replays the same
+                // level-0 start.
+                let keep: Vec<usize> = server.variants.iter()
+                    .map(|v| v.params_count)
+                    .collect();
+                b.bench("serve/continuous_burst_autoscale_nano", || {
+                    server
+                        .apply(ControlPlane::EnableAutoscale {
+                            cfg: AutoscaleConfig::default(),
+                        })
+                        .unwrap();
+                    let (req_tx, req_rx) = std::sync::mpsc::channel();
+                    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+                    for i in 0..12u64 {
+                        let plen = 4 + (i as usize * 5) % 23;
+                        let max_new = 2 + (i as usize * 7) % 15;
+                        let prompt: Vec<u32> = (0..plen)
+                            .map(|j| ((j * 13 + 3) % cfg.vocab) as u32)
+                            .collect();
+                        req_tx.send(Request::new(i, prompt, max_new, 0))
+                            .unwrap();
+                    }
+                    drop(req_tx);
+                    server.run(req_rx, resp_tx).unwrap();
+                    std::hint::black_box(resp_rx.iter().count());
+                    server.apply(ControlPlane::DisableAutoscale)
+                        .unwrap();
+                });
+                // A run that ends mid-throttle leaves its carve
+                // admitted; drop it so the speculate benches below
+                // see the original spectrum (and its smallest point).
+                while let Some(i) = server.variants.iter()
+                    .position(|v| !keep.contains(&v.params_count))
+                {
+                    server.retire(i).unwrap();
+                }
             }
             // Self-speculative decode at 64 tokens: the default
             // drafter (smallest admitted budget's cuts — a zero-copy

@@ -262,6 +262,24 @@ pub const FIXTURES: &[Fixture] = &[
         expect: &[],
     },
     Fixture {
+        name: "doc_gate_covers_control_plane_surface",
+        rel: "serve/autoscale.rs",
+        src: "//! Fixture: the elasticity control surface is inside\n\
+              //! the doc gate — a bare command enum or an\n\
+              //! undocumented accessor on the controller fires.\n\
+              pub enum Cmd {\n\
+              \x20   Admit { frac: f64 },\n\
+              }\n\
+              /// Documented.\n\
+              pub struct Ctl;\n\
+              impl Ctl {\n\
+              \x20   pub fn level(&self) -> usize {\n\
+              \x20       0\n\
+              \x20   }\n\
+              }\n",
+        expect: &[("doc-gate", 4), ("doc-gate", 10)],
+    },
+    Fixture {
         name: "speculate_path_violations_fire",
         rel: "serve/speculate.rs",
         src: "//! Fixture: the speculative-decode path sits inside both\n\

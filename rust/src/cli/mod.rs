@@ -65,6 +65,25 @@ impl Args {
         }
     }
 
+    /// Comma-separated float list flag (e.g. `--as-ladder 0.3,0.6`):
+    /// empty vec when absent, parse failures surfaced with the
+    /// offending element. The shape ladder/admit-style flags share.
+    pub fn list_f64_flag(&self, key: &str) -> Result<Vec<f64>> {
+        match self.flag(key) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        anyhow!("--{key} expects comma-separated \
+                                 numbers, got {s:?}")
+                    })
+                })
+                .collect(),
+            None => Ok(Vec::new()),
+        }
+    }
+
     /// Optional float flag: `None` when absent (no default exists),
     /// parse failures surfaced — the shape `--draft-frac` needs, where
     /// absence means "derive from the serving spectrum" rather than
@@ -142,6 +161,22 @@ mod tests {
         let b = Args::parse(&argv("serve nano --draft-frac abc"))
             .unwrap();
         assert!(b.opt_f64_flag("draft-frac").is_err());
+    }
+
+    #[test]
+    fn comma_list_flag() {
+        let a = Args::parse(&argv("serve nano --admit 0.3,0.6,0.9"))
+            .unwrap();
+        assert_eq!(a.list_f64_flag("admit").unwrap(),
+                   vec![0.3, 0.6, 0.9]);
+        assert!(a.list_f64_flag("missing").unwrap().is_empty());
+        // Stray whitespace and trailing commas are tolerated...
+        let b = Args::parse(&argv("serve nano --admit 0.3,")).unwrap();
+        assert_eq!(b.list_f64_flag("admit").unwrap(), vec![0.3]);
+        // ...but garbage elements are errors, not silently skipped.
+        let c = Args::parse(&argv("serve nano --admit 0.3,x"))
+            .unwrap();
+        assert!(c.list_f64_flag("admit").is_err());
     }
 
     #[test]

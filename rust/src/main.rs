@@ -35,6 +35,9 @@ USAGE:
   salaad serve <scale> [--steps N] [--requests N] [--mixed-lens]
                [--admit F1,F2,...] [--spectrum] [--burst]
                [--block-size N] [--speculate K] [--draft-frac F]
+               [--autoscale] [--as-ladder F1,F2,...] [--as-high-depth N]
+               [--as-high-occ F] [--as-low-occ F] [--as-down-window N]
+               [--as-up-window N] [--as-cooldown N]
   salaad exp <id|all> [--scale S] [--steps N] [--seed N] [--out DIR]
              [--no-cache] [--verbose]
 
@@ -216,7 +219,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use salaad::serve::{Request, Server, ServerOptions,
+    use salaad::serve::{AutoscaleConfig, ControlPlane, Request,
+                        Response, Server, ServerOptions, StatsWindow,
                         BUILTIN_BUDGET_FRACS};
     let scale = args.positional_at(0).context("serve <scale>")?;
     let rt = Runtime::from_env()?;
@@ -256,14 +260,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // admitted variant as the drafter.
     let draft_frac: Option<f64> = args.opt_f64_flag("draft-frac")?;
     // --admit F1,F2,…: extra budget fractions carved at runtime.
-    let admit_fracs: Vec<f64> = match args.flag("admit") {
-        Some(list) => list.split(',')
-            .map(|s| s.trim().parse::<f64>()
-                .map_err(|_| anyhow::anyhow!(
-                    "--admit expects comma-separated fractions, got \
-                     `{s}`")))
-            .collect::<Result<_>>()?,
-        None => Vec::new(),
+    let admit_fracs: Vec<f64> = args.list_f64_flag("admit")?;
+    // --autoscale: arm the closed-loop elasticity controller — the
+    // continuous scheduler polls windowed telemetry each iteration
+    // and shifts *new* admissions down the --as-ladder removal
+    // fractions under load, back up after a sustained idle window.
+    // With --burst this is also a CI smoke: hard-fails unless the
+    // burst forced ≥1 downshift, the idle tail brought the controller
+    // back to the top, zero requests dropped, and every response is
+    // token-identical to a solo run at its recorded served_at_frac.
+    let autoscale = args.has("autoscale");
+    let as_cfg = {
+        let d = AutoscaleConfig::default();
+        let ladder = args.list_f64_flag("as-ladder")?;
+        AutoscaleConfig {
+            ladder: if ladder.is_empty() { d.ladder } else { ladder },
+            high_queue_depth: args.usize_flag("as-high-depth",
+                                              d.high_queue_depth)?,
+            high_occupancy: args.f64_flag("as-high-occ",
+                                          d.high_occupancy)?,
+            high_queue_wait_ms: d.high_queue_wait_ms,
+            low_occupancy: args.f64_flag("as-low-occ",
+                                         d.low_occupancy)?,
+            down_window: args.usize_flag("as-down-window",
+                                         d.down_window)?,
+            up_window: args.usize_flag("as-up-window", d.up_window)?,
+            cooldown: args.usize_flag("as-cooldown", d.cooldown)?,
+        }
     };
 
     eprintln!("training a quick SALAAD model for the demo ({steps} steps)…");
@@ -346,6 +369,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eprintln!("backend `{}` has no factored execution; serving from \
                    a memoized dense materialization", rt.backend_name());
     }
+    if autoscale && rt.supports_incremental() {
+        eprintln!("autoscale armed: ladder {:?}, high depth {} / occ \
+                   {:.2}, low occ {:.2}, windows {}↓ {}↑, cooldown {}",
+                  as_cfg.ladder, as_cfg.high_queue_depth,
+                  as_cfg.high_occupancy, as_cfg.low_occupancy,
+                  as_cfg.down_window, as_cfg.up_window,
+                  as_cfg.cooldown);
+        server.apply(ControlPlane::EnableAutoscale {
+            cfg: as_cfg.clone() })?;
+    } else if autoscale {
+        eprintln!("backend `{}` has no incremental decoding; \
+                   --autoscale ignored", rt.backend_name());
+    }
     let budgets: Vec<usize> =
         server.variants.iter().map(|v| v.params_count).collect();
     // --spectrum asserts every admitted budget saw traffic; since the
@@ -361,7 +397,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // comparison can replay the *identical* traffic: (id, prompt,
     // max_new, budget) per request.
     let vocab = cfg.vocab as u64;
-    let schedule: Vec<(u64, Vec<u32>, usize, usize)> = {
+    let mut schedule: Vec<(u64, Vec<u32>, usize, usize)> = {
         let mut rng = salaad::util::Rng::new(42);
         (0..n_requests as u64)
             .map(|i| {
@@ -390,6 +426,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             })
             .collect()
     };
+    // The autoscale burst smoke appends one long low-traffic tail
+    // request: after the burst drains it decodes alone for dozens of
+    // scheduler iterations, giving the controller the sustained idle
+    // window it needs to shift back up (and to garbage-collect the
+    // variants it carved) *within* the run.
+    if autoscale && burst {
+        schedule.push((schedule.len() as u64, vec![1, 2, 3, 4], 48, 0));
+    }
+    let n_requests = schedule.len();
+    let schedule = schedule; // frozen: both runs replay it verbatim
     // Every request is already in the channel when the batcher starts,
     // so batch composition (and the --mixed-lens packing assertion
     // below) is deterministic instead of racing the 10 ms batch
@@ -401,6 +447,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .unwrap();
         }
     };
+    // One windowed view shared with the controller's API: snapshot
+    // after each run prints per-run tails (honest deltas even when
+    // the --speculate re-run reuses the same lifetime stats).
+    let mut window = StatsWindow::new();
     let (req_tx, req_rx) = std::sync::mpsc::channel();
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();
     send_all(&req_tx);
@@ -408,16 +458,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.run(req_rx, resp_tx)?;
     let mut lat = Vec::new();
     let mut n_resp = 0usize;
-    let mut tokens_by_id = std::collections::BTreeMap::new();
+    let mut by_id: std::collections::BTreeMap<u64, Response> =
+        std::collections::BTreeMap::new();
     for r in resp_rx.iter() {
-        println!("req {:>3} served by {:>8}-param variant in {:.1} ms \
-                  (queued {:.1} ms){}: {:?}",
-                 r.id, r.served_params, r.latency_ms, r.queue_ms,
+        println!("req {:>3} served by {:>8}-param variant (frac \
+                  {:.2}) in {:.1} ms (queued {:.1} ms){}: {:?}",
+                 r.id, r.served_params, r.served_at_frac,
+                 r.latency_ms, r.queue_ms,
                  if r.over_budget { " OVER BUDGET" } else { "" },
                  r.tokens);
         lat.push(r.latency_ms);
-        tokens_by_id.insert(r.id, r.tokens);
         n_resp += 1;
+        by_id.insert(r.id, r);
     }
     lat.sort_by(f64::total_cmp);
     if !lat.is_empty() {
@@ -446,6 +498,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
              s.shared_bytes, s.marginal_bytes, server.variants.len());
     for (count, served) in &s.served_by_variant {
         println!("  variant {count:>9}: served {served} requests");
+    }
+    let w = window.snapshot(&server.stats);
+    println!("window: {} served, {} decode steps | queue-wait p50 \
+              {:.1} ms  p99 {:.1} ms | latency p50 {:.1} ms  p99 \
+              {:.1} ms",
+             w.served, w.decode_steps, w.queue_wait_p50_ms,
+             w.queue_wait_p99_ms, w.latency_p50_ms, w.latency_p99_ms);
+    if autoscale && rt.supports_incremental() {
+        println!("autoscale: {} downshifts, {} upshifts, deepest \
+                  level {}, final level {}, {} carved variants \
+                  retired",
+                 s.autoscale_downshifts, s.autoscale_upshifts,
+                 s.autoscale_deepest_level, s.autoscale_final_level,
+                 s.autoscale_retired);
     }
     // Smoke contract: every request round-trips to a response, the
     // byte split is populated, and the per-variant counters account
@@ -521,6 +587,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  s.admitted_mid_decode, s.arena_blocks_high_water,
                  s.arena_blocks_contiguous, s.queue_wait_pct(0.99));
     }
+    // The replay contract behind served_at_frac: HPA planning is
+    // deterministic, so re-admitting the recorded fraction rebuilds
+    // the exact cuts that served the response (even if the autoscaler
+    // has since garbage-collected that variant) and a solo decode of
+    // the same prompt must reproduce the tokens bit-exactly.
+    fn verify_frac(server: &mut salaad::serve::Server<'_>,
+                   schedule: &[(u64, Vec<u32>, usize, usize)],
+                   r: &salaad::serve::Response) -> Result<()> {
+        let vi = server.admit_budget(r.served_at_frac)?;
+        let (id, prompt, max_new, _) = &schedule[r.id as usize];
+        anyhow::ensure!(*id == r.id,
+                        "schedule ids out of order at {}", r.id);
+        let p = server.prepare_prompt(prompt, *max_new);
+        let solo = server.generate_cached(&server.variants[vi], &[p],
+                                          &[*max_new])?;
+        anyhow::ensure!(
+            solo[0] == r.tokens,
+            "request {} served at frac {:.2} is not token-identical \
+             to a solo run at that budget: {:?} vs {:?} — elasticity \
+             leaked into the output",
+            r.id, r.served_at_frac, r.tokens, solo[0]);
+        Ok(())
+    }
+    if autoscale && burst && rt.supports_incremental() {
+        // (a) The burst forced admissions down the ladder.
+        anyhow::ensure!(
+            server.stats.autoscale_downshifts >= 1,
+            "burst of {n_requests} requests over {} slots never \
+             downshifted — the controller is not reacting to load",
+            server.stats.arena_blocks_contiguous);
+        // (b) The idle tail brought the controller back to the top.
+        anyhow::ensure!(
+            server.stats.autoscale_upshifts >= 1
+                && server.stats.autoscale_final_level == 0,
+            "{} upshifts, final level {} — the controller never \
+             recovered after the idle tail",
+            server.stats.autoscale_upshifts,
+            server.stats.autoscale_final_level);
+        // (c) Elasticity dropped nothing.
+        anyhow::ensure!(
+            server.stats.dropped_responses == 0,
+            "{} responses dropped under autoscale",
+            server.stats.dropped_responses);
+        // (d) Every response is token-identical to a solo run at its
+        // recorded fraction.
+        let responses: Vec<salaad::serve::Response> =
+            by_id.values().cloned().collect();
+        for r in &responses {
+            verify_frac(&mut server, &schedule, r)?;
+        }
+        println!("autoscale OK: {} downshift(s), {} upshift(s), \
+                  recovered to level 0, 0 drops, {} responses \
+                  token-identical at their served_at_frac",
+                 server.stats.autoscale_downshifts,
+                 server.stats.autoscale_upshifts, responses.len());
+    }
     if speculate_k > 0 && rt.supports_incremental() {
         // Re-serve the identical schedule with self-speculative
         // decoding and gate hard: (a) every request's tokens must be
@@ -539,19 +661,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         drop(req_tx);
         server.run(req_rx, resp_tx)?;
         let mut n_spec = 0usize;
+        let mut spec_responses: Vec<Response> = Vec::new();
         for r in resp_rx.iter() {
-            let baseline = tokens_by_id.get(&r.id);
-            anyhow::ensure!(
-                baseline == Some(&r.tokens),
-                "speculative decode diverged on request {}: {:?} vs \
-                 plain {:?} — greedy verification must be \
-                 token-identical",
-                r.id, r.tokens, baseline);
+            if autoscale && rt.supports_incremental() {
+                // With the controller armed, speculation changes the
+                // iteration count and therefore the controller's
+                // trajectory — requests may legitimately be served at
+                // different fractions than the plain run. The
+                // per-response identity contract still holds and is
+                // checked below against a solo run at each recorded
+                // fraction.
+                spec_responses.push(r);
+            } else {
+                let baseline = by_id.get(&r.id).map(|b| &b.tokens);
+                anyhow::ensure!(
+                    baseline == Some(&r.tokens),
+                    "speculative decode diverged on request {}: {:?} \
+                     vs plain {:?} — greedy verification must be \
+                     token-identical",
+                    r.id, r.tokens, baseline);
+            }
             n_spec += 1;
         }
         anyhow::ensure!(n_spec == n_requests,
                         "speculative run served {n_spec}/{n_requests} \
                          requests");
+        for r in &spec_responses {
+            verify_frac(&mut server, &schedule, r)?;
+        }
         let s = &server.stats;
         println!("speculation: {} drafted, {} accepted, {} rejected, \
                   {} rolled back over {} rounds (acceptance {:.1}%), \

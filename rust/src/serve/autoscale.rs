@@ -1,0 +1,505 @@
+//! Closed-loop load-adaptive elasticity: the hysteresis controller
+//! that turns the paper's "smooth elastic deployment" claim into a
+//! production behavior.
+//!
+//! PRs 5–6 built the substrate — zero-copy nested variants carved and
+//! retired on a live server in O(blocks), plus queue-wait / occupancy
+//! telemetry in [`super::ServeStats`] — but a human still picked the
+//! budget. The [`Autoscaler`] closes the loop: the continuous
+//! scheduler polls it once per iteration with a **windowed**
+//! [`LoadSample`] (queue depth, arena occupancy, recent p99 queue
+//! wait — deltas via [`super::StatsWindow`], never lifetime
+//! aggregates, which would anchor the controller to stale history),
+//! and the controller answers with a [`ScaleDecision`]: shift *new*
+//! admissions one rung down a ladder of removal fractions when load
+//! has been hot for a sustained window, or one rung back up after a
+//! sustained calm window.
+//!
+//! Three properties make the loop safe to run inside a serving
+//! scheduler:
+//!
+//! - **Hysteresis, not a thermostat.** A shift requires `down_window`
+//!   (resp. `up_window`) *consecutive* hot (calm) polls, and every
+//!   shift starts a `cooldown` during which the controller holds —
+//!   so a load blip cannot make the operating point oscillate.
+//! - **Admission-time only.** The controller moves a routing *target*;
+//!   rows already decoding never migrate (their variant — identified
+//!   by parameter count — is pinned until retire), so every request
+//!   stays token-identical to a solo run at the budget it was
+//!   admitted at, recorded as `Response::served_at_frac`.
+//! - **Bounded.** The level is always within `[0, ladder.len()]`:
+//!   level 0 routes to the top of the spectrum (no throttle) and each
+//!   deeper level maps to one ladder fraction, validated ascending in
+//!   `(0, 0.95]` at construction.
+//!
+//! Calm deliberately ignores the queue-wait signal: wait samples are
+//! recorded at *retire*, so an idle arena can sit behind stale slow
+//! samples for a whole window — depth and occupancy are the live
+//! signals, and both must be low to call a poll calm. Hot, by
+//! contrast, may trigger on any of the three signals.
+//!
+//! The state machine is pure (no clocks, no I/O): decisions depend
+//! only on the sample sequence, which is what lets the property tests
+//! in this module replay deterministic synthetic traces — and what
+//! keeps the serve smoke's downshift/upshift gates reproducible.
+
+use anyhow::{ensure, Result};
+
+/// Thresholds and hysteresis windows of the [`Autoscaler`]. All
+/// windows are counted in controller polls — one per continuous
+/// scheduler iteration — not wall time, so replays are deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Removal-fraction ladder, strictly ascending in `(0, 0.95]`
+    /// (the clamp `admit_budget` applies). Level 0 is implicit — no
+    /// throttle, admissions route normally — and level `i ≥ 1` caps
+    /// new admissions at the variant admitted for `ladder[i − 1]`.
+    pub ladder: Vec<f64>,
+    /// A poll is hot when the pending queue holds at least this many
+    /// requests.
+    pub high_queue_depth: usize,
+    /// ... or when arena occupancy (blocks in use over the contiguous
+    /// reservation) reaches this fraction.
+    pub high_occupancy: f64,
+    /// ... or when the window's p99 queue wait (over requests retired
+    /// since the last poll) reaches this many milliseconds. Windows
+    /// with no retired requests skip this signal.
+    pub high_queue_wait_ms: f64,
+    /// A poll is calm only when the queue is empty **and** occupancy
+    /// is at or below this fraction (queue wait is excluded — see the
+    /// module docs).
+    pub low_occupancy: f64,
+    /// Consecutive hot polls required before shifting down a level.
+    pub down_window: usize,
+    /// Consecutive calm polls required before shifting back up.
+    pub up_window: usize,
+    /// Polls to hold after any shift before another is considered —
+    /// the anti-oscillation guard the property tests pin.
+    pub cooldown: usize,
+}
+
+impl Default for AutoscaleConfig {
+    /// Defaults tuned for the `salaad serve --burst --autoscale`
+    /// smoke (8 decode slots): hot when the queue reaches the slot
+    /// count, calm only once the queue is empty and the arena is
+    /// mostly free; two-poll windows with a two-poll cooldown.
+    fn default() -> Self {
+        AutoscaleConfig { ladder: vec![0.6, 0.9],
+                          high_queue_depth: 8,
+                          high_occupancy: 0.85,
+                          high_queue_wait_ms: 250.0,
+                          low_occupancy: 0.35,
+                          down_window: 2,
+                          up_window: 2,
+                          cooldown: 2 }
+    }
+}
+
+/// One windowed load observation, assembled by the scheduler each
+/// iteration from live queue/arena state plus the
+/// [`super::StatsWindow`] delta since the previous poll.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadSample {
+    /// Requests waiting in the pending queue (admitted nowhere yet).
+    pub queue_depth: usize,
+    /// Arena blocks in use over the contiguous reservation, in
+    /// `[0, 1]`.
+    pub occupancy: f64,
+    /// p99 queue wait in ms over requests retired in this window
+    /// (0.0 — and ignored — when `window_served == 0`).
+    pub queue_wait_p99_ms: f64,
+    /// Requests retired in this window (gates the wait signal).
+    pub window_served: u64,
+}
+
+/// What the controller wants done after one poll. `Down`/`Up` carry
+/// the *new* level so the caller can act without re-reading state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// No change this poll.
+    Hold,
+    /// Load has been hot for a full window: route new admissions at
+    /// `ladder[level − 1]` (a smaller budget than before).
+    Down {
+        /// The new ladder level (≥ 1).
+        level: usize,
+    },
+    /// Load has been calm for a full window: raise the routing target
+    /// one rung (level 0 = back to the top of the spectrum).
+    Up {
+        /// The new ladder level (0 = no throttle).
+        level: usize,
+    },
+}
+
+/// The hysteresis state machine. Pure: [`Self::observe`] consumes one
+/// [`LoadSample`] per scheduler iteration and returns a
+/// [`ScaleDecision`]; it never touches the server — enacting the
+/// decision (carving/retiring variants, moving the routing target) is
+/// the scheduler's job via the `ControlPlane`.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    /// Current ladder level: 0 = unthrottled, `i ≥ 1` routes new
+    /// admissions at `cfg.ladder[i − 1]`.
+    level: usize,
+    hot_streak: usize,
+    calm_streak: usize,
+    cooldown_left: usize,
+    polls: u64,
+}
+
+impl Autoscaler {
+    /// Validate the config and start at level 0 (unthrottled).
+    pub fn new(cfg: AutoscaleConfig) -> Result<Self> {
+        ensure!(!cfg.ladder.is_empty(),
+                "autoscale ladder is empty — nothing to shift to");
+        for (i, &f) in cfg.ladder.iter().enumerate() {
+            ensure!(f > 0.0 && f <= 0.95,
+                    "ladder[{i}] = {f} outside (0, 0.95]");
+        }
+        ensure!(cfg.ladder.windows(2).all(|w| w[0] < w[1]),
+                "ladder fractions must be strictly ascending: {:?}",
+                cfg.ladder);
+        ensure!(cfg.down_window >= 1 && cfg.up_window >= 1,
+                "down/up windows must be >= 1 poll (got {} / {})",
+                cfg.down_window, cfg.up_window);
+        ensure!(cfg.high_occupancy > cfg.low_occupancy,
+                "high occupancy {} must exceed low occupancy {} — \
+                 equal thresholds make every poll both hot and calm",
+                cfg.high_occupancy, cfg.low_occupancy);
+        Ok(Autoscaler { cfg,
+                        level: 0,
+                        hot_streak: 0,
+                        calm_streak: 0,
+                        cooldown_left: 0,
+                        polls: 0 })
+    }
+
+    /// The validated configuration.
+    pub fn cfg(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Current ladder level (0 = unthrottled).
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Deepest reachable level (`ladder.len()`).
+    pub fn max_level(&self) -> usize {
+        self.cfg.ladder.len()
+    }
+
+    /// The removal fraction new admissions are capped at, or `None`
+    /// at level 0 (route at the top of the spectrum).
+    pub fn frac(&self) -> Option<f64> {
+        if self.level == 0 {
+            None
+        } else {
+            self.cfg.ladder.get(self.level - 1).copied()
+        }
+    }
+
+    /// Samples observed so far.
+    pub fn polls(&self) -> u64 {
+        self.polls
+    }
+
+    fn is_hot(&self, s: &LoadSample) -> bool {
+        s.queue_depth >= self.cfg.high_queue_depth
+            || s.occupancy >= self.cfg.high_occupancy
+            || (s.window_served > 0
+                && s.queue_wait_p99_ms >= self.cfg.high_queue_wait_ms)
+    }
+
+    fn is_calm(&self, s: &LoadSample) -> bool {
+        s.queue_depth == 0 && s.occupancy <= self.cfg.low_occupancy
+    }
+
+    /// Feed one windowed sample; returns the decision for this poll.
+    /// Streaks accumulate even during a cooldown (a burst that starts
+    /// inside one still counts toward the next shift), but no shift is
+    /// issued until the cooldown expires. A poll that is neither hot
+    /// nor calm resets both streaks: hysteresis demands *consecutive*
+    /// evidence. A poll that is hot *and* nominally calm (an idle
+    /// arena draining a window of terrible wait samples) counts as
+    /// hot — load evidence always outranks idle evidence.
+    pub fn observe(&mut self, s: &LoadSample) -> ScaleDecision {
+        self.polls += 1;
+        let hot = self.is_hot(s);
+        let calm = !hot && self.is_calm(s);
+        self.hot_streak = if hot { self.hot_streak + 1 } else { 0 };
+        self.calm_streak = if calm { self.calm_streak + 1 } else { 0 };
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return ScaleDecision::Hold;
+        }
+        if hot && self.hot_streak >= self.cfg.down_window
+            && self.level < self.cfg.ladder.len()
+        {
+            self.level += 1;
+            self.hot_streak = 0;
+            self.calm_streak = 0;
+            self.cooldown_left = self.cfg.cooldown;
+            return ScaleDecision::Down { level: self.level };
+        }
+        if calm && self.calm_streak >= self.cfg.up_window
+            && self.level > 0
+        {
+            self.level -= 1;
+            self.hot_streak = 0;
+            self.calm_streak = 0;
+            self.cooldown_left = self.cfg.cooldown;
+            return ScaleDecision::Up { level: self.level };
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cfg(ladder: &[f64], down: usize, up: usize, cool: usize)
+           -> AutoscaleConfig {
+        AutoscaleConfig { ladder: ladder.to_vec(),
+                          high_queue_depth: 4,
+                          high_occupancy: 0.8,
+                          high_queue_wait_ms: 100.0,
+                          low_occupancy: 0.2,
+                          down_window: down,
+                          up_window: up,
+                          cooldown: cool }
+    }
+
+    fn hot() -> LoadSample {
+        LoadSample { queue_depth: 10,
+                     occupancy: 0.9,
+                     queue_wait_p99_ms: 500.0,
+                     window_served: 3 }
+    }
+
+    fn calm() -> LoadSample {
+        LoadSample { queue_depth: 0,
+                     occupancy: 0.05,
+                     queue_wait_p99_ms: 0.0,
+                     window_served: 0 }
+    }
+
+    fn neutral() -> LoadSample {
+        // Busy but not overloaded: queue below the high-water mark,
+        // occupancy between the calm and hot thresholds.
+        LoadSample { queue_depth: 1,
+                     occupancy: 0.5,
+                     queue_wait_p99_ms: 10.0,
+                     window_served: 1 }
+    }
+
+    #[test]
+    fn config_is_validated() {
+        assert!(Autoscaler::new(cfg(&[], 1, 1, 0)).is_err());
+        assert!(Autoscaler::new(cfg(&[0.0], 1, 1, 0)).is_err());
+        assert!(Autoscaler::new(cfg(&[0.99], 1, 1, 0)).is_err());
+        assert!(Autoscaler::new(cfg(&[0.6, 0.3], 1, 1, 0)).is_err());
+        assert!(Autoscaler::new(cfg(&[0.5, 0.5], 1, 1, 0)).is_err());
+        assert!(Autoscaler::new(cfg(&[0.5], 0, 1, 0)).is_err());
+        assert!(Autoscaler::new(cfg(&[0.5], 1, 0, 0)).is_err());
+        let mut bad = cfg(&[0.5], 1, 1, 0);
+        bad.low_occupancy = bad.high_occupancy;
+        assert!(Autoscaler::new(bad).is_err());
+        assert!(Autoscaler::new(cfg(&[0.3, 0.95], 1, 1, 0)).is_ok());
+    }
+
+    /// Step trace: load jumps hot and stays there. The level must
+    /// descend monotonically one rung at a time, respect the window
+    /// and cooldown spacing, saturate at the ladder depth, and never
+    /// issue an Up while the load is monotone hot.
+    #[test]
+    fn step_trace_descends_monotonically_and_saturates() {
+        let c = cfg(&[0.3, 0.6, 0.9], 2, 2, 3);
+        let mut a = Autoscaler::new(c).unwrap();
+        let mut last_level = a.level();
+        let mut last_shift: Option<u64> = None;
+        for _ in 0..40 {
+            let d = a.observe(&hot());
+            match d {
+                ScaleDecision::Hold => {}
+                ScaleDecision::Down { level } => {
+                    assert_eq!(level, last_level + 1,
+                               "down must move one rung at a time");
+                    if let Some(at) = last_shift {
+                        assert!(a.polls() - at > 3,
+                                "shifts {at} and {} violate cooldown",
+                                a.polls());
+                    }
+                    last_shift = Some(a.polls());
+                    last_level = level;
+                }
+                ScaleDecision::Up { .. } => {
+                    panic!("monotone hot load produced an upshift");
+                }
+            }
+            assert_eq!(a.level(), last_level,
+                       "level moved without a Down decision");
+            assert!(a.level() <= a.max_level());
+        }
+        assert_eq!(a.level(), 3, "hot load must reach the deepest rung");
+        assert_eq!(a.frac(), Some(0.9));
+    }
+
+    /// Burst trace: hot for a while, then calm forever. The controller
+    /// must come back up to level 0 — and stay there — with every
+    /// shift obeying the cooldown spacing.
+    #[test]
+    fn burst_trace_recovers_to_level_zero() {
+        let c = cfg(&[0.4, 0.8], 2, 2, 2);
+        let mut a = Autoscaler::new(c).unwrap();
+        let mut shifts: Vec<(u64, ScaleDecision)> = Vec::new();
+        for i in 0..60 {
+            let s = if i < 14 { hot() } else { calm() };
+            let d = a.observe(&s);
+            if d != ScaleDecision::Hold {
+                shifts.push((a.polls(), d));
+            }
+            assert!(a.level() <= a.max_level());
+        }
+        assert!(shifts.iter()
+                    .any(|(_, d)| matches!(d, ScaleDecision::Down { .. })),
+                "burst must cause at least one downshift");
+        assert!(shifts.iter()
+                    .any(|(_, d)| matches!(d, ScaleDecision::Up { .. })),
+                "calm tail must cause at least one upshift");
+        assert_eq!(a.level(), 0, "calm tail must restore level 0");
+        assert_eq!(a.frac(), None);
+        for w in shifts.windows(2) {
+            assert!(w[1].0 - w[0].0 > 2,
+                    "shifts at polls {} and {} violate the cooldown",
+                    w[0].0, w[1].0);
+        }
+    }
+
+    /// Ramp-down trace: after recovery, neutral load (neither hot nor
+    /// calm) must hold the level exactly where it is — no drift in
+    /// either direction without consecutive evidence.
+    #[test]
+    fn neutral_load_holds_the_level() {
+        let c = cfg(&[0.5], 1, 1, 0);
+        let mut a = Autoscaler::new(c).unwrap();
+        assert_eq!(a.observe(&hot()), ScaleDecision::Down { level: 1 });
+        for _ in 0..20 {
+            assert_eq!(a.observe(&neutral()), ScaleDecision::Hold);
+            assert_eq!(a.level(), 1);
+        }
+        // One calm poll is enough here (up_window = 1)…
+        assert_eq!(a.observe(&calm()), ScaleDecision::Up { level: 0 });
+        // …and neutral load keeps holding at the top.
+        for _ in 0..10 {
+            assert_eq!(a.observe(&neutral()), ScaleDecision::Hold);
+            assert_eq!(a.level(), 0);
+        }
+    }
+
+    /// Streaks must be *consecutive*: alternating hot/neutral polls
+    /// never accumulate a 2-poll hot window, so the level never moves.
+    #[test]
+    fn interrupted_streaks_never_shift() {
+        let c = cfg(&[0.5], 2, 2, 0);
+        let mut a = Autoscaler::new(c).unwrap();
+        for i in 0..30 {
+            let s = if i % 2 == 0 { hot() } else { neutral() };
+            assert_eq!(a.observe(&s), ScaleDecision::Hold,
+                       "alternating load must never complete a window");
+        }
+        assert_eq!(a.level(), 0);
+    }
+
+    /// Calm must require both an empty queue and a quiet arena; a
+    /// stale slow queue-wait sample must not block recovery (wait is
+    /// excluded from the calm criterion by design).
+    #[test]
+    fn calm_ignores_stale_queue_wait_samples() {
+        let c = cfg(&[0.5], 1, 1, 0);
+        let mut a = Autoscaler::new(c).unwrap();
+        assert_eq!(a.observe(&hot()), ScaleDecision::Down { level: 1 });
+        // Empty queue + idle arena, but the window drained a request
+        // whose (historic) wait was terrible. is_hot fires on the wait
+        // sample, so this poll is hot AND would-be-calm → hot wins by
+        // the calm definition never being reached… it must stay down.
+        let stale = LoadSample { queue_depth: 0,
+                                 occupancy: 0.05,
+                                 queue_wait_p99_ms: 9_000.0,
+                                 window_served: 1 };
+        // A hot poll resets the calm streak, so no upshift yet.
+        assert_eq!(a.observe(&stale), ScaleDecision::Hold);
+        assert_eq!(a.level(), 1);
+        // Once the window is empty the wait signal is ignored and the
+        // same queue/arena state reads calm.
+        let quiet = LoadSample { queue_wait_p99_ms: 9_000.0,
+                                 window_served: 0,
+                                 ..stale };
+        assert_eq!(a.observe(&quiet), ScaleDecision::Up { level: 0 });
+    }
+
+    /// Randomized traces: whatever the load sequence, the level stays
+    /// in `[0, ladder.len()]`, the frac is always a ladder entry (or
+    /// None at level 0), non-Hold decisions are spaced more than
+    /// `cooldown` polls apart, and every shift moves exactly one rung.
+    #[test]
+    fn random_traces_hold_the_hysteresis_invariants() {
+        prop::check("autoscale_random_traces", 64, |rng| {
+            let ladder: Vec<f64> = match prop::dim(rng, 1, 3) {
+                1 => vec![0.5],
+                2 => vec![0.3, 0.7],
+                _ => vec![0.2, 0.5, 0.9],
+            };
+            let cool = prop::dim(rng, 0, 3);
+            let c = cfg(&ladder, prop::dim(rng, 1, 3),
+                        prop::dim(rng, 1, 3), cool);
+            let mut a = Autoscaler::new(c).unwrap();
+            let mut prev_level = a.level();
+            let mut last_shift: Option<u64> = None;
+            for _ in 0..prop::dim(rng, 20, 120) {
+                let s = match rng.next_below(3) {
+                    0 => hot(),
+                    1 => calm(),
+                    _ => neutral(),
+                };
+                let d = a.observe(&s);
+                assert!(a.level() <= ladder.len(), "level out of range");
+                match a.frac() {
+                    None => assert_eq!(a.level(), 0),
+                    Some(f) => assert!(ladder.contains(&f),
+                                       "frac {f} not on the ladder"),
+                }
+                match d {
+                    ScaleDecision::Hold => {
+                        assert_eq!(a.level(), prev_level,
+                                   "Hold must not move the level");
+                    }
+                    ScaleDecision::Down { level } => {
+                        assert_eq!(level, prev_level + 1,
+                                   "down must move one rung");
+                        assert_eq!(a.level(), level);
+                    }
+                    ScaleDecision::Up { level } => {
+                        assert_eq!(level + 1, prev_level,
+                                   "up must move one rung");
+                        assert_eq!(a.level(), level);
+                    }
+                }
+                if d != ScaleDecision::Hold {
+                    if let Some(at) = last_shift {
+                        assert!(a.polls() - at > cool as u64,
+                                "shifts at {at} and {} inside the \
+                                 {cool}-poll cooldown",
+                                a.polls());
+                    }
+                    last_shift = Some(a.polls());
+                }
+                prev_level = a.level();
+            }
+        });
+    }
+}

@@ -40,6 +40,20 @@
 //! (token-identical to never drafting); only the master pass count
 //! and the [`ServeStats::spec`] counters move.
 //!
+//! Every runtime reconfiguration — budget admits/retires, carves,
+//! speculation, autoscaling — goes through one seam:
+//! [`Server::apply`] executing a [`ControlPlane`] command. On top of
+//! it sits **closed-loop elasticity** ([`autoscale`]): with
+//! [`ControlPlane::EnableAutoscale`] armed, the continuous scheduler
+//! polls a [`StatsWindow`] of *recent* telemetry (windowed p99
+//! queue-wait, live arena occupancy and queue depth) each iteration
+//! and a hysteresis controller shifts new admissions down a ladder of
+//! removal fractions under load and back up after a sustained idle
+//! window — carving and garbage-collecting variants on the fly via
+//! the same O(blocks) cut machinery. In-flight rows never migrate,
+//! and every [`Response`] records the [`Response::served_at_frac`] it
+//! was admitted at, so elasticity stays bit-invisible per request.
+//!
 //! Threading: the PJRT backend is not `Send` (and the native backend
 //! parallelizes internally), so the server runs on its owner thread
 //! and talks to clients over std::sync::mpsc channels (the offline
@@ -104,9 +118,13 @@ pub mod request;
 pub mod batcher;
 pub mod server;
 pub mod speculate;
+pub mod autoscale;
 
 pub use request::{Request, Response};
 pub use batcher::Batcher;
-pub use server::{argmax_logit, Server, ServerOptions, ServeStats,
-                 Speculation, VariantSpec, BUILTIN_BUDGET_FRACS};
+pub use server::{argmax_logit, ControlEffect, ControlPlane, Server,
+                 ServerOptions, ServeStats, Speculation, StatsWindow,
+                 VariantSpec, WindowSnapshot, BUILTIN_BUDGET_FRACS};
 pub use speculate::{spec_round, SpecCounters, SpecDecode, SpecRow};
+pub use autoscale::{AutoscaleConfig, Autoscaler, LoadSample,
+                    ScaleDecision};

@@ -51,6 +51,16 @@ pub struct Response {
     /// Which variant served it (surrogate parameter count — also the
     /// key of `ServeStats::served_by_variant`).
     pub served_params: usize,
+    /// The removal fraction of the variant that served it: `0.0` for
+    /// the full surrogate (and for explicit-cut variants with no HPA
+    /// provenance), otherwise the fraction of the removable pool the
+    /// serving variant was admitted at — possibly lower than the
+    /// request asked for when the autoscaler was throttling. This is
+    /// the replay contract: re-admitting this fraction on an
+    /// identically constructed server and decoding the same prompt
+    /// solo reproduces `tokens` bit-exactly (HPA planning is
+    /// deterministic, so the fraction fully determines the cuts).
+    pub served_at_frac: f64,
     /// True when the request's nonzero `budget_params` was below every
     /// *currently admitted* variant and the smallest one served it
     /// anyway — the client asked for a memory ceiling the server could

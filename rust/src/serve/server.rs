@@ -33,6 +33,23 @@
 //! loop. [`ServeStats`] records both tails (p50/p99 queue-wait and
 //! request latency) and arena occupancy, so the scheduling win is
 //! measured rather than asserted.
+//!
+//! Every way a live server's configuration can change — budget
+//! admits/retires, explicit carves, speculation, autoscaling — goes
+//! through one seam: [`Server::apply`] executing a [`ControlPlane`]
+//! command. The CLI, the tests/benches, and the in-loop
+//! [`super::autoscale::Autoscaler`] all drive this same surface (the
+//! legacy per-method entry points remain as thin shims over it), so
+//! admission-time invariants — ascending spectrum, drafter nesting,
+//! byte accounting — are enforced in exactly one place. With
+//! [`ControlPlane::EnableAutoscale`] armed, the continuous scheduler
+//! additionally polls a [`StatsWindow`] each iteration and lets the
+//! hysteresis controller shift *new* admissions down the budget
+//! spectrum under load and back up when idle; in-flight rows never
+//! migrate, so elasticity is invisible to every individual response
+//! (each records the [`Response::served_at_frac`] it was admitted
+//! at, and replaying it solo at that fraction reproduces its tokens
+//! bit-exactly).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
@@ -41,6 +58,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
+use super::autoscale::{AutoscaleConfig, Autoscaler, LoadSample,
+                       ScaleDecision};
 use super::batcher::Batcher;
 use super::request::{Request, Response};
 use super::speculate::{spec_round, SpecCounters, SpecDecode, SpecRow};
@@ -67,6 +86,13 @@ pub struct VariantSpec {
     /// Per-block `{rank_k, nnz_cut}` into the server's masters
     /// (aligned with [`Server::masters`]).
     pub cuts: Vec<BlockCuts>,
+    /// The removal fraction this variant was admitted at: `Some(0.0)`
+    /// for the full surrogate, `Some(f)` (clamped) for budget admits,
+    /// `None` for variants carved from explicit cuts. Responses report
+    /// it as [`Response::served_at_frac`] so any request can be
+    /// replayed solo at the same operating point — the attribution the
+    /// autoscale smoke audits.
+    pub frac: Option<f64>,
     /// Mixed dense/factored parameter set in `cfg.params` order; every
     /// entry is a shared handle (dense `Arc`s + store views).
     pub params: ModelParams,
@@ -224,6 +250,23 @@ pub struct ServeStats {
     /// speculation was enabled (a subset of
     /// [`Self::decode_latency_ms`]). Feed to [`Self::spec_latency_pct`].
     pub spec_latency_ms: Vec<f64>,
+    /// Autoscaler downshifts: polls where the controller moved new
+    /// admissions one rung down the budget ladder. 0 unless
+    /// [`ControlPlane::EnableAutoscale`] was armed while serving.
+    pub autoscale_downshifts: u64,
+    /// Autoscaler upshifts: polls where the controller raised the
+    /// routing target one rung back toward the top of the spectrum.
+    pub autoscale_upshifts: u64,
+    /// Deepest ladder level the controller reached (0 = it never
+    /// throttled).
+    pub autoscale_deepest_level: usize,
+    /// Controller level at the last scheduler iteration (0 = serving
+    /// at the top of the spectrum when the run drained).
+    pub autoscale_final_level: usize,
+    /// Controller-carved variants garbage-collected after traffic
+    /// moved off of them — the "back up" half of elasticity returning
+    /// their O(blocks) metadata.
+    pub autoscale_retired: u64,
 }
 
 /// Rounded-index percentile of `samples` at `p ∈ [0, 1]`: sort and
@@ -279,6 +322,92 @@ impl ServeStats {
     }
 }
 
+/// A polling cursor over [`ServeStats`]: each [`Self::snapshot`]
+/// returns percentiles and counts over only what arrived **since the
+/// previous snapshot**, then advances the cursor. The autoscale
+/// controller and the `salaad serve` printout both read load through
+/// this one window API — windowed tails react to the last few
+/// iterations, where the lifetime aggregates the controller must not
+/// use are anchored to the whole run's history.
+///
+/// Reads are non-destructive to the stats themselves: the cursor
+/// lives here, so several independent windows can observe one
+/// [`ServeStats`].
+#[derive(Clone, Debug, Default)]
+pub struct StatsWindow {
+    queue_cursor: usize,
+    latency_cursor: usize,
+    decode_steps: u64,
+    admitted_mid_decode: u64,
+}
+
+impl StatsWindow {
+    /// A window opening at the very beginning: the first snapshot
+    /// covers everything the stats have ever recorded.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A window opening at `stats`' current end: the first snapshot
+    /// covers only what arrives after this call — how the scheduler
+    /// arms the controller's window, so pre-run history can't color
+    /// the first poll.
+    pub fn at(stats: &ServeStats) -> Self {
+        StatsWindow { queue_cursor: stats.queue_wait_ms.len(),
+                      latency_cursor: stats.decode_latency_ms.len(),
+                      decode_steps: stats.decode_steps,
+                      admitted_mid_decode: stats.admitted_mid_decode }
+    }
+
+    /// Drain the window: per-window percentiles and counter deltas
+    /// since the previous poll, with the cursor advanced to `stats`'
+    /// current end. Empty windows report 0 counts and 0.0 percentiles
+    /// (the rounded-index percentile edge the unit tests pin); a
+    /// single-sample window reports that sample at every percentile.
+    pub fn snapshot(&mut self, stats: &ServeStats) -> WindowSnapshot {
+        let q = &stats.queue_wait_ms
+            [self.queue_cursor.min(stats.queue_wait_ms.len())..];
+        let l = &stats.decode_latency_ms
+            [self.latency_cursor.min(stats.decode_latency_ms.len())..];
+        let snap = WindowSnapshot {
+            served: l.len() as u64,
+            queue_wait_p50_ms: percentile(q, 0.5),
+            queue_wait_p99_ms: percentile(q, 0.99),
+            latency_p50_ms: percentile(l, 0.5),
+            latency_p99_ms: percentile(l, 0.99),
+            decode_steps: stats.decode_steps
+                .saturating_sub(self.decode_steps),
+            admitted_mid_decode: stats.admitted_mid_decode
+                .saturating_sub(self.admitted_mid_decode),
+        };
+        *self = StatsWindow::at(stats);
+        snap
+    }
+}
+
+/// One [`StatsWindow::snapshot`] result: deltas since the previous
+/// poll, never lifetime aggregates.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowSnapshot {
+    /// Requests retired within the window (also the sample count
+    /// behind each percentile below).
+    pub served: u64,
+    /// p50 queue wait in ms over the window's retired requests (0.0
+    /// when none retired).
+    pub queue_wait_p50_ms: f64,
+    /// p99 queue wait in ms over the window's retired requests — the
+    /// controller's hot-signal input.
+    pub queue_wait_p99_ms: f64,
+    /// p50 serving latency in ms over the window's retired requests.
+    pub latency_p50_ms: f64,
+    /// p99 serving latency in ms over the window's retired requests.
+    pub latency_p99_ms: f64,
+    /// Decode iterations executed within the window.
+    pub decode_steps: u64,
+    /// Requests admitted mid-decode within the window.
+    pub admitted_mid_decode: u64,
+}
+
 /// Budget-spectrum serving engine: one set of shared master factor
 /// stores, N zero-copy capacity [`VariantSpec`]s over them, and a
 /// continuous scheduler ([`Self::run`]) that admits requests into a
@@ -315,6 +444,10 @@ pub struct Server<'a> {
     /// Self-speculative decoding state; `None` (the default) decodes
     /// one token per row per step. See [`Self::enable_speculation`].
     speculate: Option<Speculation>,
+    /// Load-adaptive elasticity state; `None` (the default) routes
+    /// every admission at its requested budget. See
+    /// [`ControlPlane::EnableAutoscale`].
+    autoscale: Option<AutoscaleState>,
     batcher: Batcher,
     /// Total requests answered over this server's lifetime.
     pub served: u64,
@@ -334,6 +467,140 @@ pub struct Speculation {
     /// The drafter: a low-cut zero-copy variant sharing the master
     /// factor stores.
     pub drafter: VariantSpec,
+    /// The `draft_frac` speculation was enabled with, retained so the
+    /// drafter can be re-carved — staying `nested_under` the smallest
+    /// admitted variant — whenever the control plane changes the
+    /// spectrum (see [`ControlPlane`]).
+    pub draft_frac: Option<f64>,
+}
+
+/// Runtime bookkeeping for an armed autoscaler: the hysteresis
+/// controller, the stats window it polls, the parameter count new
+/// admissions are currently capped at (`None` = top of the spectrum),
+/// and the parameter counts of variants the controller itself carved
+/// (garbage-collection candidates once traffic moves back up).
+struct AutoscaleState {
+    ctl: Autoscaler,
+    window: StatsWindow,
+    target_pc: Option<usize>,
+    carved: Vec<usize>,
+}
+
+/// The server's unified mutation surface: every way a live server's
+/// serving configuration can change, expressed as one command enum
+/// executed by [`Server::apply`]. The CLI, the tests/benches, and the
+/// in-loop autoscaler drive this same seam, so spectrum invariants
+/// (strictly ascending parameter counts, drafter nesting, byte
+/// accounting) are maintained in exactly one place. The legacy
+/// per-method entry points ([`Server::admit_budget`],
+/// [`Server::retire`], [`Server::enable_speculation`],
+/// [`Server::disable_speculation`]) are thin shims over this enum.
+#[derive(Clone, Debug)]
+pub enum ControlPlane {
+    /// Admit a capacity point at removal fraction `frac` (HPA-planned
+    /// over the master shapes; dedups by parameter count, earliest
+    /// admitted wins). Re-nests the speculation drafter if the
+    /// spectrum grew a new smallest variant.
+    AdmitBudget {
+        /// Fraction of the removable pool to remove, clamped to
+        /// `[0, 0.95]` (0.0 resolves to the full surrogate).
+        frac: f64,
+    },
+    /// Retire an admitted variant (its shared weights stay; only the
+    /// O(blocks) view metadata is freed). At least one variant must
+    /// remain. Re-nests the speculation drafter against the surviving
+    /// spectrum.
+    Retire {
+        /// Index into [`Server::variants`].
+        index: usize,
+    },
+    /// Assemble a zero-copy variant from explicit per-block cuts
+    /// *without* admitting it to the serving spectrum — for drafters
+    /// and equivalence tests, including degenerate rank-0/nnz-0
+    /// edges.
+    CarveVariant {
+        /// Per-block cuts aligned with [`Server::masters`].
+        cuts: Vec<BlockCuts>,
+    },
+    /// Carve a speculation drafter nested under the smallest admitted
+    /// variant, without enabling speculation.
+    CarveDrafter {
+        /// Removal fraction for the drafter's HPA plan; `None` reuses
+        /// the smallest admitted variant's own cuts.
+        draft_frac: Option<f64>,
+    },
+    /// Turn on self-speculative decoding (see
+    /// [`Server::enable_speculation`] for the serving semantics).
+    EnableSpeculation {
+        /// Draft tokens proposed per verify round (k ≥ 1).
+        k: usize,
+        /// Removal fraction for the drafter's cuts; `None` reuses the
+        /// smallest admitted variant's.
+        draft_frac: Option<f64>,
+    },
+    /// Turn self-speculative decoding back off.
+    DisableSpeculation,
+    /// Arm the closed-loop autoscaler: from the next
+    /// [`Server::run`] on, the continuous scheduler polls windowed
+    /// telemetry each iteration and shifts *new* admissions down the
+    /// configured budget ladder under load, back up when idle.
+    /// In-flight rows never migrate. Ignored by the non-incremental
+    /// fallback, which has no per-iteration scheduler to poll from.
+    EnableAutoscale {
+        /// Ladder, thresholds, and hysteresis windows.
+        cfg: AutoscaleConfig,
+    },
+    /// Disarm the autoscaler. Variants it carved stay admitted (they
+    /// are zero-copy metadata; retire them explicitly if unwanted).
+    DisableAutoscale,
+}
+
+/// What a [`ControlPlane`] command did, returned by
+/// [`Server::apply`].
+pub enum ControlEffect {
+    /// An [`ControlPlane::AdmitBudget`] resolved to a spectrum point.
+    Admitted {
+        /// Index of the variant now serving that budget.
+        index: usize,
+        /// Its parameter count (the stable identity routing and
+        /// [`ServeStats::served_by_variant`] key on).
+        params_count: usize,
+        /// True when a new variant was carved; false when the budget
+        /// deduplicated onto an already-admitted point.
+        created: bool,
+    },
+    /// A variant left the spectrum.
+    Retired {
+        /// The retired variant's parameter count.
+        params_count: usize,
+    },
+    /// A variant was assembled without being admitted
+    /// ([`ControlPlane::CarveVariant`] / [`ControlPlane::CarveDrafter`]).
+    Carved(VariantSpec),
+    /// Self-speculative decoding is now on.
+    SpeculationEnabled {
+        /// Draft depth per verify round.
+        k: usize,
+        /// The carved drafter's parameter count.
+        drafter_params: usize,
+    },
+    /// Self-speculative decoding is now off.
+    SpeculationDisabled {
+        /// False when speculation was already off (the command was a
+        /// no-op).
+        was_enabled: bool,
+    },
+    /// The autoscaler is now armed.
+    AutoscaleEnabled {
+        /// Ladder depth (number of throttle levels below the top).
+        levels: usize,
+    },
+    /// The autoscaler is now disarmed.
+    AutoscaleDisabled {
+        /// False when no autoscaler was armed (the command was a
+        /// no-op).
+        was_enabled: bool,
+    },
 }
 
 /// NaN-safe greedy argmax over one logit row. `total_cmp` gives a total
@@ -391,6 +658,7 @@ impl<'a> Server<'a> {
             block_tokens: opts.block_tokens,
             variants: Vec::new(),
             speculate: None,
+            autoscale: None,
             batcher: Batcher::new(opts.max_batch, opts.max_wait),
             served: 0,
             stats: ServeStats::default(),
@@ -399,13 +667,77 @@ impl<'a> Server<'a> {
         // — construction is just the live-server admit path in a loop.
         let full: Vec<BlockCuts> =
             server.shapes.iter().map(BlockCuts::full).collect();
-        let spec = server.variant_from_cuts(full)?;
+        let spec = server.variant_from_cuts(full, Some(0.0))?;
         server.variants.push(spec);
         for frac in budget_fracs {
             server.admit_budget(*frac)?;
         }
         server.refresh_byte_stats();
         Ok(server)
+    }
+
+    /// Execute a [`ControlPlane`] command — the single seam every
+    /// mutation of a live server's serving configuration goes through
+    /// (CLI flags, tests/benches, and the in-loop autoscaler alike).
+    /// Spectrum-changing commands ([`ControlPlane::AdmitBudget`],
+    /// [`ControlPlane::Retire`]) automatically re-carve an active
+    /// speculation drafter so it stays `nested_under` the smallest
+    /// admitted variant; greedy verification makes the swap
+    /// token-invisible mid-run.
+    pub fn apply(&mut self, cmd: ControlPlane) -> Result<ControlEffect> {
+        match cmd {
+            ControlPlane::AdmitBudget { frac } => {
+                let (index, created) = self.admit_budget_inner(frac)?;
+                let params_count = self.variants[index].params_count;
+                if created {
+                    self.renest_drafter()?;
+                }
+                Ok(ControlEffect::Admitted { index, params_count,
+                                             created })
+            }
+            ControlPlane::Retire { index } => {
+                let params_count = self.retire_inner(index)?;
+                self.renest_drafter()?;
+                Ok(ControlEffect::Retired { params_count })
+            }
+            ControlPlane::CarveVariant { cuts } => {
+                Ok(ControlEffect::Carved(
+                    self.variant_from_cuts(cuts, None)?))
+            }
+            ControlPlane::CarveDrafter { draft_frac } => {
+                Ok(ControlEffect::Carved(
+                    self.carve_drafter_inner(draft_frac)?))
+            }
+            ControlPlane::EnableSpeculation { k, draft_frac } => {
+                ensure!(k >= 1,
+                        "speculation depth k must be >= 1, got {k}");
+                let drafter = self.carve_drafter_inner(draft_frac)?;
+                let drafter_params = drafter.params_count;
+                self.speculate = Some(Speculation { k, drafter,
+                                                    draft_frac });
+                Ok(ControlEffect::SpeculationEnabled { k,
+                                                       drafter_params })
+            }
+            ControlPlane::DisableSpeculation => {
+                let was_enabled = self.speculate.take().is_some();
+                Ok(ControlEffect::SpeculationDisabled { was_enabled })
+            }
+            ControlPlane::EnableAutoscale { cfg } => {
+                let ctl = Autoscaler::new(cfg)?;
+                let levels = ctl.max_level();
+                self.autoscale = Some(AutoscaleState {
+                    ctl,
+                    window: StatsWindow::at(&self.stats),
+                    target_pc: None,
+                    carved: Vec::new(),
+                });
+                Ok(ControlEffect::AutoscaleEnabled { levels })
+            }
+            ControlPlane::DisableAutoscale => {
+                let was_enabled = self.autoscale.take().is_some();
+                Ok(ControlEffect::AutoscaleDisabled { was_enabled })
+            }
+        }
     }
 
     /// Carve a new capacity variant on a live server: HPA-plan the
@@ -415,7 +747,22 @@ impl<'a> Server<'a> {
     /// budget; a budget landing on an already-admitted parameter count
     /// returns the existing variant (earliest admitted wins — the same
     /// dedup rule `Server::new` applies).
+    ///
+    /// Thin shim over [`Self::apply`] with
+    /// [`ControlPlane::AdmitBudget`] — prefer the command form in new
+    /// code; this wrapper remains for existing call sites.
     pub fn admit_budget(&mut self, frac: f64) -> Result<usize> {
+        match self.apply(ControlPlane::AdmitBudget { frac })? {
+            ControlEffect::Admitted { index, .. } => Ok(index),
+            _ => bail!("AdmitBudget produced an unexpected effect"),
+        }
+    }
+
+    /// The admit path shared by [`Self::apply`] and `Server::new`:
+    /// returns the variant index plus whether a new variant was carved
+    /// (false = the budget deduplicated onto an existing point).
+    fn admit_budget_inner(&mut self, frac: f64)
+                          -> Result<(usize, bool)> {
         let plan = hpa::plan_frac_shapes(&self.shapes, self.kappa,
                                          frac.clamp(0.0, 0.95))?;
         let cuts = hpa::cuts(&self.shapes, &plan);
@@ -424,40 +771,68 @@ impl<'a> Server<'a> {
         if let Some(i) = self.variants.iter()
             .position(|v| v.params_count == count)
         {
-            return Ok(i);
+            return Ok((i, false));
         }
-        let spec = self.variant_from_cuts(cuts)?;
+        let spec = self.variant_from_cuts(cuts,
+                                          Some(frac.clamp(0.0, 0.95)))?;
         debug_assert_eq!(spec.params_count, count);
         let pos = self.variants
             .partition_point(|v| v.params_count < count);
         self.variants.insert(pos, spec);
         self.refresh_byte_stats();
-        Ok(pos)
+        Ok((pos, true))
     }
 
     /// Retire an admitted variant (scale the spectrum back down). Its
     /// shared weights stay — only the O(blocks) view metadata is
     /// freed. At least one variant must remain.
+    ///
+    /// Thin shim over [`Self::apply`] with [`ControlPlane::Retire`] —
+    /// prefer the command form in new code; this wrapper remains for
+    /// existing call sites.
     pub fn retire(&mut self, vi: usize) -> Result<()> {
+        self.apply(ControlPlane::Retire { index: vi }).map(|_| ())
+    }
+
+    /// The retire path shared by [`Self::apply`]: returns the retired
+    /// variant's parameter count.
+    fn retire_inner(&mut self, vi: usize) -> Result<usize> {
         ensure!(vi < self.variants.len(),
                 "variant {vi} out of range ({} admitted)",
                 self.variants.len());
         ensure!(self.variants.len() > 1,
                 "cannot retire the last admitted variant");
-        self.variants.remove(vi);
+        let spec = self.variants.remove(vi);
         self.refresh_byte_stats();
+        Ok(spec.params_count)
+    }
+
+    /// Re-carve an active speculation drafter against the current
+    /// spectrum, so it stays `nested_under` whatever the control plane
+    /// (or the autoscaler) just admitted or retired. A no-op when
+    /// speculation is off. Safe mid-run: every emitted token is a
+    /// master argmax, so swapping the drafter between rounds cannot
+    /// change any response.
+    fn renest_drafter(&mut self) -> Result<()> {
+        if let Some(spec) = &self.speculate {
+            let draft_frac = spec.draft_frac;
+            let drafter = self.carve_drafter_inner(draft_frac)?;
+            if let Some(spec) = &mut self.speculate {
+                spec.drafter = drafter;
+            }
+        }
         Ok(())
     }
 
     /// Assemble a zero-copy variant from explicit per-block cuts
     /// (aligned with [`Self::masters`]), without admitting it to the
-    /// serving spectrum — the public face of the internal carve used
-    /// by [`Self::admit_budget`], here so drafters (including
-    /// degenerate rank-0/nnz-0 edges) can be built for speculation and
-    /// its tests.
+    /// serving spectrum — the same code path as
+    /// [`ControlPlane::CarveVariant`], kept callable on `&self` so
+    /// drafters (including degenerate rank-0/nnz-0 edges) can be built
+    /// for speculation and its tests.
     pub fn carve_variant(&self, cuts: Vec<BlockCuts>)
                          -> Result<VariantSpec> {
-        self.variant_from_cuts(cuts)
+        self.variant_from_cuts(cuts, None)
     }
 
     /// Carve the speculation drafter: with `draft_frac = Some(f)` the
@@ -468,8 +843,16 @@ impl<'a> Server<'a> {
     /// admitted variant's own cuts are reused (the cheapest capacity
     /// point already serving traffic). Either way the result is prefix
     /// views over the shared master stores — zero extra weight bytes.
+    ///
+    /// Same code path as [`ControlPlane::CarveDrafter`], kept callable
+    /// on `&self` for tests and benches.
     pub fn carve_drafter(&self, draft_frac: Option<f64>)
                          -> Result<VariantSpec> {
+        self.carve_drafter_inner(draft_frac)
+    }
+
+    fn carve_drafter_inner(&self, draft_frac: Option<f64>)
+                           -> Result<VariantSpec> {
         ensure!(!self.variants.is_empty(), "no variants admitted");
         let smallest = &self.variants[0];
         let cuts = match draft_frac {
@@ -483,7 +866,7 @@ impl<'a> Server<'a> {
             }
             None => smallest.cuts.clone(),
         };
-        self.variant_from_cuts(cuts)
+        self.variant_from_cuts(cuts, None)
     }
 
     /// Turn on self-speculative decoding: every continuous-scheduler
@@ -494,18 +877,24 @@ impl<'a> Server<'a> {
     /// only the step count and [`ServeStats::spec`] counters move.
     /// Ignored by the non-incremental fallback ([`Self::run`] routes
     /// it to the batched loop, which cannot draft).
+    ///
+    /// Thin shim over [`Self::apply`] with
+    /// [`ControlPlane::EnableSpeculation`] — prefer the command form
+    /// in new code; this wrapper remains for existing call sites.
     pub fn enable_speculation(&mut self, k: usize,
                               draft_frac: Option<f64>) -> Result<()> {
-        ensure!(k >= 1, "speculation depth k must be >= 1, got {k}");
-        let drafter = self.carve_drafter(draft_frac)?;
-        self.speculate = Some(Speculation { k, drafter });
-        Ok(())
+        self.apply(ControlPlane::EnableSpeculation { k, draft_frac })
+            .map(|_| ())
     }
 
     /// Turn self-speculative decoding back off (the drafter's view
     /// metadata is freed; the shared stores are untouched).
+    ///
+    /// Thin shim over [`Self::apply`] with
+    /// [`ControlPlane::DisableSpeculation`].
     pub fn disable_speculation(&mut self) {
-        self.speculate = None;
+        // Infallible: the command only drops state.
+        let _ = self.apply(ControlPlane::DisableSpeculation);
     }
 
     /// The active speculation state, if enabled.
@@ -563,7 +952,10 @@ impl<'a> Server<'a> {
     /// masters. The placeholder written at master positions before the
     /// view overwrite has an impossible shape, so a bookkeeping bug
     /// fails loudly at `resolve_model` instead of serving garbage.
-    fn variant_from_cuts(&self, cuts: Vec<BlockCuts>)
+    /// `frac` records the removal fraction the cuts were planned at
+    /// (see [`VariantSpec::frac`]); pass `None` for explicit-cut
+    /// carves with no HPA provenance.
+    fn variant_from_cuts(&self, cuts: Vec<BlockCuts>, frac: Option<f64>)
                          -> Result<VariantSpec> {
         ensure!(cuts.len() == self.masters.len(),
                 "{} cuts for {} masters", cuts.len(), self.masters.len());
@@ -586,7 +978,8 @@ impl<'a> Server<'a> {
         // materialization instead of re-densifying per token.
         let dense_cache = (!self.rt.supports_incremental())
             .then(|| params.densify());
-        Ok(VariantSpec { params_count, cuts, params, dense_cache })
+        Ok(VariantSpec { params_count, cuts, frac, params,
+                         dense_cache })
     }
 
     /// Pick the variant a request's budget snaps to: the largest
@@ -608,6 +1001,27 @@ impl<'a> Server<'a> {
             Some(i) => (i, false),
             None => (0, true),
         }
+    }
+
+    /// [`Self::route`] plus the autoscaler's admission cap: when the
+    /// controller is throttling, the routed variant is clamped down to
+    /// the current target parameter count (the cap never *raises* a
+    /// request above its own budget, and never sets the over-budget
+    /// flag — throttling is a serving decision, not a client error).
+    /// Routing always happens at admission time against the *current*
+    /// spectrum, so a queued request whose earlier routing target was
+    /// retired deterministically re-snaps here instead of erroring.
+    fn route_admission(&self, budget_params: usize) -> (usize, bool) {
+        let (vi, over) = self.route(budget_params);
+        let Some(target) = self.autoscale.as_ref()
+            .and_then(|st| st.target_pc)
+        else {
+            return (vi, over);
+        };
+        let cap = self.variants
+            .partition_point(|v| v.params_count <= target)
+            .saturating_sub(1);
+        (vi.min(cap), over)
     }
 
     /// Clamp a prompt the way `generate_*` expects it: keep at least
@@ -842,7 +1256,9 @@ impl<'a> Server<'a> {
     /// the tail-latency failure mode the continuous path removes —
     /// kept because correctness (and the PJRT fallback) do not need
     /// the scheduler, and as the before-side of the comparison in
-    /// EXPERIMENTS.md §"Tail latency under continuous batching".
+    /// EXPERIMENTS.md §"Tail latency under continuous batching". An
+    /// armed autoscaler is ignored here: there is no per-iteration
+    /// scheduler to poll windowed telemetry from.
     fn run_batched(&mut self, rx: Receiver<Request>,
                    tx: Sender<Response>) -> Result<()> {
         while let Some(batch) = self.batcher.next_batch(&rx) {
@@ -883,6 +1299,7 @@ impl<'a> Server<'a> {
                         id: batch[i].id,
                         tokens: toks,
                         served_params: variant.params_count,
+                        served_at_frac: variant.frac.unwrap_or(0.0),
                         over_budget: prepped[i].1,
                         latency_ms,
                         queue_ms: q,
@@ -902,16 +1319,31 @@ impl<'a> Server<'a> {
     /// 1. **Intake** — blocking [`Batcher::next_batch`] when every
     ///    slot is idle (nothing to stall), non-blocking
     ///    [`Batcher::drain_ready`] while rows are decoding.
-    /// 2. **Admit** — fill free slots from the pending queue in
-    ///    arrival order. The wave is grouped by routed variant; each
-    ///    group runs one ragged left-padded `prefill_into` against
-    ///    the shared arena and emits its first token. Groups run in
-    ///    ascending variant order (deterministic stats and
-    ///    interleaving run to run).
-    /// 3. **Decode** — one `decode_rows` per variant with live rows,
-    ///    emitting one token per row.
-    /// 4. **Retire** — rows that hit their budget send their
-    ///    [`Response`], record latency samples, and return their
+    /// 2. **Control** — when an autoscaler is armed
+    ///    ([`ControlPlane::EnableAutoscale`]), poll the windowed
+    ///    telemetry ([`StatsWindow::snapshot`]) plus the live queue
+    ///    depth and arena occupancy, feed the sample to the
+    ///    hysteresis controller, and on a shift decision admit (or
+    ///    release) the admission-cap budget via [`Self::apply`];
+    ///    controller-carved variants whose traffic has fully retired
+    ///    are garbage-collected here too. All spectrum mutation
+    ///    happens at this point in the iteration — admission and
+    ///    decode below see a frozen variant list.
+    /// 3. **Admit** — fill free slots from the pending queue in
+    ///    arrival order. The wave is grouped by routed variant
+    ///    (clamped by the controller's cap — see
+    ///    [`Self::route_admission`]); each group runs one ragged
+    ///    left-padded `prefill_into` against the shared arena and
+    ///    emits its first token. Groups run in ascending variant
+    ///    order (deterministic stats and interleaving run to run).
+    /// 4. **Decode** — one `decode_rows` per variant with live rows,
+    ///    emitting one token per row. Rows are grouped by parameter
+    ///    count, not variant index: indices shift when the controller
+    ///    admits or retires mid-run, parameter counts are the stable
+    ///    identity.
+    /// 5. **Retire** — rows that hit their budget send their
+    ///    [`Response`] (carrying the `served_at_frac` they were
+    ///    admitted at), record latency samples, and return their
     ///    arena blocks to the free list, freeing the slot for the
     ///    next admission wave.
     ///
@@ -925,10 +1357,16 @@ impl<'a> Server<'a> {
                       tx: Sender<Response>) -> Result<()> {
         struct ActiveRow {
             id: u64,
-            /// Routed variant index (stable during `run`: admit/retire
-            /// can't happen while the scheduler borrows the server).
-            vi: usize,
+            /// The routed variant's parameter count — the row's
+            /// *stable* variant identity: the autoscaler can admit or
+            /// retire variants mid-run, shifting indices, but counts
+            /// are unique (strictly-ascending spectrum) and a row's
+            /// variant is never retired while it decodes.
             params_count: usize,
+            /// The removal fraction the row was admitted at — echoed
+            /// into [`Response::served_at_frac`] so the response can
+            /// be replayed solo at the same budget.
+            served_at_frac: f64,
             over: bool,
             /// Token budget: `min(max_new, seq_len − prompt_len)`.
             allowed: usize,
@@ -982,6 +1420,83 @@ impl<'a> Server<'a> {
                 break;
             }
 
+            // ---- control ---------------------------------------
+            // Taken out of `self` for the duration of the step so the
+            // controller can drive `self.apply` without aliasing; all
+            // spectrum mutation happens here, before admission, so
+            // the admit/decode phases below see a frozen variant
+            // list.
+            if let Some(mut st) = self.autoscale.take() {
+                let w = st.window.snapshot(&self.stats);
+                let denom = cache.blocks_contiguous();
+                let occupancy = if denom == 0 {
+                    0.0
+                } else {
+                    cache.blocks_in_use() as f64 / denom as f64
+                };
+                let sample = LoadSample {
+                    queue_depth: pending.len(),
+                    occupancy,
+                    queue_wait_p99_ms: w.queue_wait_p99_ms,
+                    window_served: w.served,
+                };
+                let decision = st.ctl.observe(&sample);
+                if decision != ScaleDecision::Hold {
+                    st.target_pc = match st.ctl.frac() {
+                        None => None,
+                        Some(frac) => {
+                            let effect = self.apply(
+                                ControlPlane::AdmitBudget { frac })?;
+                            let ControlEffect::Admitted {
+                                params_count, created, ..
+                            } = effect else {
+                                bail!("autoscale admit produced an \
+                                       unexpected effect");
+                            };
+                            if created {
+                                st.carved.push(params_count);
+                            }
+                            Some(params_count)
+                        }
+                    };
+                    match decision {
+                        ScaleDecision::Down { level } => {
+                            self.stats.autoscale_downshifts += 1;
+                            self.stats.autoscale_deepest_level = self
+                                .stats.autoscale_deepest_level
+                                .max(level);
+                        }
+                        ScaleDecision::Up { .. } => {
+                            self.stats.autoscale_upshifts += 1;
+                        }
+                        ScaleDecision::Hold => {}
+                    }
+                }
+                self.stats.autoscale_final_level = st.ctl.level();
+                // GC: retire controller-carved budgets that are
+                // neither the current admission target nor serving
+                // any in-flight row. Rows pin their variant by
+                // parameter count, so a carve can only be collected
+                // once its last row has retired — elasticity never
+                // migrates in-flight work.
+                let carved = std::mem::take(&mut st.carved);
+                for pc in carved {
+                    let in_use = active.iter().flatten()
+                        .any(|r| r.params_count == pc);
+                    if in_use || st.target_pc == Some(pc) {
+                        st.carved.push(pc);
+                        continue;
+                    }
+                    if let Some(index) = self.variants.iter()
+                        .position(|v| v.params_count == pc)
+                    {
+                        self.apply(ControlPlane::Retire { index })?;
+                        self.stats.autoscale_retired += 1;
+                    }
+                }
+                self.autoscale = Some(st);
+            }
+
             // ---- admit -----------------------------------------
             // Occupancy *before* this wave: co-admissions from an
             // idle arena are ordinary batching, not mid-decode entry.
@@ -998,7 +1513,8 @@ impl<'a> Server<'a> {
                 let mut groups: BTreeMap<usize, Vec<usize>> =
                     BTreeMap::new();
                 for (i, req) in wave.iter().enumerate() {
-                    let (vi, over) = self.route(req.budget_params);
+                    let (vi, over) =
+                        self.route_admission(req.budget_params);
                     let prompt = self.prepare_prompt(
                         &req.prompt, req.max_new_tokens);
                     groups.entry(vi).or_default().push(i);
@@ -1093,8 +1609,9 @@ impl<'a> Server<'a> {
                         }
                         active[s] = Some(ActiveRow {
                             id: req.id,
-                            vi: *vi,
                             params_count: variant.params_count,
+                            served_at_frac:
+                                variant.frac.unwrap_or(0.0),
                             over: prepped[i].1,
                             allowed,
                             out,
@@ -1110,18 +1627,31 @@ impl<'a> Server<'a> {
             // Snapshot (slot, feed-token) pairs per variant so the
             // decode call needs no second look into `active` — the
             // rows it reads cannot have been retired in between.
+            // Grouped by parameter count, not index: the control step
+            // may have shifted indices, but counts are unique and the
+            // GC never retires a variant with in-flight rows.
             let mut live: BTreeMap<usize, Vec<(usize, i32)>> =
                 BTreeMap::new();
             for (s, slot) in active.iter().enumerate() {
                 if let Some(row) = slot {
                     if row.last >= 0 {
-                        live.entry(row.vi).or_default()
+                        live.entry(row.params_count).or_default()
                             .push((s, row.last));
                     }
                 }
             }
-            for (vi, rows) in &live {
-                let variant = &self.variants[*vi];
+            for (pc, rows) in &live {
+                let Some(vi) = self.variants.iter()
+                    .position(|v| v.params_count == *pc)
+                else {
+                    crate::debug_invariant!(
+                        false,
+                        "in-flight rows reference a retired \
+                         {pc}-param variant");
+                    bail!("in-flight rows reference a retired \
+                           {pc}-param variant");
+                };
+                let variant = &self.variants[vi];
                 if let (Some(sp), Some(dc)) =
                     (&self.speculate, dcache.as_mut())
                 {
@@ -1222,6 +1752,7 @@ impl<'a> Server<'a> {
                     id: row.id,
                     tokens: row.out,
                     served_params: row.params_count,
+                    served_at_frac: row.served_at_frac,
                     over_budget: row.over,
                     latency_ms,
                     queue_ms: row.queue_ms,
@@ -1747,5 +2278,207 @@ mod tests {
         c.rejected = 1;
         assert!(c.consistent());
         assert!((c.acceptance_rate() - 0.75).abs() < 1e-12);
+    }
+
+    /// The windowed stats API must report only what arrived since the
+    /// previous poll, with the same degenerate-sample edges the
+    /// lifetime percentiles pin: empty window → 0 counts and 0.0
+    /// percentiles, single sample → that sample at every p.
+    #[test]
+    fn stats_window_snapshot_deltas_and_edges() {
+        let mut stats = ServeStats::default();
+        let mut w = StatsWindow::new();
+        // Empty window: all zeros, no panic.
+        let snap = w.snapshot(&stats);
+        assert_eq!(snap.served, 0);
+        assert_eq!(snap.queue_wait_p50_ms, 0.0);
+        assert_eq!(snap.queue_wait_p99_ms, 0.0);
+        assert_eq!(snap.latency_p99_ms, 0.0);
+        assert_eq!(snap.decode_steps, 0);
+        assert_eq!(snap.admitted_mid_decode, 0);
+        // Single sample: every percentile is that sample.
+        stats.queue_wait_ms.push(5.0);
+        stats.decode_latency_ms.push(8.0);
+        stats.decode_steps = 3;
+        stats.admitted_mid_decode = 1;
+        let snap = w.snapshot(&stats);
+        assert_eq!(snap.served, 1);
+        assert_eq!(snap.queue_wait_p50_ms, 5.0);
+        assert_eq!(snap.queue_wait_p99_ms, 5.0);
+        assert_eq!(snap.latency_p50_ms, 8.0);
+        assert_eq!(snap.latency_p99_ms, 8.0);
+        assert_eq!(snap.decode_steps, 3);
+        assert_eq!(snap.admitted_mid_decode, 1);
+        // The next window sees only what arrived after the poll — a
+        // huge lifetime tail must not leak in.
+        stats.queue_wait_ms.push(100.0);
+        stats.decode_latency_ms.push(1.0);
+        stats.decode_latency_ms.push(2.0);
+        stats.decode_steps = 5;
+        let snap = w.snapshot(&stats);
+        assert_eq!(snap.served, 2);
+        assert_eq!(snap.queue_wait_p50_ms, 100.0,
+                   "the earlier 5.0 sample leaked into the window");
+        assert_eq!(snap.latency_p99_ms, 2.0);
+        assert_eq!(snap.decode_steps, 2);
+        // Draining twice in a row reads an empty window.
+        assert_eq!(w.snapshot(&stats).served, 0);
+        // `at()` opens at the current end: history is invisible.
+        let snap = StatsWindow::at(&stats).snapshot(&stats);
+        assert_eq!(snap.served, 0);
+        assert_eq!(snap.queue_wait_p99_ms, 0.0);
+    }
+
+    /// Regression for the retire-vs-queued-request race: a request
+    /// targeting a capacity point that is retired before the
+    /// scheduler admits it must deterministically re-snap against the
+    /// surviving spectrum — not error, not silently over-serve.
+    #[test]
+    fn queued_request_reroutes_when_its_variant_is_retired() {
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[0.3, 0.6], 2);
+        assert_eq!(server.variants.len(), 3);
+        let mid_pc = server.variants[1].params_count;
+        let small_pc = server.variants[0].params_count;
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        // The request's budget lands exactly on the middle point...
+        req_tx.send(Request::new(0, vec![1, 2, 3], 3, mid_pc))
+            .unwrap();
+        drop(req_tx);
+        // ...which is retired while the request is still queued.
+        match server.apply(ControlPlane::Retire { index: 1 }).unwrap()
+        {
+            ControlEffect::Retired { params_count } => {
+                assert_eq!(params_count, mid_pc);
+            }
+            _ => panic!("Retire must return Retired"),
+        }
+        server.run(req_rx, resp_tx).unwrap();
+        let got: Vec<Response> = resp_rx.iter().collect();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].served_params, small_pc,
+                   "admission must re-route to the surviving point");
+        assert!(!got[0].over_budget,
+                "a surviving smaller point fits the budget");
+        assert_eq!(got[0].served_at_frac, 0.6);
+        // The replay contract: solo decode at the recorded fraction
+        // reproduces the tokens bit-exactly.
+        let vi = server.admit_budget(got[0].served_at_frac).unwrap();
+        let p = server.prepare_prompt(&[1, 2, 3], 3);
+        let solo = server
+            .generate_cached(&server.variants[vi], &[p], &[3])
+            .unwrap();
+        assert_eq!(got[0].tokens, solo[0]);
+    }
+
+    /// The legacy wrappers are thin shims: driving the same mutations
+    /// through [`Server::apply`] and through the named methods must
+    /// produce identical spectra, and every command must report its
+    /// effect faithfully (including dedup and no-op cases).
+    #[test]
+    fn control_plane_apply_matches_legacy_wrappers() {
+        let rt = Runtime::native();
+        let mut a = tiny_server(&rt, &[0.6], 4);
+        let mut b = tiny_server(&rt, &[0.6], 4);
+        let via_cmd = match a
+            .apply(ControlPlane::AdmitBudget { frac: 0.3 })
+            .unwrap()
+        {
+            ControlEffect::Admitted { index, params_count,
+                                      created } => {
+                assert!(created, "0.3 must carve a new point");
+                assert_eq!(a.variants[index].params_count,
+                           params_count);
+                assert_eq!(a.variants[index].frac, Some(0.3));
+                index
+            }
+            _ => panic!("AdmitBudget must return Admitted"),
+        };
+        let via_fn = b.admit_budget(0.3).unwrap();
+        assert_eq!(via_cmd, via_fn);
+        assert_eq!(a.variants[via_cmd].cuts, b.variants[via_fn].cuts);
+        // A duplicate admit dedups and says so.
+        match a.apply(ControlPlane::AdmitBudget { frac: 0.3 })
+            .unwrap()
+        {
+            ControlEffect::Admitted { index, created, .. } => {
+                assert_eq!(index, via_cmd);
+                assert!(!created, "duplicate admit must dedup");
+            }
+            _ => panic!("AdmitBudget must return Admitted"),
+        }
+        a.apply(ControlPlane::Retire { index: via_cmd }).unwrap();
+        b.retire(via_fn).unwrap();
+        assert_eq!(a.variants.len(), b.variants.len());
+        // Speculation round-trip through the command surface.
+        match a.apply(ControlPlane::EnableSpeculation {
+                k: 2, draft_frac: None })
+            .unwrap()
+        {
+            ControlEffect::SpeculationEnabled { k,
+                                                drafter_params } => {
+                assert_eq!(k, 2);
+                assert_eq!(drafter_params,
+                           a.variants[0].params_count,
+                           "draft_frac None reuses the smallest");
+            }
+            _ => panic!("EnableSpeculation must report itself"),
+        }
+        match a.apply(ControlPlane::DisableSpeculation).unwrap() {
+            ControlEffect::SpeculationDisabled { was_enabled } => {
+                assert!(was_enabled);
+            }
+            _ => panic!("DisableSpeculation must report itself"),
+        }
+        // Autoscale arm/disarm, including the idempotent no-op.
+        match a.apply(ControlPlane::EnableAutoscale {
+                cfg: AutoscaleConfig::default() })
+            .unwrap()
+        {
+            ControlEffect::AutoscaleEnabled { levels } => {
+                assert_eq!(levels,
+                           AutoscaleConfig::default().ladder.len());
+            }
+            _ => panic!("EnableAutoscale must report itself"),
+        }
+        match a.apply(ControlPlane::DisableAutoscale).unwrap() {
+            ControlEffect::AutoscaleDisabled { was_enabled } => {
+                assert!(was_enabled);
+            }
+            _ => panic!("DisableAutoscale must report itself"),
+        }
+        match a.apply(ControlPlane::DisableAutoscale).unwrap() {
+            ControlEffect::AutoscaleDisabled { was_enabled } => {
+                assert!(!was_enabled, "second disarm is a no-op");
+            }
+            _ => panic!("DisableAutoscale must report itself"),
+        }
+    }
+
+    /// Spectrum changes must drag the speculation drafter along: the
+    /// drafter stays `nested_under` the *current* smallest admitted
+    /// variant across admits and retires (safe mid-run because every
+    /// emitted token is a master argmax).
+    #[test]
+    fn spectrum_changes_renest_the_drafter() {
+        let rt = Runtime::native();
+        let mut server = tiny_server(&rt, &[0.3], 4);
+        server.enable_speculation(2, None).unwrap();
+        let before = server.speculation().unwrap().drafter.cuts
+            .clone();
+        assert_eq!(before, server.variants[0].cuts);
+        // A deeper cut becomes the new smallest; the drafter follows.
+        let vi = server.admit_budget(0.7).unwrap();
+        assert_eq!(vi, 0, "0.7 removal must be the new smallest");
+        let after = server.speculation().unwrap().drafter.cuts
+            .clone();
+        assert_eq!(after, server.variants[0].cuts);
+        assert_ne!(after, before,
+                   "the drafter must have been re-carved");
+        // Retiring the new point re-nests back onto the original.
+        server.retire(0).unwrap();
+        assert_eq!(server.speculation().unwrap().drafter.cuts,
+                   before);
     }
 }

@@ -39,6 +39,15 @@
 //! counters satisfy `drafted == accepted + rejected` and
 //! `rollback = rejected − 1` on mismatch rounds (`0` on full-accept
 //! rounds), which the `--speculate` CI smoke asserts.
+//!
+//! Because every emitted token is a master argmax, the drafter may be
+//! **swapped between rounds** without affecting any output: when the
+//! control plane (or the in-loop autoscaler) admits or retires a
+//! budget, `Server::apply` re-carves the drafter `nested_under` the
+//! new smallest admitted variant, and the next round simply drafts
+//! with the new view. Stale drafter-KV entries written by the old
+//! view can at worst lower the acceptance rate for a few rounds —
+//! never change a token.
 
 use anyhow::{ensure, Result};
 

@@ -1,0 +1,204 @@
+//! Closed-loop elasticity, end to end: deterministic burst/recovery
+//! traces through the continuous scheduler with the autoscaler armed.
+//!
+//! The burst test pins the whole control loop in one run: a long
+//! request admitted at the full budget before the controller can
+//! shift, a queue of short followers that forces a downshift, their
+//! admission onto the controller-carved budget, an upshift once the
+//! queue drains (while the long request still decodes), mid-run
+//! garbage collection of the carve — and, throughout, the elasticity
+//! contract: zero drops, in-flight rows never migrate, and every
+//! response is token-identical to a solo run at its recorded
+//! `served_at_frac`.
+//!
+//! Wall-clock signals (the windowed queue-wait threshold) are
+//! disabled so the trace is driven by queue depth and occupancy
+//! alone — fully deterministic on any machine.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use salaad::config::ModelConfig;
+use salaad::runtime::Runtime;
+use salaad::serve::{AutoscaleConfig, ControlEffect, ControlPlane,
+                    Request, Response, Server, ServerOptions};
+use salaad::slr::SlrBlock;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig::from_geometry("tiny", 32, 8, 1, 2, 16, 24, 2)
+}
+
+/// Synthetic developed blocks over the attention projections so a
+/// Server can be built without running training (the idiom of the
+/// in-crate server tests).
+fn tiny_server(rt: &Runtime) -> Server<'_> {
+    let cfg = tiny_cfg();
+    let params = cfg.init_params(0);
+    let mut blocks = Vec::new();
+    let mut idx = Vec::new();
+    for name in cfg.blocks(true, false) {
+        let shape = cfg.shape_of(&name).unwrap().to_vec();
+        blocks.push(SlrBlock::random(&name, shape[0], shape[1], 3,
+                                     0.1, 0));
+        idx.push(cfg.param_index(&name).unwrap());
+    }
+    // Full-only spectrum: every capacity point below the surrogate is
+    // the controller's to carve (and to garbage-collect).
+    Server::new(rt, cfg, &params, &blocks, &idx, &[],
+                ServerOptions {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(2),
+                    kappa: 0.7,
+                    block_tokens: 4,
+                })
+        .unwrap()
+}
+
+/// Queue-depth-driven config: hot at depth ≥ 2, wait signal disabled,
+/// calm while only the long row's ≤0.5 occupancy remains.
+fn depth_driven_cfg() -> AutoscaleConfig {
+    AutoscaleConfig {
+        ladder: vec![0.5],
+        high_queue_depth: 2,
+        high_occupancy: 0.95,
+        high_queue_wait_ms: 1e9,
+        low_occupancy: 0.6,
+        down_window: 2,
+        up_window: 2,
+        cooldown: 2,
+    }
+}
+
+#[test]
+fn burst_downshifts_recovers_and_stays_token_identical() {
+    let rt = Runtime::native();
+    let mut server = tiny_server(&rt);
+    assert_eq!(server.variants.len(), 1, "full-only spectrum");
+    let full_pc = server.variants[0].params_count;
+    match server
+        .apply(ControlPlane::EnableAutoscale {
+            cfg: depth_driven_cfg() })
+        .unwrap()
+    {
+        ControlEffect::AutoscaleEnabled { levels } => {
+            assert_eq!(levels, 1);
+        }
+        _ => panic!("EnableAutoscale must report itself"),
+    }
+
+    // All pre-queued: no sleeps, fully deterministic. With 2 slots
+    // and down_window 2, r0 (long) and r1 admit at the full budget on
+    // the first poll; the queued followers keep depth ≥ 2 for two
+    // polls, forcing a downshift before any of them is admitted.
+    let sched: [(u64, Vec<u32>, usize); 5] = [(0, vec![1, 2, 3], 20),
+                                              (1, vec![4, 5, 6], 2),
+                                              (2, vec![2, 3], 2),
+                                              (3, vec![5, 1, 2], 2),
+                                              (4, vec![3, 4], 2)];
+    let (req_tx, req_rx) = channel();
+    let (resp_tx, resp_rx) = channel();
+    for (id, prompt, max_new) in &sched {
+        req_tx.send(Request::new(*id, prompt.clone(), *max_new, 0))
+            .unwrap();
+    }
+    drop(req_tx);
+    server.run(req_rx, resp_tx).unwrap();
+    let mut got: Vec<Response> = resp_rx.iter().collect();
+    got.sort_by_key(|r| r.id);
+    assert_eq!(got.len(), 5, "every request must round-trip");
+
+    // The control-loop trace: one downshift under the burst, one
+    // upshift in the idle tail (r0 still decoding alone at ≤0.5
+    // occupancy), the carve garbage-collected mid-run once its last
+    // rider retired, level 0 at drain.
+    let s = &server.stats;
+    assert_eq!(s.autoscale_downshifts, 1,
+               "the queued followers must force exactly one downshift");
+    assert_eq!(s.autoscale_upshifts, 1,
+               "the idle tail must recover the controller");
+    assert_eq!(s.autoscale_final_level, 0);
+    assert_eq!(s.autoscale_deepest_level, 1);
+    assert_eq!(s.autoscale_retired, 1,
+               "the carve must be GC'd while r0 still decodes");
+    assert_eq!(s.dropped_responses, 0);
+
+    // Admission routing: the first wave rode the full surrogate (the
+    // controller had not shifted yet); every follower was throttled
+    // onto the 0.5 carve. Throttling never sets over_budget — it is
+    // a serving decision, not a client error.
+    assert_eq!(got[0].served_params, full_pc);
+    assert_eq!(got[0].served_at_frac, 0.0);
+    assert_eq!(got[1].served_params, full_pc);
+    for r in &got[2..] {
+        assert_eq!(r.served_at_frac, 0.5,
+                   "follower {} must ride the throttled budget", r.id);
+        assert_ne!(r.served_params, full_pc);
+    }
+    assert!(got.iter().all(|r| !r.over_budget));
+    // The GC really removed the carve: only the full surrogate
+    // survives the run.
+    assert_eq!(server.variants.len(), 1,
+               "the controller must clean up after itself");
+
+    // The replay contract: even though the 0.5 carve is gone,
+    // re-admitting each recorded fraction rebuilds identical cuts
+    // (HPA planning is deterministic) and a solo decode reproduces
+    // every response's tokens bit-exactly.
+    for r in &got {
+        let vi = server.admit_budget(r.served_at_frac).unwrap();
+        let (_, prompt, max_new) = &sched[r.id as usize];
+        let p = server.prepare_prompt(prompt, *max_new);
+        let solo = server
+            .generate_cached(&server.variants[vi], &[p], &[*max_new])
+            .unwrap();
+        assert_eq!(r.tokens, solo[0],
+                   "request {} at frac {} diverged from its solo run",
+                   r.id, r.served_at_frac);
+    }
+}
+
+#[test]
+fn idle_autoscaler_is_invisible_to_scheduling() {
+    // A controller that never crosses a threshold must be a pure
+    // observer: same variants, same routing, same tokens as an
+    // unarmed server over the identical schedule.
+    let rt = Runtime::native();
+    let mut plain = tiny_server(&rt);
+    let mut armed = tiny_server(&rt);
+    armed
+        .apply(ControlPlane::EnableAutoscale {
+            cfg: AutoscaleConfig {
+                high_queue_depth: usize::MAX,
+                high_queue_wait_ms: f64::INFINITY,
+                ..AutoscaleConfig::default()
+            },
+        })
+        .unwrap();
+    let serve = |server: &mut Server<'_>| -> Vec<Response> {
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        for id in 0..4u64 {
+            let prompt = vec![1 + id as u32, 2, 3];
+            req_tx.send(Request::new(id, prompt, 3, 0)).unwrap();
+        }
+        drop(req_tx);
+        server.run(req_rx, resp_tx).unwrap();
+        let mut got: Vec<Response> = resp_rx.iter().collect();
+        got.sort_by_key(|r| r.id);
+        got
+    };
+    let want = serve(&mut plain);
+    let got = serve(&mut armed);
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.tokens, w.tokens,
+                   "an idle controller changed request {}'s tokens",
+                   g.id);
+        assert_eq!(g.served_params, w.served_params);
+        assert_eq!(g.served_at_frac, w.served_at_frac);
+    }
+    assert_eq!(armed.stats.autoscale_downshifts, 0);
+    assert_eq!(armed.stats.autoscale_upshifts, 0);
+    assert_eq!(armed.stats.autoscale_final_level, 0);
+    assert_eq!(armed.variants.len(), plain.variants.len());
+}
