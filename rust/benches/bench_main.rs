@@ -32,7 +32,7 @@ use salaad::runtime::{ModelParams, PackedPrompts, Runtime};
 use salaad::serve::{AutoscaleConfig, ControlPlane, Request, Server,
                     ServerOptions};
 use salaad::slr::prox::{soft_threshold_assign, svt};
-use salaad::slr::{hpa, rpca::rpca, SlrBlock};
+use salaad::slr::{hpa, rpca::rpca, BcsrMatrix, CsrMatrix, SlrBlock};
 use salaad::tensor::Tensor;
 use salaad::util::Rng;
 
@@ -179,6 +179,38 @@ fn main() {
         });
         b.bench("gemm/lmhead_nt_128x192x1024", || {
             std::hint::black_box(matmul_nt(&x, &head));
+        });
+    }
+
+    // ---------------- sparse-residual kernels ----------------
+    // CSR gather vs the 8-wide panel (BCSR) layout over the same
+    // residual, at a low and a mid density, plus the rank-masked
+    // mid-spectrum cut (the elastic-serving hot path). Before/after
+    // numbers recorded in EXPERIMENTS.md §Sparse-residual kernels.
+    for dpct in [10usize, 60] {
+        let d = dpct as f64 / 100.0;
+        let mut nz = 0usize;
+        let mut s = Tensor::zeros(&[256, 256]);
+        for v in s.data.iter_mut() {
+            if rng.next_f64() < d {
+                *v = (rng.next_normal() as f32).max(0.05);
+                nz += 1;
+            }
+        }
+        let csr = CsrMatrix::from_dense(&s, 0.0);
+        assert_eq!(csr.nnz(), nz);
+        let mut ranks: Vec<u32> = (0..nz as u32).collect();
+        rng.shuffle(&mut ranks);
+        let bcsr = BcsrMatrix::from_csr(&csr, &ranks);
+        let x = Tensor::randn(&[64, 256], &mut rng, 1.0);
+        b.bench(&format!("slr/spmm_csr_256_d{dpct}"), || {
+            std::hint::black_box(csr.spmm_t(&x));
+        });
+        b.bench(&format!("slr/spmm_bcsr_256_d{dpct}"), || {
+            std::hint::black_box(bcsr.spmm_t(&x));
+        });
+        b.bench(&format!("slr/spmm_bcsr_cut50_256_d{dpct}"), || {
+            std::hint::black_box(bcsr.spmm_t_cut(&x, nz / 2));
         });
     }
     {

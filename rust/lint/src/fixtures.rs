@@ -194,6 +194,26 @@ pub const FIXTURES: &[Fixture] = &[
         expect: &[],
     },
     Fixture {
+        name: "unsafe_simd_module_is_whitelisted",
+        rel: "linalg/simd.rs",
+        src: "//! Fixture: the AVX2 microkernel module is the second\n\
+              //! sanctioned unsafe site.\n\
+              fn f(p: *const f32) -> f32 {\n\
+              \x20   unsafe { *p }\n\
+              }\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "unsafe_elsewhere_in_linalg_still_fires",
+        rel: "linalg/matmul.rs",
+        src: "//! Fixture: the whitelist is the simd module, not the\n\
+              //! linalg directory.\n\
+              fn f(p: *const f32) -> f32 {\n\
+              \x20   unsafe { *p }\n\
+              }\n",
+        expect: &[("unsafe-scope", 4)],
+    },
+    Fixture {
         name: "lock_mutex_of_mut_fires",
         rel: "util/fake.rs",
         src: "//! Fixture.\n\

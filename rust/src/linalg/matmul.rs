@@ -42,7 +42,19 @@
 //! latency input-dependent (and mispredicts on dense inputs — see
 //! EXPERIMENTS.md §Perf). Structurally sparse operands take the
 //! `slr::sparse` CSR path instead.
+//!
+//! # SIMD dispatch
+//!
+//! Each public microkernel is a thin dispatcher over a process-wide
+//! rung resolved once by [`simd::level`] (`SALAAD_SIMD` override,
+//! CPUID detection): the `*_scalar` bodies below are the normative
+//! oracles, and the AVX2 rung in [`simd`](super::simd) reproduces
+//! their accumulation order bit for bit (separate mul+add, lane-order
+//! horizontal sums — see that module's docs for the argument). The
+//! opt-in FMA rung is the only one allowed to differ, within a
+//! documented tolerance.
 
+use super::simd;
 use crate::tensor::Tensor;
 
 /// Threshold below which threading isn't worth the spawn cost.
@@ -183,8 +195,25 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
 /// lane count, the lane-summation order or the tail handling and the
 /// cached-decode equivalence gates in `rust/tests/serve_factored.rs`
 /// break — re-pin the goldens if you ever must.
+///
+/// Dispatches to the process-wide SIMD rung ([`simd::level`]); the
+/// AVX2 body is pinned bitwise-equal to [`dot8_scalar`], so the
+/// contract is rung-independent everywhere except the opt-in FMA
+/// rung.
 #[inline]
 pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    match simd::level() {
+        simd::SimdLevel::Scalar => dot8_scalar(a, b),
+        simd::SimdLevel::Avx2 => simd::dot8_avx2(a, b),
+        simd::SimdLevel::Avx2Fma => simd::dot8_fma(a, b),
+    }
+}
+
+/// The normative scalar [`dot8`] body — 8 independent lane
+/// accumulators, lanes summed sequentially, scalar tail appended
+/// last. Exported as the bitwise oracle for the SIMD rungs.
+#[inline]
+pub fn dot8_scalar(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = [0.0f32; 8];
     let chunks = a.len() / 8;
     for c in 0..chunks {
@@ -206,6 +235,18 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
 /// the [`matmul_nt`] row-pair microkernel.
 #[inline]
 fn dot8x2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
+    match simd::level() {
+        simd::SimdLevel::Scalar => dot8x2_scalar(a0, a1, b),
+        simd::SimdLevel::Avx2 => simd::dot8x2_avx2(a0, a1, b),
+        simd::SimdLevel::Avx2Fma => simd::dot8x2_fma(a0, a1, b),
+    }
+}
+
+/// Normative scalar [`dot8x2`] body (bitwise oracle for the SIMD
+/// rungs).
+#[inline]
+pub(crate) fn dot8x2_scalar(a0: &[f32], a1: &[f32], b: &[f32])
+                            -> (f32, f32) {
     let mut acc0 = [0.0f32; 8];
     let mut acc1 = [0.0f32; 8];
     let chunks = b.len() / 8;
@@ -232,8 +273,21 @@ fn dot8x2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
 /// attention in `runtime::native` accumulates `probs · V` with it,
 /// keeping the no-materialization path bit-identical to the
 /// materialized training path.
+///
+/// Dispatches to the process-wide SIMD rung like [`dot8`].
 #[inline]
 pub fn axpy8(dst: &mut [f32], src: &[f32], a: f32) {
+    match simd::level() {
+        simd::SimdLevel::Scalar => axpy8_scalar(dst, src, a),
+        simd::SimdLevel::Avx2 => simd::axpy8_avx2(dst, src, a),
+        simd::SimdLevel::Avx2Fma => simd::axpy8_fma(dst, src, a),
+    }
+}
+
+/// The normative scalar [`axpy8`] body (bitwise oracle for the SIMD
+/// rungs).
+#[inline]
+pub fn axpy8_scalar(dst: &mut [f32], src: &[f32], a: f32) {
     debug_assert_eq!(dst.len(), src.len());
     let chunks = dst.len() / 8;
     for c in 0..chunks {
@@ -254,6 +308,18 @@ pub fn axpy8(dst: &mut [f32], src: &[f32], a: f32) {
 /// instead of four.
 #[inline]
 fn axpy8x4(dst: &mut [f32], b: [&[f32]; 4], a: [f32; 4]) {
+    match simd::level() {
+        simd::SimdLevel::Scalar => axpy8x4_scalar(dst, b, a),
+        simd::SimdLevel::Avx2 => simd::axpy8x4_avx2(dst, b, a),
+        simd::SimdLevel::Avx2Fma => simd::axpy8x4_fma(dst, b, a),
+    }
+}
+
+/// Normative scalar [`axpy8x4`] body (bitwise oracle for the SIMD
+/// rungs).
+#[inline]
+pub(crate) fn axpy8x4_scalar(dst: &mut [f32], b: [&[f32]; 4],
+                             a: [f32; 4]) {
     let chunks = dst.len() / 8;
     for c in 0..chunks {
         let base = c * 8;

@@ -12,16 +12,22 @@
 //! - [`svd`](mod@svd): one-sided Jacobi (exact, f64 accumulation),
 //! - [`rand_svd`](mod@rand_svd): randomized subspace SVD (the fast
 //!   path used by the coordinator when only the top of the spectrum is
-//!   needed, with a certified escape hatch back to Jacobi).
+//!   needed, with a certified escape hatch back to Jacobi),
+//! - [`simd`](mod@simd): runtime-dispatched AVX2 rungs for the 8-wide
+//!   microkernels (bit-identical to scalar by construction; `SALAAD_SIMD`
+//!   overrides the process-wide level).
 
 #![warn(missing_docs)]
 
 pub mod matmul;
 pub mod qr;
+pub mod simd;
 pub mod svd;
 pub mod rand_svd;
 
-pub use matmul::{axpy8, dot8, matmul, matmul_nt, matmul_tn};
+pub use matmul::{axpy8, axpy8_scalar, dot8, dot8_scalar, matmul,
+                 matmul_nt, matmul_tn};
+pub use simd::{kernel_path, SimdLevel};
 pub use qr::qr_thin;
 pub use svd::{jacobi_svd, Svd};
 pub use rand_svd::rand_svd;

@@ -1,0 +1,725 @@
+//! Runtime-dispatched SIMD rungs for the 8-wide microkernel family.
+//!
+//! The scalar kernels in [`matmul`](super::matmul) are the *normative*
+//! definitions — [`dot8`](super::dot8) is the repo's accumulation-order
+//! contract. This module adds explicit `std::arch` AVX2 bodies for the
+//! same four microkernels (`dot8`, `dot8x2`, `axpy8`, `axpy8x4`) plus
+//! the [`mul8`] block helper used by the BCSR residual kernel, and a
+//! process-wide dispatch level resolved **once** (cached in a
+//! [`OnceLock`]) from CPUID detection and the `SALAAD_SIMD` override:
+//!
+//! | `SALAAD_SIMD` | detected          | level                        |
+//! |---------------|-------------------|------------------------------|
+//! | unset         | AVX2              | `Avx2` (never auto-FMA)      |
+//! | unset         | no AVX2 / non-x86 | `Scalar`                     |
+//! | `off`         | —                 | `Scalar`                     |
+//! | `avx2`        | AVX2 else —       | `Avx2` else `Scalar`         |
+//! | `fma`         | AVX2+FMA else …   | `Avx2Fma`, degrading in turn |
+//! | anything else | —                 | `Scalar` (fail conservative) |
+//!
+//! # Why the AVX2 rung is bit-identical to scalar
+//!
+//! The scalar [`dot8`](super::dot8) keeps **8 independent lane
+//! accumulators**, each updated as `round(round(aᵢ·bᵢ) + accₗ)` per
+//! 8-wide chunk, then sums the lanes **sequentially in lane order**
+//! starting from `0.0` and appends a scalar tail. One AVX2 vector *is*
+//! that lane bank: `_mm256_add_ps(acc, _mm256_mul_ps(a, b))` performs
+//! the identical two IEEE-754 roundings per lane, and the horizontal
+//! reduction here stores the vector and adds the 8 lanes in the same
+//! ascending order (no `hadd` tree, which would re-associate). Tails
+//! stay scalar. The same argument covers `axpy8`/`axpy8x4` (one
+//! rounding step per element, ascending `k`) and `mul8` (pure
+//! elementwise). Hence every AVX2 kernel is pinned *bitwise* equal to
+//! its scalar oracle (`avx2_*_bitwise_equals_scalar` tests below) and
+//! the PR 3 contract, PR 5 view-equality and PR 8 speculation-identity
+//! gates survive unchanged.
+//!
+//! The **FMA rung is different**: `_mm256_fmadd_ps` contracts the
+//! multiply-add into one rounding, so results drift by ~1 ulp per
+//! accumulation step relative to the contract. It is therefore *never*
+//! auto-selected — only `SALAAD_SIMD=fma` opts in, the documented
+//! tolerance is ~`k · ulp` per `k`-length dot product (tested at
+//! relative 1e-5 on unit-variance inputs), and the bit-exactness
+//! gates do not hold under it.
+//!
+//! **Unsafe whitelist.** Alongside `runtime/literal.rs`, this module
+//! is on salaad-lint's `unsafe-scope` whitelist and locally allows
+//! `unsafe_code`: `#[target_feature]` kernels are `unsafe fn` by
+//! construction and the `loadu`/`storeu` intrinsics take raw
+//! pointers. The unsafe surface is the `x86` submodule plus the one
+//! `unsafe { x86::… }` call site inside each safe wrapper below —
+//! every such call is gated on `is_x86_feature_detected!` (falling
+//! back to the scalar oracle otherwise), so no unsafe precondition
+//! escapes this file.
+
+use std::sync::OnceLock;
+
+/// Which microkernel rung the process dispatches to (resolved once;
+/// see the module docs for the selection table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Normative scalar kernels (compiler-autovectorized).
+    Scalar,
+    /// Explicit AVX2, separate mul+add — bit-identical to scalar.
+    Avx2,
+    /// AVX2 + FMA contraction — opt-in only, documented tolerance.
+    Avx2Fma,
+}
+
+static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+
+/// The process-wide dispatch level, resolved on first call from
+/// `SALAAD_SIMD` and CPUID detection and cached for the process
+/// lifetime (flipping the env var afterwards has no effect — tests
+/// that need the scalar path set it before startup, as the CI
+/// `SALAAD_SIMD=off` leg does).
+#[inline]
+pub fn level() -> SimdLevel {
+    *LEVEL.get_or_init(|| {
+        let req = std::env::var("SALAAD_SIMD").ok();
+        pick_level(req.as_deref(), avx2_detected(), fma_detected())
+    })
+}
+
+/// Human-readable dispatch tag (`"scalar"` / `"avx2"` / `"avx2+fma"`)
+/// surfaced by `ServeStats::kernel_path` and `Backend::describe`.
+pub fn kernel_path() -> &'static str {
+    match level() {
+        SimdLevel::Scalar => "scalar",
+        SimdLevel::Avx2 => "avx2",
+        SimdLevel::Avx2Fma => "avx2+fma",
+    }
+}
+
+/// Pure selection policy (split from [`level`] so it is testable
+/// without mutating process env): `req` is the raw `SALAAD_SIMD`
+/// value, `avx2`/`fma` the detection results. Unknown values degrade
+/// to `Scalar` — a typo must never silently pick a faster rung.
+fn pick_level(req: Option<&str>, avx2: bool, fma: bool) -> SimdLevel {
+    let req = req.map(|s| s.trim().to_ascii_lowercase());
+    match req.as_deref() {
+        None | Some("") => {
+            // Auto: AVX2 when available, never FMA (it breaks the
+            // bit-exactness contract; see module docs).
+            if avx2 { SimdLevel::Avx2 } else { SimdLevel::Scalar }
+        }
+        Some("off" | "scalar") => SimdLevel::Scalar,
+        Some("avx2") => {
+            if avx2 { SimdLevel::Avx2 } else { SimdLevel::Scalar }
+        }
+        Some("fma") => {
+            if avx2 && fma {
+                SimdLevel::Avx2Fma
+            } else if avx2 {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+        Some(_) => SimdLevel::Scalar,
+    }
+}
+
+#[inline]
+fn avx2_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[inline]
+fn fma_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// Safe dispatch wrappers. Each re-checks detection (a cached atomic
+// load inside `is_x86_feature_detected!`) before entering the
+// `#[target_feature]` body, so they are sound to call on any CPU and
+// on non-x86 targets they compile down to the scalar oracle.
+// ---------------------------------------------------------------------
+
+/// AVX2 [`dot8`](super::dot8): bit-identical to the scalar contract
+/// (module docs). Falls back to scalar when AVX2 is unavailable.
+#[inline]
+#[allow(unsafe_code)]
+pub fn dot8_avx2(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() {
+        // SAFETY: AVX2 support was just detected on this CPU.
+        return unsafe { x86::dot8_avx2(a, b) };
+    }
+    super::matmul::dot8_scalar(a, b)
+}
+
+/// FMA [`dot8`](super::dot8): one contracted rounding per lane step —
+/// NOT bit-identical to scalar (opt-in rung, ~1 ulp/step drift).
+#[inline]
+#[allow(unsafe_code)]
+pub fn dot8_fma(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() && fma_detected() {
+        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        return unsafe { x86::dot8_fma(a, b) };
+    }
+    super::matmul::dot8_scalar(a, b)
+}
+
+/// AVX2 paired dot product sharing one streamed `b` row; each result
+/// bit-identical to the matching [`dot8_avx2`] call.
+#[inline]
+#[allow(unsafe_code)]
+pub(crate) fn dot8x2_avx2(a0: &[f32], a1: &[f32], b: &[f32])
+                          -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() {
+        // SAFETY: AVX2 support was just detected on this CPU.
+        return unsafe { x86::dot8x2_avx2(a0, a1, b) };
+    }
+    super::matmul::dot8x2_scalar(a0, a1, b)
+}
+
+/// FMA paired dot product (opt-in rung; see [`dot8_fma`]).
+#[inline]
+#[allow(unsafe_code)]
+pub(crate) fn dot8x2_fma(a0: &[f32], a1: &[f32], b: &[f32])
+                         -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() && fma_detected() {
+        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        return unsafe { x86::dot8x2_fma(a0, a1, b) };
+    }
+    super::matmul::dot8x2_scalar(a0, a1, b)
+}
+
+/// AVX2 [`axpy8`](super::axpy8): bit-identical to the scalar contract.
+#[inline]
+#[allow(unsafe_code)]
+pub fn axpy8_avx2(dst: &mut [f32], src: &[f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() {
+        // SAFETY: AVX2 support was just detected on this CPU.
+        unsafe { x86::axpy8_avx2(dst, src, a) };
+        return;
+    }
+    super::matmul::axpy8_scalar(dst, src, a)
+}
+
+/// FMA [`axpy8`](super::axpy8) (opt-in rung; see [`dot8_fma`]).
+#[inline]
+#[allow(unsafe_code)]
+pub fn axpy8_fma(dst: &mut [f32], src: &[f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() && fma_detected() {
+        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        unsafe { x86::axpy8_fma(dst, src, a) };
+        return;
+    }
+    super::matmul::axpy8_scalar(dst, src, a)
+}
+
+/// AVX2 fused 4-step rank-1 update: per element, the four increments
+/// are four *sequential* vector adds — bit-identical to four
+/// [`axpy8_avx2`] calls and hence to the scalar contract.
+#[inline]
+#[allow(unsafe_code)]
+pub(crate) fn axpy8x4_avx2(dst: &mut [f32], b: [&[f32]; 4],
+                           a: [f32; 4]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() {
+        // SAFETY: AVX2 support was just detected on this CPU.
+        unsafe { x86::axpy8x4_avx2(dst, b, a) };
+        return;
+    }
+    super::matmul::axpy8x4_scalar(dst, b, a)
+}
+
+/// FMA fused 4-step rank-1 update (opt-in rung; see [`dot8_fma`]).
+#[inline]
+#[allow(unsafe_code)]
+pub(crate) fn axpy8x4_fma(dst: &mut [f32], b: [&[f32]; 4],
+                          a: [f32; 4]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() && fma_detected() {
+        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        unsafe { x86::axpy8x4_fma(dst, b, a) };
+        return;
+    }
+    super::matmul::axpy8x4_scalar(dst, b, a)
+}
+
+/// Elementwise 8-lane product `out[l] = v[l] * x[l]` — the BCSR block
+/// kernel's vector step (`slr::sparse::BcsrMatrix`). One rounding per
+/// lane, so downstream masked accumulation of the products in
+/// ascending lane order reproduces the CSR `spmm_t` contract bitwise.
+/// Dispatches on [`level`] internally (FMA has no fused pair here, so
+/// `Avx2Fma` uses the AVX2 body).
+#[inline]
+#[allow(unsafe_code)]
+pub fn mul8(v: &[f32], x: &[f32]) -> [f32; 8] {
+    debug_assert!(v.len() >= 8 && x.len() >= 8);
+    #[cfg(target_arch = "x86_64")]
+    if level() != SimdLevel::Scalar && avx2_detected() {
+        // SAFETY: AVX2 support was just detected on this CPU.
+        return unsafe { x86::mul8_avx2(v, x) };
+    }
+    mul8_scalar(v, x)
+}
+
+/// Scalar oracle for [`mul8`].
+#[inline]
+pub fn mul8_scalar(v: &[f32], x: &[f32]) -> [f32; 8] {
+    let mut out = [0.0f32; 8];
+    for l in 0..8 {
+        out[l] = v[l] * x[l];
+    }
+    out
+}
+
+/// The `#[target_feature]` kernel bodies. Everything in here is
+/// `unsafe fn` (edition-2021 implicit unsafe bodies): callable only
+/// when the enabled features are actually present, which the safe
+/// wrappers above verify via `is_x86_feature_detected!`.
+#[cfg(target_arch = "x86_64")]
+#[allow(unsafe_code)]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Sum the 8 lanes of `acc` sequentially in ascending lane order
+    /// starting from `0.0` — exactly `acc.iter().sum::<f32>()` over
+    /// the scalar lane bank. A `hadd`/shuffle reduction tree would
+    /// re-associate the sum and break bitwise equality.
+    ///
+    /// # Safety
+    /// Requires AVX (guaranteed by the callers' `avx2` feature).
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_lane_order(acc: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        // SAFETY: `lanes` is 8 f32s; storeu has no alignment demand.
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut sum = 0.0f32;
+        for l in lanes {
+            sum += l;
+        }
+        sum
+    }
+
+    /// AVX2 dot8 body.
+    ///
+    /// # Safety
+    /// Requires AVX2; `b.len() >= a.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot8_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert!(b.len() >= a.len());
+        let chunks = a.len() / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= a.len() <= b.len().
+            let va = _mm256_loadu_ps(a.as_ptr().add(base));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(base));
+            // Separate mul + add: two roundings per lane, matching
+            // the scalar `acc[l] += a*b` contract. No FMA here.
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * 8..a.len() {
+            tail += a[i] * b[i];
+        }
+        hsum_lane_order(acc) + tail
+    }
+
+    /// FMA dot8 body (contracted rounding — opt-in rung only).
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `b.len() >= a.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot8_fma(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert!(b.len() >= a.len());
+        let chunks = a.len() / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= a.len() <= b.len().
+            let va = _mm256_loadu_ps(a.as_ptr().add(base));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(base));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * 8..a.len() {
+            tail += a[i] * b[i];
+        }
+        hsum_lane_order(acc) + tail
+    }
+
+    /// AVX2 paired dot8 sharing one streamed `b`.
+    ///
+    /// # Safety
+    /// Requires AVX2; `a0.len() >= b.len()` and `a1.len() >= b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot8x2_avx2(a0: &[f32], a1: &[f32], b: &[f32])
+                              -> (f32, f32) {
+        debug_assert!(a0.len() >= b.len() && a1.len() >= b.len());
+        let chunks = b.len() / 8;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= b.len() <= a0.len(), a1.len().
+            let vb = _mm256_loadu_ps(b.as_ptr().add(base));
+            let v0 = _mm256_loadu_ps(a0.as_ptr().add(base));
+            let v1 = _mm256_loadu_ps(a1.as_ptr().add(base));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(v0, vb));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(v1, vb));
+        }
+        let mut t0 = 0.0f32;
+        let mut t1 = 0.0f32;
+        for i in chunks * 8..b.len() {
+            t0 += a0[i] * b[i];
+            t1 += a1[i] * b[i];
+        }
+        (hsum_lane_order(acc0) + t0, hsum_lane_order(acc1) + t1)
+    }
+
+    /// FMA paired dot8 (opt-in rung).
+    ///
+    /// # Safety
+    /// As [`dot8x2_avx2`] plus FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot8x2_fma(a0: &[f32], a1: &[f32], b: &[f32])
+                             -> (f32, f32) {
+        debug_assert!(a0.len() >= b.len() && a1.len() >= b.len());
+        let chunks = b.len() / 8;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= b.len() <= a0.len(), a1.len().
+            let vb = _mm256_loadu_ps(b.as_ptr().add(base));
+            let v0 = _mm256_loadu_ps(a0.as_ptr().add(base));
+            let v1 = _mm256_loadu_ps(a1.as_ptr().add(base));
+            acc0 = _mm256_fmadd_ps(v0, vb, acc0);
+            acc1 = _mm256_fmadd_ps(v1, vb, acc1);
+        }
+        let mut t0 = 0.0f32;
+        let mut t1 = 0.0f32;
+        for i in chunks * 8..b.len() {
+            t0 += a0[i] * b[i];
+            t1 += a1[i] * b[i];
+        }
+        (hsum_lane_order(acc0) + t0, hsum_lane_order(acc1) + t1)
+    }
+
+    /// AVX2 axpy8 body.
+    ///
+    /// # Safety
+    /// Requires AVX2; `src.len() == dst.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy8_avx2(dst: &mut [f32], src: &[f32], a: f32) {
+        debug_assert_eq!(dst.len(), src.len());
+        let chunks = dst.len() / 8;
+        let va = _mm256_set1_ps(a);
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= dst.len() == src.len().
+            let vs = _mm256_loadu_ps(src.as_ptr().add(base));
+            let vd = _mm256_loadu_ps(dst.as_ptr().add(base));
+            let r = _mm256_add_ps(vd, _mm256_mul_ps(va, vs));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(base), r);
+        }
+        for i in chunks * 8..dst.len() {
+            dst[i] += a * src[i];
+        }
+    }
+
+    /// FMA axpy8 body (opt-in rung).
+    ///
+    /// # Safety
+    /// As [`axpy8_avx2`] plus FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy8_fma(dst: &mut [f32], src: &[f32], a: f32) {
+        debug_assert_eq!(dst.len(), src.len());
+        let chunks = dst.len() / 8;
+        let va = _mm256_set1_ps(a);
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= dst.len() == src.len().
+            let vs = _mm256_loadu_ps(src.as_ptr().add(base));
+            let vd = _mm256_loadu_ps(dst.as_ptr().add(base));
+            let r = _mm256_fmadd_ps(va, vs, vd);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(base), r);
+        }
+        for i in chunks * 8..dst.len() {
+            dst[i] += a * src[i];
+        }
+    }
+
+    /// AVX2 fused 4-step rank-1 update: four sequential vector adds
+    /// per chunk — the same per-element rounding order as four
+    /// [`axpy8_avx2`] calls.
+    ///
+    /// # Safety
+    /// Requires AVX2; every `b[i]` at least `dst.len()` long.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy8x4_avx2(dst: &mut [f32], b: [&[f32]; 4],
+                               a: [f32; 4]) {
+        debug_assert!(b.iter().all(|s| s.len() >= dst.len()));
+        let chunks = dst.len() / 8;
+        let va0 = _mm256_set1_ps(a[0]);
+        let va1 = _mm256_set1_ps(a[1]);
+        let va2 = _mm256_set1_ps(a[2]);
+        let va3 = _mm256_set1_ps(a[3]);
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= dst.len() <= b[i].len().
+            let mut vd = _mm256_loadu_ps(dst.as_ptr().add(base));
+            let b0 = _mm256_loadu_ps(b[0].as_ptr().add(base));
+            vd = _mm256_add_ps(vd, _mm256_mul_ps(va0, b0));
+            let b1 = _mm256_loadu_ps(b[1].as_ptr().add(base));
+            vd = _mm256_add_ps(vd, _mm256_mul_ps(va1, b1));
+            let b2 = _mm256_loadu_ps(b[2].as_ptr().add(base));
+            vd = _mm256_add_ps(vd, _mm256_mul_ps(va2, b2));
+            let b3 = _mm256_loadu_ps(b[3].as_ptr().add(base));
+            vd = _mm256_add_ps(vd, _mm256_mul_ps(va3, b3));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(base), vd);
+        }
+        for j in chunks * 8..dst.len() {
+            let mut v = dst[j];
+            v += a[0] * b[0][j];
+            v += a[1] * b[1][j];
+            v += a[2] * b[2][j];
+            v += a[3] * b[3][j];
+            dst[j] = v;
+        }
+    }
+
+    /// FMA fused 4-step rank-1 update (opt-in rung).
+    ///
+    /// # Safety
+    /// As [`axpy8x4_avx2`] plus FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy8x4_fma(dst: &mut [f32], b: [&[f32]; 4],
+                              a: [f32; 4]) {
+        debug_assert!(b.iter().all(|s| s.len() >= dst.len()));
+        let chunks = dst.len() / 8;
+        let va0 = _mm256_set1_ps(a[0]);
+        let va1 = _mm256_set1_ps(a[1]);
+        let va2 = _mm256_set1_ps(a[2]);
+        let va3 = _mm256_set1_ps(a[3]);
+        for c in 0..chunks {
+            let base = c * 8;
+            // SAFETY: base + 8 <= dst.len() <= b[i].len().
+            let mut vd = _mm256_loadu_ps(dst.as_ptr().add(base));
+            let b0 = _mm256_loadu_ps(b[0].as_ptr().add(base));
+            vd = _mm256_fmadd_ps(va0, b0, vd);
+            let b1 = _mm256_loadu_ps(b[1].as_ptr().add(base));
+            vd = _mm256_fmadd_ps(va1, b1, vd);
+            let b2 = _mm256_loadu_ps(b[2].as_ptr().add(base));
+            vd = _mm256_fmadd_ps(va2, b2, vd);
+            let b3 = _mm256_loadu_ps(b[3].as_ptr().add(base));
+            vd = _mm256_fmadd_ps(va3, b3, vd);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(base), vd);
+        }
+        for j in chunks * 8..dst.len() {
+            let mut v = dst[j];
+            v += a[0] * b[0][j];
+            v += a[1] * b[1][j];
+            v += a[2] * b[2][j];
+            v += a[3] * b[3][j];
+            dst[j] = v;
+        }
+    }
+
+    /// AVX2 8-lane elementwise product.
+    ///
+    /// # Safety
+    /// Requires AVX2; `v.len() >= 8` and `x.len() >= 8`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul8_avx2(v: &[f32], x: &[f32]) -> [f32; 8] {
+        debug_assert!(v.len() >= 8 && x.len() >= 8);
+        // SAFETY: both slices hold at least 8 f32s.
+        let vv = _mm256_loadu_ps(v.as_ptr());
+        let vx = _mm256_loadu_ps(x.as_ptr());
+        let mut out = [0.0f32; 8];
+        _mm256_storeu_ps(out.as_mut_ptr(), _mm256_mul_ps(vv, vx));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{axpy8_scalar, axpy8x4_scalar,
+                                dot8_scalar, dot8x2_scalar};
+    use crate::util::Rng;
+
+    /// Lengths straddling every 8-lane boundary the kernels care
+    /// about: empty, sub-lane, exactly one/two lanes, ±1 around them,
+    /// and a longer mixed case.
+    const LENS: &[usize] = &[0, 1, 3, 7, 8, 9, 15, 16, 17, 24, 31,
+                             32, 33, 40, 61, 64, 65];
+
+    fn vecs(rng: &mut Rng, len: usize) -> (Vec<f32>, Vec<f32>) {
+        let mk = |rng: &mut Rng| {
+            (0..len)
+                .map(|i| {
+                    // Mix magnitudes and exact zeros so rounding and
+                    // signed-zero behavior are actually exercised.
+                    if i % 11 == 0 {
+                        0.0
+                    } else {
+                        rng.next_normal() as f32
+                            * 10f32.powi((i % 5) as i32 - 2)
+                    }
+                })
+                .collect::<Vec<f32>>()
+        };
+        (mk(rng), mk(rng))
+    }
+
+    #[test]
+    fn avx2_dot8_bitwise_equals_scalar() {
+        let mut rng = Rng::new(17);
+        for &len in LENS {
+            for _ in 0..8 {
+                let (a, b) = vecs(&mut rng, len);
+                let want = dot8_scalar(&a, &b);
+                let got = dot8_avx2(&a, &b);
+                assert!(got.to_bits() == want.to_bits(),
+                        "len {len}: {got} != {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_dot8x2_bitwise_equals_scalar() {
+        let mut rng = Rng::new(19);
+        for &len in LENS {
+            let (a0, b) = vecs(&mut rng, len);
+            let (a1, _) = vecs(&mut rng, len);
+            let want = dot8x2_scalar(&a0, &a1, &b);
+            let got = dot8x2_avx2(&a0, &a1, &b);
+            assert!(got.0.to_bits() == want.0.to_bits()
+                        && got.1.to_bits() == want.1.to_bits(),
+                    "len {len}: {got:?} != {want:?}");
+        }
+    }
+
+    #[test]
+    fn avx2_axpy8_bitwise_equals_scalar() {
+        let mut rng = Rng::new(23);
+        for &len in LENS {
+            for a in [0.0f32, -1.5, 0.37] {
+                let (dst0, src) = vecs(&mut rng, len);
+                let mut want = dst0.clone();
+                axpy8_scalar(&mut want, &src, a);
+                let mut got = dst0.clone();
+                axpy8_avx2(&mut got, &src, a);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(g.to_bits() == w.to_bits(),
+                            "len {len} a {a}: {g} != {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_axpy8x4_bitwise_equals_scalar() {
+        let mut rng = Rng::new(29);
+        for &len in LENS {
+            let (dst0, s0) = vecs(&mut rng, len);
+            let (s1, s2) = vecs(&mut rng, len);
+            let (s3, _) = vecs(&mut rng, len);
+            let coef = [0.7f32, -1.3, 0.0, 2.5];
+            let mut want = dst0.clone();
+            axpy8x4_scalar(&mut want, [&s0, &s1, &s2, &s3], coef);
+            let mut got = dst0.clone();
+            axpy8x4_avx2(&mut got, [&s0, &s1, &s2, &s3], coef);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(g.to_bits() == w.to_bits(),
+                        "len {len}: {g} != {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul8_bitwise_equals_scalar() {
+        let mut rng = Rng::new(31);
+        for _ in 0..32 {
+            let (v, x) = vecs(&mut rng, 8);
+            let want = mul8_scalar(&v, &x);
+            let got = mul8(&v, &x);
+            for l in 0..8 {
+                assert!(got[l].to_bits() == want[l].to_bits(),
+                        "lane {l}: {} != {}", got[l], want[l]);
+            }
+        }
+    }
+
+    /// The opt-in FMA rung is NOT bit-exact; pin its documented
+    /// tolerance instead (relative 1e-5 on unit-variance inputs —
+    /// ~1 ulp of contraction drift per accumulation step).
+    #[test]
+    fn fma_dot8_within_documented_tolerance() {
+        let mut rng = Rng::new(37);
+        for &len in &[8usize, 64, 257] {
+            let (a, b) = vecs(&mut rng, len);
+            let want = dot8_scalar(&a, &b);
+            let got = dot8_fma(&a, &b);
+            let scale = a.iter().zip(&b)
+                .map(|(x, y)| (x * y).abs())
+                .sum::<f32>()
+                .max(1.0);
+            assert!((got - want).abs() <= 1e-5 * scale,
+                    "len {len}: fma {got} vs scalar {want}");
+        }
+    }
+
+    /// Selection policy table from the module docs. Pure function —
+    /// no env mutation, no OnceLock interference between tests.
+    #[test]
+    fn pick_level_honors_override_and_detection() {
+        use SimdLevel::*;
+        assert_eq!(pick_level(None, true, true), Avx2); // never auto-FMA
+        assert_eq!(pick_level(None, false, false), Scalar);
+        assert_eq!(pick_level(Some("off"), true, true), Scalar);
+        assert_eq!(pick_level(Some("scalar"), true, true), Scalar);
+        assert_eq!(pick_level(Some(" AVX2 "), true, true), Avx2);
+        assert_eq!(pick_level(Some("avx2"), false, false), Scalar);
+        assert_eq!(pick_level(Some("fma"), true, true), Avx2Fma);
+        assert_eq!(pick_level(Some("fma"), true, false), Avx2);
+        assert_eq!(pick_level(Some("fma"), false, false), Scalar);
+        assert_eq!(pick_level(Some("bogus"), true, true), Scalar);
+        assert_eq!(pick_level(Some(""), true, false), Avx2);
+    }
+
+    /// Whatever this process resolved to, the tag and the level agree
+    /// and the level is consistent with detection.
+    #[test]
+    fn level_and_kernel_path_are_consistent() {
+        let tag = kernel_path();
+        match level() {
+            SimdLevel::Scalar => assert_eq!(tag, "scalar"),
+            SimdLevel::Avx2 => {
+                assert_eq!(tag, "avx2");
+                assert!(avx2_detected());
+            }
+            SimdLevel::Avx2Fma => {
+                assert_eq!(tag, "avx2+fma");
+                assert!(avx2_detected() && fma_detected());
+            }
+        }
+    }
+}

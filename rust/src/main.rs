@@ -496,6 +496,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
              s.arena_blocks_contiguous);
     println!("resident: shared {} B + marginal {} B across {} variants",
              s.shared_bytes, s.marginal_bytes, server.variants.len());
+    println!("kernels: {} path, {} B acceleration state (droppable)",
+             s.kernel_path, s.accel_bytes);
     for (count, served) in &s.served_by_variant {
         println!("  variant {count:>9}: served {served} requests");
     }
@@ -521,6 +523,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     anyhow::ensure!(s.shared_bytes > 0 && s.marginal_bytes > 0,
                     "resident byte split not populated (shared {}, \
                      marginal {})", s.shared_bytes, s.marginal_bytes);
+    anyhow::ensure!(!s.kernel_path.is_empty(),
+                    "kernel path tag not populated in serve stats");
     let counted: u64 = s.served_by_variant.values().sum();
     anyhow::ensure!(counted == n_resp as u64,
                     "per-variant served counts {counted} != {n_resp} \

@@ -44,8 +44,9 @@ impl Backend for NativeBackend {
     }
 
     fn describe(&self) -> String {
-        format!("native (pure-Rust reference executor, {} threads)",
-                default_workers())
+        format!("native (pure-Rust reference executor, {} threads, \
+                 {} kernels)",
+                default_workers(), crate::linalg::kernel_path())
     }
 
     fn forward_logits(&self, cfg: &ModelConfig, params: &[Tensor],

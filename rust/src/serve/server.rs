@@ -207,6 +207,16 @@ pub struct ServeStats {
     /// Per-variant metadata bytes summed across admitted variants —
     /// the whole marginal cost of the capacity spectrum.
     pub marginal_bytes: usize,
+    /// Bytes of droppable acceleration state held by the master
+    /// stores (block-sparse residual layouts + resident cut
+    /// compactions). Deliberately *not* part of
+    /// [`Self::shared_bytes`]: these are recomputable caches, not
+    /// weights, and must not distort the residency gates.
+    pub accel_bytes: usize,
+    /// Microkernel rung the process dispatched to
+    /// ([`crate::linalg::kernel_path`]: "scalar", "avx2", or
+    /// "avx2+fma"). Empty until stats are first refreshed.
+    pub kernel_path: &'static str,
     /// Requests admitted while other rows were mid-generation — the
     /// continuous scheduler's signature move (always 0 under the
     /// batched fallback, and for requests co-admitted from idle).
@@ -931,6 +941,13 @@ impl<'a> Server<'a> {
         self.variants.iter().map(|v| v.marginal_bytes()).sum()
     }
 
+    /// Bytes of droppable acceleration state across the master stores
+    /// (see [`FactorStore::accel_bytes`]). Kept out of
+    /// [`Self::shared_bytes`] by design.
+    pub fn accel_bytes(&self) -> usize {
+        self.masters.iter().map(|(_, st)| st.accel_bytes()).sum()
+    }
+
     fn refresh_byte_stats(&mut self) {
         // Called on every variant-set change (new / admit_budget /
         // retire), so it doubles as the checkpoint for the spectrum's
@@ -945,6 +962,8 @@ impl<'a> Server<'a> {
                 .collect::<Vec<_>>());
         self.stats.shared_bytes = self.shared_bytes();
         self.stats.marginal_bytes = self.marginal_bytes();
+        self.stats.accel_bytes = self.accel_bytes();
+        self.stats.kernel_path = crate::linalg::kernel_path();
     }
 
     /// Assemble a variant from per-block cuts: dense entries clone the
@@ -1311,6 +1330,9 @@ impl<'a> Server<'a> {
                 }
             }
         }
+        // Compactions may have been built while serving; re-snapshot
+        // the droppable-cache footprint on the way out.
+        self.stats.accel_bytes = self.accel_bytes();
         Ok(())
     }
 
@@ -1768,6 +1790,8 @@ impl<'a> Server<'a> {
             self.stats.arena_blocks_high_water =
                 cache.blocks_high_water();
         }
+        // Mid-run cut compactions count once the run drains.
+        self.stats.accel_bytes = self.accel_bytes();
         Ok(())
     }
 }

@@ -110,7 +110,11 @@ impl SlrBlock {
     /// Master factor store for elastic serving: the same factors as
     /// [`Self::to_factored`], but returned as the shareable
     /// [`FactorStore`] that every budget's zero-copy view is carved
-    /// from (spectrum ordered, S entries magnitude-ranked).
+    /// from (spectrum ordered, S entries magnitude-ranked). When the
+    /// residual is panel-occupied enough, the store also bakes the
+    /// block-sparse acceleration layout here, once — ADMM emits
+    /// magnitude-clustered residuals, so trained blocks usually
+    /// qualify where the synthetic low-density test blocks don't.
     pub fn to_store(&self) -> Result<FactorStore> {
         FactorStore::new(self.u.clone(), self.s.clone(), self.v.clone(),
                          CsrMatrix::from_dense(&self.sp, S_EPS))
@@ -288,6 +292,15 @@ mod tests {
         let st = b.to_store().unwrap();
         assert_eq!((st.rank_max(), st.nnz_max()), (3, b.nnz()));
         assert_eq!(st.s, b.s, "descending spectrum must not be permuted");
+        // Acceleration layout (if the occupancy rule built one) is a
+        // faithful regrouping of the residual, and its bytes stay out
+        // of the resident-weight accounting.
+        assert_eq!(st.bytes(),
+                   b.resident_bytes() + 4 * st.nnz_max());
+        if let Some(bcsr) = &st.bcsr {
+            bcsr.validate().unwrap();
+            assert_eq!(bcsr.to_csr().0, st.sp);
+        }
     }
 
     #[test]

@@ -71,6 +71,14 @@ impl BlockShape {
 /// magnitude. Because the master store orders both (spectrum
 /// descending, entries magnitude-ranked), a cut pair *is* a deployable
 /// variant of the block — applying it is a prefix view, not a copy.
+///
+/// The same prefix semantics carry through every residual layout the
+/// store evaluates with: the master CSR checks `mag_rank < nnz_cut`
+/// per entry, the block-sparse panel layout carries those ranks
+/// per *lane* (`BcsrMatrix::lane_rank`) so a cut is a lane keep-mask,
+/// and a cut-baked compaction holds exactly ranks `0..nnz_cut`. A
+/// `BlockCuts` value therefore names the same weights — and the same
+/// bits at inference — no matter which kernel rung serves it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockCuts {
     /// Singular directions kept.

@@ -15,4 +15,4 @@ pub mod sparse;
 pub use block::SlrBlock;
 pub use controller::IController;
 pub use hpa::{BlockCuts, BlockShape, HpaPlan, HpaReport};
-pub use sparse::{CsrMatrix, FactorStore, FactoredLinear};
+pub use sparse::{BcsrMatrix, CsrMatrix, FactorStore, FactoredLinear};

@@ -32,22 +32,50 @@
 //! like [`CsrMatrix::spmm_t`]. Views are therefore **bit-identical**
 //! to materialized truncation — pinned by the property tests below and
 //! by `rust/tests/nested_variants.rs` at the whole-model level.
+//!
+//! # Block-sparse residual (BCSR)
+//!
+//! The CSR `spmm_t` gathers one element at a time — the pattern
+//! hardware-friendly sparsity work (SLoPe, SNIPPETS.md) shows must
+//! become *block* sparsity to vectorize. [`BcsrMatrix`] stores the
+//! same residual as 8-wide column panels (one AVX2 vector each) with
+//! per-lane magnitude ranks, so every `nnz_cut` is *still* a prefix
+//! view and every product stays bitwise on-contract: the kernel
+//! computes the 8 lane products with one vector multiply
+//! ([`crate::linalg::simd::mul8`] — one rounding per lane, exactly
+//! the scalar `v * x`), then adds the *kept* lanes into the single
+//! per-element accumulator in ascending lane order, which is
+//! ascending column order. A padded lane is never added (adding even
+//! `+0.0` could flip a `-0.0` sum, and `0·∞ = NaN`), so the rounding
+//! sequence is identical to [`CsrMatrix::spmm_t`] over the
+//! materialized cut. [`FactorStore`] builds the layout once at
+//! construction when the residual is block-occupied enough to pay
+//! ([`BCSR_MIN_OCCUPANCY`]), keeps a dense-panel variant for
+//! incompressible blocks ([`BCSR_DENSE_LAYOUT_MIN`]), and compacts
+//! hot mid-spectrum cuts on demand (capacity-bounded compaction
+//! cache). All of it is *acceleration state* derived from the master
+//! CSR — droppable without correctness loss and accounted separately
+//! ([`FactorStore::accel_bytes`]), never in the resident-weight gates.
 
 #![warn(missing_docs)]
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
-use crate::linalg::{axpy8, dot8, matmul, matmul_nt, reconstruct};
+use crate::linalg::{axpy8, dot8, matmul, matmul_nt, reconstruct, simd};
 use crate::tensor::Tensor;
 
 /// Compressed-sparse-row f32 matrix.
 ///
 /// # Invariants
 ///
-/// Constructed values (e.g. via [`CsrMatrix::from_dense`]) satisfy, and
-/// [`CsrMatrix::spmm_t`]/[`CsrMatrix::spmv`] assume without checking:
+/// Constructed values (e.g. via [`CsrMatrix::from_dense`]) satisfy,
+/// and [`CsrMatrix::spmm_t`]/[`CsrMatrix::spmv`] assume (release
+/// builds stay check-free; debug builds re-verify them at kernel
+/// entry via `debug_invariant!`, the PR 7 paged-arena pattern — a
+/// corrupt view fails loudly at the seam instead of reading out of
+/// bounds deep in a decode loop):
 ///
 /// - `indptr.len() == n + 1`, `indptr[0] == 0`,
 ///   `indptr[n] as usize == values.len()`, and `indptr` is
@@ -99,11 +127,13 @@ impl CsrMatrix {
     }
 
     /// Check every struct-level invariant (see the type docs) in
-    /// O(nnz), returning the first violation. The kernels assume these
-    /// hold and stay check-free; construction seams run this instead —
-    /// [`Self::from_dense`] under `debug_assertions`, `FactorStore::
-    /// new` unconditionally (cold path, and the store is about to be
-    /// shared immutably with every view carved from it).
+    /// O(nnz), returning the first violation. Release kernels assume
+    /// these hold and stay check-free; debug builds re-run this at
+    /// [`Self::spmv`]/[`Self::spmm_t`] entry (`debug_invariant!`),
+    /// and construction seams run it too — [`Self::from_dense`] under
+    /// `debug_assertions`, `FactorStore::new` unconditionally (cold
+    /// path, and the store is about to be shared immutably with every
+    /// view carved from it).
     pub fn validate(&self) -> Result<()> {
         ensure!(self.indptr.len() == self.n + 1,
                 "indptr len {} != n+1 = {}",
@@ -169,6 +199,10 @@ impl CsrMatrix {
     /// y = S · x  (x length m, y length n).
     pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.m);
+        crate::debug_invariant!(
+            self.validate().is_ok(),
+            "spmv over an invalid CSR: {}",
+            self.validate().unwrap_err());
         let mut y = vec![0.0f32; self.n];
         for i in 0..self.n {
             let (lo, hi) = (self.indptr[i] as usize,
@@ -194,6 +228,10 @@ impl CsrMatrix {
     /// converts S out of dense storage.
     pub fn spmm_t(&self, x: &Tensor) -> Tensor {
         assert_eq!(x.ncols(), self.m);
+        crate::debug_invariant!(
+            self.validate().is_ok(),
+            "spmm_t over an invalid CSR: {}",
+            self.validate().unwrap_err());
         let t = x.nrows();
         let mut out = Tensor::zeros(&[t, self.n]);
         for r in 0..t {
@@ -207,6 +245,393 @@ impl CsrMatrix {
                     // salaad-lint: allow(raw-accum, reason = "normative CSR contract: ascending-column per-row accumulation with one rounding step per stored entry")
                     acc += self.values[k]
                         * xrow[self.indices[k] as usize];
+                }
+                orow[i] = acc;
+            }
+        }
+        out
+    }
+}
+
+/// Column-panel width of the block-sparse residual layout: 8 f32
+/// lanes — one AVX2 vector, and the same width as the `dot8`/`axpy8`
+/// lane bank.
+pub const BCSR_BLOCK: usize = 8;
+
+/// Mean stored-lane occupancy (`nnz / (8 · panels)`) below which the
+/// BCSR layout is **not** built: with fewer than ~2 of 8 lanes live
+/// per touched panel, padded vector work and per-panel metadata cost
+/// more than the CSR gather they replace, so the store keeps the
+/// gather path and spends no acceleration memory.
+pub const BCSR_MIN_OCCUPANCY: f64 = 0.25;
+
+/// Density at/above which the residual is treated as incompressible
+/// and laid out as **dense panels**: every row stores all ⌈m/8⌉
+/// panels in order (empty ones mask to 0), so the kernel walks
+/// implicit column positions with no `block_col` indirection — the
+/// shared-dense fallback of ARCHITECTURE.md §Nested elastic variants,
+/// held once in the `Arc`-shared master instead of per variant.
+pub const BCSR_DENSE_LAYOUT_MIN: f64 = 0.5;
+
+/// How a [`BcsrMatrix`] indexes its column panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BcsrLayout {
+    /// Only occupied panels are stored; `block_col` names each one.
+    Sparse,
+    /// Every row stores all ⌈m/8⌉ panels in column order; panel `p`
+    /// of a row covers columns `8p..8p+8` implicitly.
+    DensePanels,
+}
+
+/// Block-sparse (8-wide column-panel) storage of the S residual.
+///
+/// Semantically identical to the [`CsrMatrix`] it is built from —
+/// same entries, same per-row ascending-column order, same per-entry
+/// magnitude ranks — but grouped into [`BCSR_BLOCK`]-wide panels so
+/// [`Self::spmm_t_cut`] replaces the per-entry gather with one
+/// contiguous vector multiply per panel. See the module docs for why
+/// the masked accumulation stays bit-identical to the CSR contract.
+///
+/// # Invariants
+///
+/// - `row_ptr.len() == n + 1`, non-decreasing, `row_ptr[n]` = panel
+///   count; `values.len() == panels · 8`, `lane_rank.len()` likewise,
+///   `lane_mask.len() == panels`;
+/// - within a row, `block_col` is strictly ascending and every panel's
+///   first column `block_col · 8` is `< m`; under
+///   [`BcsrLayout::DensePanels`] each row holds exactly ⌈m/8⌉ panels
+///   with `block_col` = `0, 1, …` in order;
+/// - lane `l` of a panel is *stored* iff bit `l` of its `lane_mask`
+///   is set; stored lanes have in-bounds columns and a magnitude rank
+///   `< nnz`; padded lanes hold value `0.0` and rank `u32::MAX` (and
+///   are never accumulated);
+/// - stored-lane magnitude ranks form a permutation of `0..nnz` (true
+///   for the master build, and preserved by cut compaction because a
+///   prefix cut keeps exactly ranks `0..cut`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BcsrMatrix {
+    /// Rows.
+    pub n: usize,
+    /// Columns.
+    pub m: usize,
+    /// Panel indexing scheme.
+    pub layout: BcsrLayout,
+    /// Per-row panel ranges, length n+1.
+    pub row_ptr: Vec<u32>,
+    /// Panel column index (first column = `block_col · 8`), one per
+    /// panel (also populated under `DensePanels`, for round-trips).
+    pub block_col: Vec<u32>,
+    /// Panel values, 8 per panel, zero-padded.
+    pub values: Vec<f32>,
+    /// Stored-lane bitmask, one byte per panel.
+    pub lane_mask: Vec<u8>,
+    /// Per-lane global magnitude rank, 8 per panel, `u32::MAX` pad.
+    pub lane_rank: Vec<u32>,
+    /// Stored entry count (set lane-mask bits).
+    pub nnz: usize,
+}
+
+impl BcsrMatrix {
+    /// Regroup a CSR residual (+ its per-entry magnitude ranks) into
+    /// 8-wide column panels. Chooses [`BcsrLayout::DensePanels`] at
+    /// density ≥ [`BCSR_DENSE_LAYOUT_MIN`], else
+    /// [`BcsrLayout::Sparse`]. The caller decides *whether* the
+    /// layout is worth building at all ([`Self::worth_building`]).
+    pub fn from_csr(sp: &CsrMatrix, mag_rank: &[u32]) -> Self {
+        assert_eq!(mag_rank.len(), sp.nnz());
+        let (n, m) = (sp.n, sp.m);
+        let dense = sp.density() >= BCSR_DENSE_LAYOUT_MIN;
+        let panels_per_row = m.div_ceil(BCSR_BLOCK);
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut block_col = Vec::new();
+        let mut values = Vec::new();
+        let mut lane_mask = Vec::new();
+        let mut lane_rank = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..n {
+            let row_start = block_col.len();
+            if dense {
+                for p in 0..panels_per_row {
+                    block_col.push(p as u32);
+                    values.extend_from_slice(&[0.0; BCSR_BLOCK]);
+                    lane_mask.push(0);
+                    lane_rank
+                        .extend_from_slice(&[u32::MAX; BCSR_BLOCK]);
+                }
+            }
+            let (lo, hi) =
+                (sp.indptr[i] as usize, sp.indptr[i + 1] as usize);
+            for e in lo..hi {
+                let col = sp.indices[e] as usize;
+                let (bc, lane) = (col / BCSR_BLOCK, col % BCSR_BLOCK);
+                let b = if dense {
+                    row_start + bc
+                } else {
+                    // Ascending columns within the row ⇒ ascending
+                    // panel indices; open a new panel on change.
+                    if block_col.len() == row_start
+                        || *block_col.last().unwrap() != bc as u32
+                    {
+                        block_col.push(bc as u32);
+                        values.extend_from_slice(&[0.0; BCSR_BLOCK]);
+                        lane_mask.push(0);
+                        lane_rank
+                            .extend_from_slice(&[u32::MAX; BCSR_BLOCK]);
+                    }
+                    block_col.len() - 1
+                };
+                values[b * BCSR_BLOCK + lane] = sp.values[e];
+                lane_mask[b] |= 1 << lane;
+                lane_rank[b * BCSR_BLOCK + lane] = mag_rank[e];
+            }
+            row_ptr.push(block_col.len() as u32);
+        }
+        let out = BcsrMatrix {
+            n,
+            m,
+            layout: if dense {
+                BcsrLayout::DensePanels
+            } else {
+                BcsrLayout::Sparse
+            },
+            row_ptr,
+            block_col,
+            values,
+            lane_mask,
+            lane_rank,
+            nnz: sp.nnz(),
+        };
+        crate::debug_invariant!(
+            out.validate().is_ok(),
+            "from_csr built an invalid BCSR: {}",
+            out.validate().unwrap_err());
+        out
+    }
+
+    /// Would the panel layout pay for this residual? True iff it has
+    /// entries and its mean stored-lane occupancy reaches
+    /// [`BCSR_MIN_OCCUPANCY`] (computed by a metadata-only scan — no
+    /// layout is built to answer this).
+    pub fn worth_building(sp: &CsrMatrix) -> bool {
+        if sp.nnz() == 0 {
+            return false;
+        }
+        if sp.density() >= BCSR_DENSE_LAYOUT_MIN {
+            return true;
+        }
+        let mut panels = 0usize;
+        for i in 0..sp.n {
+            let (lo, hi) =
+                (sp.indptr[i] as usize, sp.indptr[i + 1] as usize);
+            let mut last = u32::MAX;
+            for e in lo..hi {
+                let bc = sp.indices[e] / BCSR_BLOCK as u32;
+                if bc != last {
+                    panels += 1;
+                    last = bc;
+                }
+            }
+        }
+        sp.nnz() as f64 / (BCSR_BLOCK * panels) as f64
+            >= BCSR_MIN_OCCUPANCY
+    }
+
+    /// Stored entry count.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Panel count.
+    pub fn panels(&self) -> usize {
+        self.lane_mask.len()
+    }
+
+    /// Mean stored lanes per panel, in [0, 1] (0.0 when empty).
+    pub fn occupancy(&self) -> f64 {
+        if self.panels() == 0 {
+            return 0.0;
+        }
+        self.nnz as f64 / (BCSR_BLOCK * self.panels()) as f64
+    }
+
+    /// Acceleration-structure bytes: panel values + ranks + column
+    /// indices + masks + row offsets. Reported via
+    /// [`FactorStore::accel_bytes`], never in resident-weight gates.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.lane_rank.len() * 4
+            + self.block_col.len() * 4 + self.lane_mask.len()
+            + self.row_ptr.len() * 4
+    }
+
+    /// Check every struct-level invariant (see the type docs) in
+    /// O(panels), returning the first violation. Debug builds run
+    /// this at construction and kernel entry, mirroring
+    /// [`CsrMatrix::validate`].
+    pub fn validate(&self) -> Result<()> {
+        let p = self.panels();
+        ensure!(self.row_ptr.len() == self.n + 1,
+                "row_ptr len {} != n+1 = {}",
+                self.row_ptr.len(), self.n + 1);
+        ensure!(self.row_ptr[0] == 0 && self.row_ptr[self.n] as usize == p,
+                "row_ptr ends {} != panels {p}", self.row_ptr[self.n]);
+        ensure!(self.block_col.len() == p
+                    && self.values.len() == p * BCSR_BLOCK
+                    && self.lane_rank.len() == p * BCSR_BLOCK,
+                "panel arrays disagree on panel count");
+        let panels_per_row = self.m.div_ceil(BCSR_BLOCK);
+        let mut nnz = 0usize;
+        for i in 0..self.n {
+            let (lo, hi) = (self.row_ptr[i] as usize,
+                            self.row_ptr[i + 1] as usize);
+            ensure!(lo <= hi && hi <= p,
+                    "row_ptr not monotone at row {i}");
+            if self.layout == BcsrLayout::DensePanels {
+                ensure!(hi - lo == panels_per_row,
+                        "dense row {i} holds {} panels, want \
+                         {panels_per_row}", hi - lo);
+            }
+            for b in lo..hi {
+                let bc = self.block_col[b] as usize;
+                ensure!(bc * BCSR_BLOCK < self.m,
+                        "row {i}: panel column {bc} out of range");
+                if self.layout == BcsrLayout::DensePanels {
+                    ensure!(bc == b - lo,
+                            "dense row {i}: panel {b} misindexed");
+                } else {
+                    ensure!(b == lo
+                                || self.block_col[b - 1]
+                                    < self.block_col[b],
+                            "row {i}: panels not strictly ascending");
+                    ensure!(self.lane_mask[b] != 0,
+                            "row {i}: empty panel in sparse layout");
+                }
+                for l in 0..BCSR_BLOCK {
+                    let stored = self.lane_mask[b] >> l & 1 == 1;
+                    let rank = self.lane_rank[b * BCSR_BLOCK + l];
+                    if stored {
+                        ensure!(bc * BCSR_BLOCK + l < self.m,
+                                "row {i}: stored lane out of bounds");
+                        ensure!((rank as usize) < self.nnz,
+                                "row {i}: stored-lane rank {rank} \
+                                 >= nnz {}", self.nnz);
+                        nnz += 1;
+                    } else {
+                        ensure!(self.values[b * BCSR_BLOCK + l] == 0.0
+                                    && rank == u32::MAX,
+                                "row {i}: padded lane not zeroed");
+                    }
+                }
+            }
+        }
+        ensure!(nnz == self.nnz,
+                "mask bits {nnz} != recorded nnz {}", self.nnz);
+        Ok(())
+    }
+
+    /// Ungroup back to CSR entry order, returning the matrix and the
+    /// per-entry magnitude ranks — the exact inverse of
+    /// [`Self::from_csr`] (round-trip pinned by tests).
+    pub fn to_csr(&self) -> (CsrMatrix, Vec<u32>) {
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut ranks = Vec::new();
+        indptr.push(0u32);
+        for i in 0..self.n {
+            let (lo, hi) = (self.row_ptr[i] as usize,
+                            self.row_ptr[i + 1] as usize);
+            for b in lo..hi {
+                let c0 = self.block_col[b] as usize * BCSR_BLOCK;
+                for l in 0..BCSR_BLOCK {
+                    if self.lane_mask[b] >> l & 1 == 1 {
+                        indices.push((c0 + l) as u32);
+                        values.push(self.values[b * BCSR_BLOCK + l]);
+                        ranks.push(self.lane_rank[b * BCSR_BLOCK + l]);
+                    }
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        (CsrMatrix { n: self.n, m: self.m, indptr, indices, values },
+         ranks)
+    }
+
+    /// Y = X · Sᵀ over all stored entries — [`Self::spmm_t_cut`] with
+    /// the cut wide open.
+    pub fn spmm_t(&self, x: &Tensor) -> Tensor {
+        self.spmm_t_cut(x, self.nnz)
+    }
+
+    /// Y = X · S_cutᵀ keeping entries with magnitude rank `< cut`,
+    /// bit-identical to [`CsrMatrix::spmm_t`] over the materialized
+    /// cut: per panel, one vector multiply forms the 8 lane products
+    /// (one rounding each — same as the scalar `v·x`), the keep mask
+    /// (stored ∧ rank `< cut`) selects lanes, and the survivors fold
+    /// into the per-element accumulator in ascending lane order. A
+    /// full cut (`cut ≥ nnz`) skips the rank compare entirely — the
+    /// hot path for full-residual views and compacted cuts.
+    pub fn spmm_t_cut(&self, x: &Tensor, cut: usize) -> Tensor {
+        assert_eq!(x.ncols(), self.m);
+        crate::debug_invariant!(
+            self.validate().is_ok(),
+            "spmm_t over an invalid BCSR: {}",
+            self.validate().unwrap_err());
+        let t = x.nrows();
+        let full = cut >= self.nnz;
+        let cut32 = cut.min(u32::MAX as usize) as u32;
+        let mut out = Tensor::zeros(&[t, self.n]);
+        for r in 0..t {
+            let xrow = x.row(r);
+            let orow = out.row_mut(r);
+            for i in 0..self.n {
+                let (lo, hi) = (self.row_ptr[i] as usize,
+                                self.row_ptr[i + 1] as usize);
+                let mut acc = 0.0f32;
+                for b in lo..hi {
+                    let mut mask = self.lane_mask[b];
+                    if !full {
+                        let ranks = &self.lane_rank
+                            [b * BCSR_BLOCK..(b + 1) * BCSR_BLOCK];
+                        let mut keep = 0u8;
+                        for (l, &rk) in ranks.iter().enumerate() {
+                            // Padded lanes carry u32::MAX, so the
+                            // rank compare also excludes them.
+                            keep |= u8::from(rk < cut32) << l;
+                        }
+                        mask &= keep;
+                    }
+                    if mask == 0 {
+                        continue;
+                    }
+                    let c0 = match self.layout {
+                        BcsrLayout::DensePanels => (b - lo) * BCSR_BLOCK,
+                        BcsrLayout::Sparse => {
+                            self.block_col[b] as usize * BCSR_BLOCK
+                        }
+                    };
+                    let vals =
+                        &self.values[b * BCSR_BLOCK..(b + 1) * BCSR_BLOCK];
+                    if c0 + BCSR_BLOCK <= self.m {
+                        let p = simd::mul8(vals, &xrow[c0..c0 + 8]);
+                        let mut mk = mask;
+                        while mk != 0 {
+                            let l = mk.trailing_zeros() as usize;
+                            // Ascending-lane fold of pre-rounded
+                            // products: the CSR rounding sequence.
+                            acc += p[l];
+                            mk &= mk - 1;
+                        }
+                    } else {
+                        // Edge panel past m: stored lanes are
+                        // in-bounds by the CSR invariant; go per-lane.
+                        let mut mk = mask;
+                        while mk != 0 {
+                            let l = mk.trailing_zeros() as usize;
+                            // salaad-lint: allow(raw-accum, reason = "normative CSR contract on the edge panel: one rounding step per kept entry in ascending column order")
+                            acc += vals[l] * xrow[c0 + l];
+                            mk &= mk - 1;
+                        }
+                    }
                 }
                 orow[i] = acc;
             }
@@ -243,7 +668,19 @@ pub fn slr_block_bytes(n: usize, m: usize, rank: usize,
 ///   any budget is exactly `{e : mag_rank[e] < q}` — still iterated in
 ///   ascending-column CSR order at evaluation time, which is what
 ///   keeps views bit-identical to materialized truncation.
-#[derive(Clone, Debug)]
+///
+/// # Acceleration state
+///
+/// Alongside the weights the store may hold derived *acceleration*
+/// structures: a [`BcsrMatrix`] panel layout of S (built once at
+/// construction when [`BcsrMatrix::worth_building`]) and a small
+/// cut-keyed compaction cache filled on demand for hot mid-spectrum
+/// cuts. Both are recomputable from `sp` + `mag_rank`, never change
+/// results (bit-exactness pinned by tests), and are accounted in
+/// [`Self::accel_bytes`] — deliberately *not* in [`Self::bytes`],
+/// which gates resident weights (same treatment as the process-wide
+/// RoPE cache).
+#[derive(Debug)]
 pub struct FactorStore {
     n: usize,
     m: usize,
@@ -257,6 +694,86 @@ pub struct FactorStore {
     pub sp: CsrMatrix,
     /// Per-entry global magnitude rank (see struct docs).
     pub mag_rank: Vec<u32>,
+    /// Panel layout of S (`None` when occupancy doesn't pay — the
+    /// kernels then keep the CSR gather path).
+    pub bcsr: Option<BcsrMatrix>,
+    /// Cut-keyed residual compactions, built on second use of a
+    /// strict cut (see the `CompactionCache` docs below).
+    compaction: Mutex<CompactionCache>,
+}
+
+impl Clone for FactorStore {
+    /// Clones weights and the master panel layout; the compaction
+    /// cache is derived, per-store state and starts cold in the copy.
+    fn clone(&self) -> Self {
+        FactorStore {
+            n: self.n,
+            m: self.m,
+            u: self.u.clone(),
+            s: self.s.clone(),
+            v: self.v.clone(),
+            sp: self.sp.clone(),
+            mag_rank: self.mag_rank.clone(),
+            bcsr: self.bcsr.clone(),
+            compaction: Mutex::new(CompactionCache::default()),
+        }
+    }
+}
+
+/// Resident compactions kept per store — a handful of hot
+/// mid-spectrum cuts (a serving spectrum is a few fractions), FIFO
+/// evicted beyond that so adversarial cut churn cannot grow memory.
+const COMPACTION_CACHE_CAP: usize = 4;
+
+/// First-sighting memory: a cut only earns a compaction on its
+/// second use (one-shot cuts — random test probes, admission
+/// experiments — shouldn't cost an O(nnz) build), and the sightings
+/// list itself is bounded.
+const COMPACTION_PENDING_CAP: usize = 16;
+
+/// A cut-baked residual in whichever layout the occupancy rule picked
+/// for the *kept* entries (a cut can change the winner: a dense-ish
+/// master thinned to its top entries may drop below panel occupancy).
+#[derive(Clone, Debug)]
+enum CompactResidual {
+    /// Panel layout; evaluated full-cut (no rank compares).
+    Bcsr(Arc<BcsrMatrix>),
+    /// CSR gather layout.
+    Csr(Arc<CsrMatrix>),
+}
+
+impl CompactResidual {
+    fn spmm_t(&self, x: &Tensor) -> Tensor {
+        match self {
+            CompactResidual::Bcsr(b) => b.spmm_t(x),
+            CompactResidual::Csr(c) => c.spmm_t(x),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            CompactResidual::Bcsr(b) => b.bytes(),
+            CompactResidual::Csr(c) => c.bytes(),
+        }
+    }
+}
+
+/// Per-store cache of cut-baked residuals: a strict mid-spectrum cut
+/// evaluated through the master layout pays a rank compare per stored
+/// entry (O(nnz_master) scan); a compacted copy holds only the kept
+/// prefix, making hot cuts O(nnz_kept) with no compares. Compaction
+/// triggers on a cut's *second* use and capacity is bounded
+/// ([`COMPACTION_CACHE_CAP`]); everything here is derived state —
+/// dropping it changes speed, never results.
+#[derive(Debug, Default)]
+struct CompactionCache {
+    /// (cut, compacted residual), FIFO order.
+    entries: Vec<(usize, CompactResidual)>,
+    /// Cuts seen exactly once so far, FIFO order.
+    pending: Vec<usize>,
+    /// Serving-visible counters (tests assert the trigger policy).
+    hits: u64,
+    builds: u64,
 }
 
 impl FactorStore {
@@ -318,7 +835,24 @@ impl FactorStore {
         for (p, &e) in order.iter().enumerate() {
             mag_rank[e as usize] = (nnz - 1 - p) as u32;
         }
-        Ok(FactorStore { n, m, u, s, v, sp, mag_rank })
+        // Panel layout of the residual — built once here iff the
+        // occupancy rule says it pays (see the module docs).
+        let bcsr = if BcsrMatrix::worth_building(&sp) {
+            Some(BcsrMatrix::from_csr(&sp, &mag_rank))
+        } else {
+            None
+        };
+        Ok(FactorStore {
+            n,
+            m,
+            u,
+            s,
+            v,
+            sp,
+            mag_rank,
+            bcsr,
+            compaction: Mutex::new(CompactionCache::default()),
+        })
     }
 
     /// Output dimension (rows of Ŵ).
@@ -343,10 +877,109 @@ impl FactorStore {
 
     /// Resident bytes of the master store: f32 factors + CSR residual
     /// + the u32 magnitude ranks. Counted **once** no matter how many
-    /// views share the store.
+    /// views share the store. Acceleration structures are accounted
+    /// separately ([`Self::accel_bytes`]) — they are droppable caches,
+    /// not weights, and must not distort the spectrum-residency gates.
     pub fn bytes(&self) -> usize {
         slr_block_bytes(self.n, self.m, self.rank_max(), &self.sp)
             + self.mag_rank.len() * 4
+    }
+
+    /// Bytes of derived acceleration state: the master panel layout
+    /// (if built) plus every resident cut compaction. Bounded by
+    /// construction (compactions are capacity-capped) and surfaced in
+    /// serving stats next to the kernel path.
+    pub fn accel_bytes(&self) -> usize {
+        let mut total =
+            self.bcsr.as_ref().map_or(0, BcsrMatrix::bytes);
+        let cache = match self.compaction.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for (_, res) in &cache.entries {
+            total += res.bytes();
+        }
+        total
+    }
+
+    /// (resident compactions, cache hits, cache builds) — the
+    /// compaction cache's observable state, for tests and telemetry.
+    pub fn compaction_stats(&self) -> (usize, u64, u64) {
+        let cache = match self.compaction.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        (cache.entries.len(), cache.hits, cache.builds)
+    }
+
+    /// Materialize the top-`cut` residual as a standalone CSR plus
+    /// the kept entries' (master) magnitude ranks — which are exactly
+    /// `0..cut`, so the compacted matrix satisfies the same
+    /// rank-permutation invariant as a master build.
+    fn cut_csr(&self, cut: usize) -> (CsrMatrix, Vec<u32>) {
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut ranks = Vec::new();
+        indptr.push(0u32);
+        for i in 0..self.n {
+            let (lo, hi) = (self.sp.indptr[i] as usize,
+                            self.sp.indptr[i + 1] as usize);
+            for e in lo..hi {
+                if (self.mag_rank[e] as usize) < cut {
+                    indices.push(self.sp.indices[e]);
+                    values.push(self.sp.values[e]);
+                    ranks.push(self.mag_rank[e]);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        (CsrMatrix { n: self.n, m: self.m, indptr, indices, values },
+         ranks)
+    }
+
+    /// Cut-baked residual for a strict cut, if this cut has earned
+    /// one: a hit returns the resident compaction; the second
+    /// sighting of a cut builds one (layout re-chosen for the kept
+    /// prefix by the same occupancy rule as the master, FIFO-evicting
+    /// past [`COMPACTION_CACHE_CAP`]); a first sighting only records
+    /// the cut and returns `None` — the caller falls back to the
+    /// rank-filtered master scan. The build runs under the (store,
+    /// cut)-local lock: a few microseconds at block scale, once per
+    /// hot cut, and never on a path that calls back into the backend.
+    fn compacted_for(&self, cut: usize) -> Option<CompactResidual> {
+        let mut cache = match self.compaction.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some((_, res)) =
+            cache.entries.iter().find(|(c, _)| *c == cut)
+        {
+            cache.hits += 1;
+            return Some(res.clone());
+        }
+        if let Some(pos) = cache.pending.iter().position(|&c| c == cut)
+        {
+            cache.pending.remove(pos);
+            let (csr, ranks) = self.cut_csr(cut);
+            let res = if BcsrMatrix::worth_building(&csr) {
+                CompactResidual::Bcsr(
+                    Arc::new(BcsrMatrix::from_csr(&csr, &ranks)))
+            } else {
+                CompactResidual::Csr(Arc::new(csr))
+            };
+            if cache.entries.len() >= COMPACTION_CACHE_CAP {
+                cache.entries.remove(0);
+            }
+            cache.entries.push((cut, res.clone()));
+            cache.builds += 1;
+            return Some(res);
+        }
+        if cache.pending.len() >= COMPACTION_PENDING_CAP {
+            cache.pending.remove(0);
+        }
+        cache.pending.push(cut);
+        None
     }
 }
 
@@ -497,26 +1130,11 @@ impl FactoredLinear {
     /// `hpa::apply`-style materialized truncation always produced.
     pub fn materialize(&self) -> FactoredLinear {
         let st = &*self.store;
-        let (n, m, k) = (st.n, st.m, self.rank_k);
+        let k = self.rank_k;
         let (u, v) = self.prefix_factors();
         let s = st.s[..k].to_vec();
-        let mut indptr = Vec::with_capacity(n + 1);
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
-        indptr.push(0u32);
-        for i in 0..n {
-            let (lo, hi) = (st.sp.indptr[i] as usize,
-                            st.sp.indptr[i + 1] as usize);
-            for e in lo..hi {
-                if (st.mag_rank[e] as usize) < self.nnz_cut {
-                    indices.push(st.sp.indices[e]);
-                    values.push(st.sp.values[e]);
-                }
-            }
-            indptr.push(indices.len() as u32);
-        }
-        FactoredLinear::new(u, s, v,
-                            CsrMatrix { n, m, indptr, indices, values })
+        let (csr, _) = st.cut_csr(self.nnz_cut);
+        FactoredLinear::new(u, s, v, csr)
     }
 
     /// Y = X · Ŵ_viewᵀ for row-major X (t×m) → (t×n), evaluated as
@@ -526,8 +1144,9 @@ impl FactoredLinear {
     /// kernels — never a per-variant resident copy) and skipping S
     /// entries past the magnitude cut. Cost is
     /// O(t·k·(n+m) + t·nnz_master) against the dense path's
-    /// O(t·n·m) (the residual scans master entries and skips the
-    /// truncated tail — a predictable branch, no copies).
+    /// O(t·n·m) — and O(t·nnz_kept) on the residual once a hot strict
+    /// cut has a cached compaction (see [`Self::matmul_t`]'s residual
+    /// helper and the module's BCSR section).
     ///
     /// Bit-identical to evaluating [`Self::materialize`] — see the
     /// module-level contract.
@@ -603,14 +1222,38 @@ impl FactoredLinear {
     /// Y = X · S_cutᵀ over the magnitude-cut residual: per output
     /// element, kept entries accumulate in ascending-column CSR order
     /// with one rounding step each — [`CsrMatrix::spmm_t`] over the
-    /// materialized cut, without building it.
+    /// materialized cut, without building it. Every rung below
+    /// produces identical bits (module contract); the dispatch only
+    /// moves speed:
+    ///
+    /// - **full cut** → the master panel layout with no rank
+    ///   compares, or the CSR gather when no panels were built;
+    /// - **strict cut, hot** → a cut-baked compaction from the
+    ///   store's cache (O(nnz_kept), no compares);
+    /// - **strict cut, cold** → a rank-filtered scan of the master
+    ///   panels (or master CSR), recording the cut so its second use
+    ///   compacts.
     fn spmm_t_cut(&self, x: &Tensor) -> Tensor {
         let st = &*self.store;
         if self.nnz_cut >= st.nnz_max() {
-            return st.sp.spmm_t(x); // full residual: no rank checks
+            return match &st.bcsr {
+                Some(b) => b.spmm_t(x),
+                None => st.sp.spmm_t(x),
+            };
         }
         assert_eq!(x.ncols(), st.m);
         let t = x.nrows();
+        if self.nnz_cut == 0 {
+            // Empty residual: an all-zero product, bit-identical to
+            // accumulating no entries. Don't touch the cut cache.
+            return Tensor::zeros(&[t, st.n]);
+        }
+        if let Some(res) = st.compacted_for(self.nnz_cut) {
+            return res.spmm_t(x);
+        }
+        if let Some(b) = &st.bcsr {
+            return b.spmm_t_cut(x, self.nnz_cut);
+        }
         let cut = self.nnz_cut as u32;
         let mut out = Tensor::zeros(&[t, st.n]);
         for r in 0..t {
@@ -967,5 +1610,204 @@ mod tests {
         // Out-of-range cuts are rejected.
         assert!(FactoredLinear::view(store.clone(), 3, 0).is_err());
         assert!(FactoredLinear::view(store, 2, nnz + 1).is_err());
+    }
+
+    /// A store whose residual has the given density (no rank part —
+    /// the BCSR tests only care about the residual).
+    fn sparse_store(n: usize, m: usize, density: f64, rng: &mut Rng)
+                    -> FactorStore {
+        let sp = CsrMatrix::from_dense(
+            &random_sparse(n, m, density, rng), 0.0);
+        FactorStore::new(Tensor::zeros(&[n, 0]), Vec::new(),
+                         Tensor::zeros(&[m, 0]), sp).unwrap()
+    }
+
+    #[test]
+    fn bcsr_roundtrips_csr_both_layouts() {
+        prop::check("bcsr_roundtrip", 16, |rng| {
+            let n = prop::dim(rng, 1, 24);
+            // Odd widths so edge panels (c0 + 8 > m) are exercised.
+            let m = prop::dim(rng, 1, 27);
+            let density = [0.08, 0.3, 0.65][rng.next_below(3) as usize];
+            let st = sparse_store(n, m, density, rng);
+            let b = BcsrMatrix::from_csr(&st.sp, &st.mag_rank);
+            b.validate().unwrap();
+            assert_eq!(b.nnz(), st.sp.nnz());
+            let (back, ranks) = b.to_csr();
+            assert_eq!(back, st.sp, "layout {:?}", b.layout);
+            assert_eq!(ranks, st.mag_rank);
+            if st.sp.density() >= BCSR_DENSE_LAYOUT_MIN {
+                assert_eq!(b.layout, BcsrLayout::DensePanels);
+            }
+        });
+    }
+
+    /// The BCSR kernel must be bit-identical to CSR `spmm_t` over the
+    /// materialized cut at every cut, both layouts, including the 0
+    /// and full edges and widths with edge panels.
+    #[test]
+    fn bcsr_spmm_bit_identical_to_csr_at_random_cuts() {
+        prop::check("bcsr_spmm_bit_exact", 20, |rng| {
+            let n = prop::dim(rng, 1, 20);
+            let m = prop::dim(rng, 1, 27);
+            let density = [0.15, 0.4, 0.7][rng.next_below(3) as usize];
+            let st = sparse_store(n, m, density, rng);
+            let b = BcsrMatrix::from_csr(&st.sp, &st.mag_rank);
+            let nnz = st.sp.nnz();
+            let t = prop::dim(rng, 1, 5);
+            let x = Tensor::randn(&[t, m], rng, 1.0);
+            let cuts = [0, nnz,
+                        rng.next_below(nnz as u64 + 1) as usize];
+            for cut in cuts {
+                let (cut_csr, _) = st.cut_csr(cut);
+                let want = cut_csr.spmm_t(&x);
+                let got = b.spmm_t_cut(&x, cut);
+                for (a, w) in got.data.iter().zip(&want.data) {
+                    assert_eq!(a.to_bits(), w.to_bits(),
+                               "{n}x{m} d{density} cut {cut}: BCSR \
+                                diverged from CSR ({a} vs {w})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bcsr_build_policy_follows_occupancy() {
+        let mut rng = Rng::new(21);
+        // Empty residual: nothing to accelerate.
+        let empty = CsrMatrix::from_dense(&Tensor::zeros(&[8, 16]), 0.0);
+        assert!(!BcsrMatrix::worth_building(&empty));
+        // A diagonal occupies 1 of 8 lanes per touched panel — below
+        // the floor, so the store keeps the gather path.
+        let mut diag = Tensor::zeros(&[16, 16]);
+        for i in 0..16 {
+            diag.set2(i, i, 1.0 + i as f32);
+        }
+        let dcsr = CsrMatrix::from_dense(&diag, 0.0);
+        assert!(!BcsrMatrix::worth_building(&dcsr));
+        let dst = FactorStore::new(Tensor::zeros(&[16, 0]), Vec::new(),
+                                   Tensor::zeros(&[16, 0]), dcsr)
+            .unwrap();
+        assert!(dst.bcsr.is_none());
+        assert_eq!(dst.accel_bytes(), 0);
+        // A dense-ish residual builds dense panels, and the
+        // acceleration bytes are reported but kept out of the
+        // resident-weight accounting.
+        let dense = sparse_store(16, 16, 0.7, &mut rng);
+        let b = dense.bcsr.as_ref().expect("dense store builds panels");
+        assert_eq!(b.layout, BcsrLayout::DensePanels);
+        assert_eq!(dense.accel_bytes(), b.bytes());
+        assert_eq!(dense.bytes(),
+                   slr_block_bytes(16, 16, 0, &dense.sp)
+                       + 4 * dense.sp.nnz());
+    }
+
+    /// Compaction policy: first use of a strict cut only records it,
+    /// the second builds a cut-baked residual, later uses hit the
+    /// cache — and capacity stays bounded under cut churn. Results
+    /// are bit-identical before and after compaction.
+    #[test]
+    fn compaction_cache_builds_on_second_use_and_stays_bounded() {
+        let mut rng = Rng::new(22);
+        let st = Arc::new(sparse_store(14, 22, 0.45, &mut rng));
+        let nnz = st.nnz_max();
+        assert!(nnz > COMPACTION_CACHE_CAP + 2, "premise: enough cuts");
+        let cut = nnz / 2;
+        let view = FactoredLinear::view(st.clone(), 0, cut).unwrap();
+        let x = Tensor::randn(&[3, 22], &mut rng, 1.0);
+        let cold = view.matmul_t(&x);
+        assert_eq!(st.compaction_stats(), (0, 0, 0),
+                   "first use must not build");
+        let warm = view.matmul_t(&x);
+        assert_eq!(st.compaction_stats(), (1, 0, 1),
+                   "second use must compact");
+        let hot = view.matmul_t(&x);
+        assert_eq!(st.compaction_stats(), (1, 1, 1),
+                   "third use must hit");
+        let want = view.matmul_t_materialized(&x);
+        for out in [&cold, &warm, &hot] {
+            for (a, w) in out.data.iter().zip(&want.data) {
+                assert_eq!(a.to_bits(), w.to_bits(),
+                           "compaction changed results");
+            }
+        }
+        // Full and zero cuts never touch the cache.
+        FactoredLinear::view(st.clone(), 0, nnz).unwrap()
+            .matmul_t(&x);
+        FactoredLinear::view(st.clone(), 0, 0).unwrap().matmul_t(&x);
+        assert_eq!(st.compaction_stats().0, 1);
+        // Churn 2·CAP distinct cuts twice each: capacity stays capped
+        // and every answer stays bit-exact.
+        for c in 1..=2 * COMPACTION_CACHE_CAP {
+            let v = FactoredLinear::view(st.clone(), 0, c).unwrap();
+            let a = v.matmul_t(&x);
+            let b = v.matmul_t(&x);
+            let w = v.matmul_t_materialized(&x);
+            for (g, ww) in a.data.iter().chain(&b.data)
+                .zip(w.data.iter().chain(&w.data))
+            {
+                assert_eq!(g.to_bits(), ww.to_bits());
+            }
+        }
+        let (resident, _, builds) = st.compaction_stats();
+        assert!(resident <= COMPACTION_CACHE_CAP,
+                "{resident} compactions resident, cap is \
+                 {COMPACTION_CACHE_CAP}");
+        assert!(builds >= COMPACTION_CACHE_CAP as u64);
+    }
+
+    /// The whole-view equivalence property at densities where the
+    /// panel layout (incl. dense panels) is actually active — the
+    /// dense-residual analog of
+    /// `view_matmul_is_bit_identical_to_materialized`.
+    #[test]
+    fn dense_residual_view_is_bit_identical_to_materialized() {
+        prop::check("bcsr_view_bit_exact", 12, |rng| {
+            let n = prop::dim(rng, 2, 20);
+            let m = prop::dim(rng, 2, 21);
+            let r = prop::dim(rng, 1, n.min(m));
+            let u = Tensor::randn(&[n, r], rng, 0.3);
+            let s: Vec<f32> =
+                (0..r).map(|k| (r - k) as f32 * 0.1).collect();
+            let v = Tensor::randn(&[m, r], rng, 0.3);
+            let sp = CsrMatrix::from_dense(
+                &random_sparse(n, m, 0.6, rng), 0.0);
+            let full = FactoredLinear::new(u, s, v, sp);
+            let store = full.store().clone();
+            let rank_k = rng.next_below(r as u64 + 1) as usize;
+            let nnz_cut =
+                rng.next_below(store.nnz_max() as u64 + 1) as usize;
+            let view =
+                FactoredLinear::view(store, rank_k, nnz_cut).unwrap();
+            let t = prop::dim(rng, 1, 2 * PREFIX_COPY_ROWS);
+            let x = Tensor::randn(&[t, m], rng, 1.0);
+            let want = view.matmul_t_materialized(&x);
+            // Twice: the second pass runs over the compacted cut.
+            for pass in 0..2 {
+                let got = view.matmul_t(&x);
+                for (a, b) in got.data.iter().zip(&want.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "pass {pass}: {n}x{m} r{r} k{rank_k} \
+                                q{nnz_cut} diverged");
+                }
+            }
+        });
+    }
+
+    /// The debug-build structural self-check at the kernel seam: a
+    /// corrupt view must fail loudly instead of reading out of
+    /// bounds.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "spmm_t over an invalid CSR")]
+    fn corrupt_csr_is_caught_at_kernel_entry() {
+        let mut rng = Rng::new(23);
+        let mut csr = CsrMatrix::from_dense(
+            &random_sparse(6, 8, 0.5, &mut rng), 0.0);
+        assert!(csr.nnz() >= 2, "premise: entries to corrupt");
+        // Swap two column indices in row 0: breaks ascending order.
+        csr.indices.swap(0, 1);
+        let x = Tensor::randn(&[2, 8], &mut rng, 1.0);
+        let _ = csr.spmm_t(&x);
     }
 }
