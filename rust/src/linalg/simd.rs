@@ -49,8 +49,12 @@
 //! pointers. The unsafe surface is the `x86` submodule plus the one
 //! `unsafe { x86::… }` call site inside each safe wrapper below —
 //! every such call is gated on `is_x86_feature_detected!` (falling
-//! back to the scalar oracle otherwise), so no unsafe precondition
-//! escapes this file.
+//! back to the scalar oracle otherwise), and every slice-length
+//! precondition of an unsafe body is enforced by a release-mode
+//! `assert!` at the top of its safe wrapper (the scalar oracles panic
+//! on the same inputs via bounds checks, so the wrappers never trade
+//! a safe panic for an out-of-bounds vector load). No unsafe
+//! precondition escapes this file.
 
 use std::sync::OnceLock;
 
@@ -148,7 +152,13 @@ fn fma_detected() -> bool {
 // Safe dispatch wrappers. Each re-checks detection (a cached atomic
 // load inside `is_x86_feature_detected!`) before entering the
 // `#[target_feature]` body, so they are sound to call on any CPU and
-// on non-x86 targets they compile down to the scalar oracle.
+// on non-x86 targets they compile down to the scalar oracle. Each
+// also asserts its unsafe body's slice-length precondition in ALL
+// build profiles — the scalar oracles panic via bounds checks on the
+// same inputs, so without the assert a release-mode AVX2 call with a
+// too-short slice would turn that safe panic into an out-of-bounds
+// `loadu` (UB reachable from safe code). One branch per kernel call,
+// negligible next to the loop it guards.
 // ---------------------------------------------------------------------
 
 /// AVX2 [`dot8`](super::dot8): bit-identical to the scalar contract
@@ -156,9 +166,11 @@ fn fma_detected() -> bool {
 #[inline]
 #[allow(unsafe_code)]
 pub fn dot8_avx2(a: &[f32], b: &[f32]) -> f32 {
+    assert!(b.len() >= a.len(),
+            "dot8: b has {} elements, a has {}", b.len(), a.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() {
-        // SAFETY: AVX2 support was just detected on this CPU.
+        // SAFETY: AVX2 detected; `b.len() >= a.len()` just asserted.
         return unsafe { x86::dot8_avx2(a, b) };
     }
     super::matmul::dot8_scalar(a, b)
@@ -169,9 +181,12 @@ pub fn dot8_avx2(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 #[allow(unsafe_code)]
 pub fn dot8_fma(a: &[f32], b: &[f32]) -> f32 {
+    assert!(b.len() >= a.len(),
+            "dot8: b has {} elements, a has {}", b.len(), a.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() && fma_detected() {
-        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        // SAFETY: AVX2 + FMA detected; `b.len() >= a.len()` just
+        // asserted.
         return unsafe { x86::dot8_fma(a, b) };
     }
     super::matmul::dot8_scalar(a, b)
@@ -183,9 +198,13 @@ pub fn dot8_fma(a: &[f32], b: &[f32]) -> f32 {
 #[allow(unsafe_code)]
 pub(crate) fn dot8x2_avx2(a0: &[f32], a1: &[f32], b: &[f32])
                           -> (f32, f32) {
+    assert!(a0.len() >= b.len() && a1.len() >= b.len(),
+            "dot8x2: a0/a1 have {}/{} elements, b has {}",
+            a0.len(), a1.len(), b.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() {
-        // SAFETY: AVX2 support was just detected on this CPU.
+        // SAFETY: AVX2 detected; both `a` rows just asserted at
+        // least `b.len()` long.
         return unsafe { x86::dot8x2_avx2(a0, a1, b) };
     }
     super::matmul::dot8x2_scalar(a0, a1, b)
@@ -196,9 +215,13 @@ pub(crate) fn dot8x2_avx2(a0: &[f32], a1: &[f32], b: &[f32])
 #[allow(unsafe_code)]
 pub(crate) fn dot8x2_fma(a0: &[f32], a1: &[f32], b: &[f32])
                          -> (f32, f32) {
+    assert!(a0.len() >= b.len() && a1.len() >= b.len(),
+            "dot8x2: a0/a1 have {}/{} elements, b has {}",
+            a0.len(), a1.len(), b.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() && fma_detected() {
-        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        // SAFETY: AVX2 + FMA detected; both `a` rows just asserted
+        // at least `b.len()` long.
         return unsafe { x86::dot8x2_fma(a0, a1, b) };
     }
     super::matmul::dot8x2_scalar(a0, a1, b)
@@ -208,9 +231,13 @@ pub(crate) fn dot8x2_fma(a0: &[f32], a1: &[f32], b: &[f32])
 #[inline]
 #[allow(unsafe_code)]
 pub fn axpy8_avx2(dst: &mut [f32], src: &[f32], a: f32) {
+    assert!(src.len() >= dst.len(),
+            "axpy8: src has {} elements, dst has {}",
+            src.len(), dst.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() {
-        // SAFETY: AVX2 support was just detected on this CPU.
+        // SAFETY: AVX2 detected; `src.len() >= dst.len()` just
+        // asserted.
         unsafe { x86::axpy8_avx2(dst, src, a) };
         return;
     }
@@ -221,9 +248,13 @@ pub fn axpy8_avx2(dst: &mut [f32], src: &[f32], a: f32) {
 #[inline]
 #[allow(unsafe_code)]
 pub fn axpy8_fma(dst: &mut [f32], src: &[f32], a: f32) {
+    assert!(src.len() >= dst.len(),
+            "axpy8: src has {} elements, dst has {}",
+            src.len(), dst.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() && fma_detected() {
-        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        // SAFETY: AVX2 + FMA detected; `src.len() >= dst.len()`
+        // just asserted.
         unsafe { x86::axpy8_fma(dst, src, a) };
         return;
     }
@@ -237,9 +268,13 @@ pub fn axpy8_fma(dst: &mut [f32], src: &[f32], a: f32) {
 #[allow(unsafe_code)]
 pub(crate) fn axpy8x4_avx2(dst: &mut [f32], b: [&[f32]; 4],
                            a: [f32; 4]) {
+    assert!(b.iter().all(|s| s.len() >= dst.len()),
+            "axpy8x4: b rows {:?} shorter than dst ({})",
+            b.map(<[f32]>::len), dst.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() {
-        // SAFETY: AVX2 support was just detected on this CPU.
+        // SAFETY: AVX2 detected; every `b` row just asserted at
+        // least `dst.len()` long.
         unsafe { x86::axpy8x4_avx2(dst, b, a) };
         return;
     }
@@ -251,9 +286,13 @@ pub(crate) fn axpy8x4_avx2(dst: &mut [f32], b: [&[f32]; 4],
 #[allow(unsafe_code)]
 pub(crate) fn axpy8x4_fma(dst: &mut [f32], b: [&[f32]; 4],
                           a: [f32; 4]) {
+    assert!(b.iter().all(|s| s.len() >= dst.len()),
+            "axpy8x4: b rows {:?} shorter than dst ({})",
+            b.map(<[f32]>::len), dst.len());
     #[cfg(target_arch = "x86_64")]
     if avx2_detected() && fma_detected() {
-        // SAFETY: AVX2 + FMA support was just detected on this CPU.
+        // SAFETY: AVX2 + FMA detected; every `b` row just asserted
+        // at least `dst.len()` long.
         unsafe { x86::axpy8x4_fma(dst, b, a) };
         return;
     }
@@ -269,10 +308,12 @@ pub(crate) fn axpy8x4_fma(dst: &mut [f32], b: [&[f32]; 4],
 #[inline]
 #[allow(unsafe_code)]
 pub fn mul8(v: &[f32], x: &[f32]) -> [f32; 8] {
-    debug_assert!(v.len() >= 8 && x.len() >= 8);
+    assert!(v.len() >= 8 && x.len() >= 8,
+            "mul8: v/x have {}/{} elements, need 8",
+            v.len(), x.len());
     #[cfg(target_arch = "x86_64")]
     if level() != SimdLevel::Scalar && avx2_detected() {
-        // SAFETY: AVX2 support was just detected on this CPU.
+        // SAFETY: AVX2 detected; both slices just asserted ≥ 8 long.
         return unsafe { x86::mul8_avx2(v, x) };
     }
     mul8_scalar(v, x)
@@ -425,7 +466,8 @@ mod x86 {
     /// AVX2 axpy8 body.
     ///
     /// # Safety
-    /// Requires AVX2; `src.len() == dst.len()`.
+    /// Requires AVX2; `src.len() >= dst.len()` (equal in practice —
+    /// debug-asserted like the scalar oracle).
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy8_avx2(dst: &mut [f32], src: &[f32], a: f32) {
         debug_assert_eq!(dst.len(), src.len());
@@ -685,6 +727,44 @@ mod tests {
             assert!((got - want).abs() <= 1e-5 * scale,
                     "len {len}: fma {got} vs scalar {want}");
         }
+    }
+
+    /// The safe wrappers enforce the unsafe bodies' slice-length
+    /// preconditions in every build profile (the scalar oracles
+    /// panic on the same inputs via bounds checks) — a too-short
+    /// slice must be a panic, never an out-of-bounds vector load.
+    #[test]
+    #[should_panic(expected = "dot8: b has")]
+    fn dot8_avx2_panics_on_short_b() {
+        dot8_avx2(&[1.0; 16], &[1.0; 15]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dot8x2: a0/a1 have")]
+    fn dot8x2_avx2_panics_on_short_a() {
+        dot8x2_avx2(&[1.0; 16], &[1.0; 7], &[1.0; 16]);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy8: src has")]
+    fn axpy8_avx2_panics_on_short_src() {
+        axpy8_avx2(&mut [0.0; 16], &[1.0; 15], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy8x4: b rows")]
+    fn axpy8x4_avx2_panics_on_short_b_row() {
+        let b = [1.0f32; 16];
+        let short = [1.0f32; 9];
+        axpy8x4_avx2(&mut [0.0; 16],
+                     [&b, &b, &short, &b],
+                     [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mul8: v/x have")]
+    fn mul8_panics_on_short_slices() {
+        mul8(&[1.0; 7], &[1.0; 8]);
     }
 
     /// Selection policy table from the module docs. Pure function —

@@ -721,8 +721,9 @@ impl Clone for FactorStore {
 }
 
 /// Resident compactions kept per store — a handful of hot
-/// mid-spectrum cuts (a serving spectrum is a few fractions), FIFO
-/// evicted beyond that so adversarial cut churn cannot grow memory.
+/// mid-spectrum cuts (a serving spectrum is a few fractions), LRU
+/// evicted beyond that so adversarial cut churn cannot grow memory
+/// yet never displaces a cut that keeps hitting.
 const COMPACTION_CACHE_CAP: usize = 4;
 
 /// First-sighting memory: a cut only earns a compaction on its
@@ -762,18 +763,33 @@ impl CompactResidual {
 /// evaluated through the master layout pays a rank compare per stored
 /// entry (O(nnz_master) scan); a compacted copy holds only the kept
 /// prefix, making hot cuts O(nnz_kept) with no compares. Compaction
-/// triggers on a cut's *second* use and capacity is bounded
-/// ([`COMPACTION_CACHE_CAP`]); everything here is derived state —
-/// dropping it changes speed, never results.
+/// triggers on a cut's *second* use, capacity is bounded
+/// ([`COMPACTION_CACHE_CAP`]) with LRU eviction (hits refresh
+/// position, so a persistently hot cut survives arbitrary churn of
+/// other cuts); everything here is derived state — dropping it
+/// changes speed, never results.
 #[derive(Debug, Default)]
 struct CompactionCache {
-    /// (cut, compacted residual), FIFO order.
+    /// (cut, compacted residual), least-recently-used first.
     entries: Vec<(usize, CompactResidual)>,
     /// Cuts seen exactly once so far, FIFO order.
     pending: Vec<usize>,
     /// Serving-visible counters (tests assert the trigger policy).
     hits: u64,
     builds: u64,
+}
+
+impl CompactionCache {
+    /// Resident compaction for `cut`, refreshing its LRU position
+    /// (moved to the back of `entries` = most recently used). Does
+    /// not bump `hits` — callers decide what counts as one.
+    fn touch(&mut self, cut: usize) -> Option<CompactResidual> {
+        let pos = self.entries.iter().position(|(c, _)| *c == cut)?;
+        let entry = self.entries.remove(pos);
+        let res = entry.1.clone();
+        self.entries.push(entry);
+        Some(res)
+    }
 }
 
 impl FactorStore {
@@ -939,47 +955,71 @@ impl FactorStore {
     }
 
     /// Cut-baked residual for a strict cut, if this cut has earned
-    /// one: a hit returns the resident compaction; the second
-    /// sighting of a cut builds one (layout re-chosen for the kept
-    /// prefix by the same occupancy rule as the master, FIFO-evicting
-    /// past [`COMPACTION_CACHE_CAP`]); a first sighting only records
-    /// the cut and returns `None` — the caller falls back to the
-    /// rank-filtered master scan. The build runs under the (store,
-    /// cut)-local lock: a few microseconds at block scale, once per
-    /// hot cut, and never on a path that calls back into the backend.
+    /// one: a hit returns the resident compaction and refreshes its
+    /// LRU position (so sustained-hot cuts are never evicted by cut
+    /// churn); the second sighting of a cut builds one (layout
+    /// re-chosen for the kept prefix by the same occupancy rule as
+    /// the master, evicting the least-recently-used entry past
+    /// [`COMPACTION_CACHE_CAP`]); a first sighting only records the
+    /// cut and returns `None` — the caller falls back to the
+    /// rank-filtered master scan.
+    ///
+    /// Locking: the per-store mutex guards only O(1) bookkeeping —
+    /// the O(nnz) `cut_csr` + BCSR build runs *outside* it, so
+    /// concurrent decode threads sharing the store never serialize
+    /// behind a build (their hits stay microsecond-scale). A build
+    /// races only against the same cut being built by another thread,
+    /// in which case the loser discards its copy and adopts the
+    /// resident one — derived state, so dropping a duplicate changes
+    /// nothing.
     fn compacted_for(&self, cut: usize) -> Option<CompactResidual> {
+        {
+            let mut cache = match self.compaction.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if let Some(res) = cache.touch(cut) {
+                cache.hits += 1;
+                return Some(res);
+            }
+            match cache.pending.iter().position(|&c| c == cut) {
+                Some(pos) => {
+                    // Second sighting: earned a build. Drop the lock
+                    // before doing the O(nnz) work below.
+                    cache.pending.remove(pos);
+                }
+                None => {
+                    if cache.pending.len() >= COMPACTION_PENDING_CAP {
+                        cache.pending.remove(0);
+                    }
+                    cache.pending.push(cut);
+                    return None;
+                }
+            }
+        }
+        let (csr, ranks) = self.cut_csr(cut);
+        let res = if BcsrMatrix::worth_building(&csr) {
+            CompactResidual::Bcsr(
+                Arc::new(BcsrMatrix::from_csr(&csr, &ranks)))
+        } else {
+            CompactResidual::Csr(Arc::new(csr))
+        };
         let mut cache = match self.compaction.lock() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
         };
-        if let Some((_, res)) =
-            cache.entries.iter().find(|(c, _)| *c == cut)
-        {
+        if let Some(existing) = cache.touch(cut) {
+            // Another thread finished the same build while we held no
+            // lock — keep the resident compaction, discard ours.
             cache.hits += 1;
-            return Some(res.clone());
+            return Some(existing);
         }
-        if let Some(pos) = cache.pending.iter().position(|&c| c == cut)
-        {
-            cache.pending.remove(pos);
-            let (csr, ranks) = self.cut_csr(cut);
-            let res = if BcsrMatrix::worth_building(&csr) {
-                CompactResidual::Bcsr(
-                    Arc::new(BcsrMatrix::from_csr(&csr, &ranks)))
-            } else {
-                CompactResidual::Csr(Arc::new(csr))
-            };
-            if cache.entries.len() >= COMPACTION_CACHE_CAP {
-                cache.entries.remove(0);
-            }
-            cache.entries.push((cut, res.clone()));
-            cache.builds += 1;
-            return Some(res);
+        if cache.entries.len() >= COMPACTION_CACHE_CAP {
+            cache.entries.remove(0);
         }
-        if cache.pending.len() >= COMPACTION_PENDING_CAP {
-            cache.pending.remove(0);
-        }
-        cache.pending.push(cut);
-        None
+        cache.entries.push((cut, res.clone()));
+        cache.builds += 1;
+        Some(res)
     }
 }
 
@@ -1754,6 +1794,40 @@ mod tests {
                 "{resident} compactions resident, cap is \
                  {COMPACTION_CACHE_CAP}");
         assert!(builds >= COMPACTION_CACHE_CAP as u64);
+    }
+
+    /// Eviction is LRU, not FIFO: a persistently hot cut that keeps
+    /// hitting while 2·CAP other cuts churn through the cache must
+    /// never be evicted — under FIFO it would be displaced by newer
+    /// builds and rebuilt on its next two uses, thrashing O(nnz)
+    /// builds indefinitely.
+    #[test]
+    fn compaction_cache_keeps_hot_cut_resident_under_churn() {
+        let mut rng = Rng::new(33);
+        let st = Arc::new(sparse_store(14, 22, 0.45, &mut rng));
+        let nnz = st.nnz_max();
+        assert!(nnz > 2 * COMPACTION_CACHE_CAP + 2,
+                "premise: enough distinct strict cuts");
+        let x = Tensor::randn(&[3, 22], &mut rng, 1.0);
+        let hot = FactoredLinear::view(st.clone(), 0, nnz - 1).unwrap();
+        hot.matmul_t(&x); // first sighting
+        hot.matmul_t(&x); // second use compacts
+        assert_eq!(st.compaction_stats(), (1, 0, 1));
+        // Churn 2·CAP cold cuts to a build each, touching the hot cut
+        // between builds so its LRU position keeps refreshing.
+        for c in 1..=2 * COMPACTION_CACHE_CAP {
+            let v = FactoredLinear::view(st.clone(), 0, c).unwrap();
+            v.matmul_t(&x); // sighting
+            v.matmul_t(&x); // build — evicts the LRU entry, which is
+                            // always a cold cut, never the hot one
+            hot.matmul_t(&x);
+        }
+        let (resident, hits, builds) = st.compaction_stats();
+        assert!(resident <= COMPACTION_CACHE_CAP);
+        assert_eq!(builds, 1 + 2 * COMPACTION_CACHE_CAP as u64,
+                   "hot cut was evicted and rebuilt");
+        assert_eq!(hits, 2 * COMPACTION_CACHE_CAP as u64,
+                   "every hot use after compaction must hit");
     }
 
     /// The whole-view equivalence property at densities where the
